@@ -1,0 +1,84 @@
+"""Shared benchmark harness: train a small model once, evaluate PTQ variants.
+
+The paper evaluates on Llama-2-7B + WikiText-2; this container is CPU-only
+and offline, so the reproduction target is a small dense llama-family
+model trained to convergence on the structured synthetic stream, PPL
+measured on held-out batches, and top-1 next-token accuracy as the
+zero-shot-task proxy.  What must reproduce is the paper's *orderings*
+(GSR < LH < GW < GH in PPL; learned methods improved by GSR init), not
+the absolute Llama-2 numbers.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data import SyntheticLM
+from repro.data.synthetic import make_batch_for
+from repro.models.registry import build_arch
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.train_step import make_eval_step, make_train_step
+
+BENCH_CONFIG = ModelConfig(
+    name="bench-llama",
+    family="dense",
+    n_layers=4,
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=256,
+    vocab=512,
+)
+SEQ = 64
+GROUP = 32  # quantization group == GSR block size at bench scale
+CKPT = "results/bench_model.npz"
+
+
+def get_trained_model(steps: int = 400, seed: int = 0, quiet: bool = False):
+    """Train (or load cached) the benchmark model. Returns (arch, params)."""
+    arch = build_arch(BENCH_CONFIG)
+    params = arch.init(jax.random.PRNGKey(seed), jnp.float32)
+    if os.path.exists(CKPT):
+        data = np.load(CKPT)
+        leaves, treedef = jax.tree.flatten(params)
+        loaded = [jnp.asarray(data[str(i)]) for i in range(len(leaves))]
+        if all(a.shape == b.shape for a, b in zip(loaded, leaves)):
+            return arch, jax.tree.unflatten(treedef, loaded)
+    opt = OptConfig(lr=1e-2, warmup_steps=20, total_steps=steps)
+    step = jax.jit(make_train_step(arch, opt))
+    state = init_opt_state(params, opt)
+    stream = SyntheticLM(BENCH_CONFIG.vocab, SEQ, seed=1)
+    for i in range(steps):
+        batch = {"tokens": jnp.asarray(stream.batch(i, 0, 16))}
+        params, state, _, m = step(params, state, {}, batch)
+        if not quiet and i % 100 == 0:
+            print(f"  [bench-train] step {i} loss {float(m['loss']):.3f}")
+    os.makedirs("results", exist_ok=True)
+    leaves, _ = jax.tree.flatten(params)
+    np.savez(CKPT, **{str(i): np.asarray(x) for i, x in enumerate(leaves)})
+    return arch, params
+
+
+def evaluate(arch, params, spec, n_batches: int = 8) -> Dict[str, float]:
+    """Held-out PPL + top-1 next-token accuracy (the 0-shot proxy).
+
+    Same generative process (seed=1 transition structure) as training,
+    evaluated on batch indices the training loop never reaches - i.e. a
+    held-out *sample*, not a different language.
+    """
+    ev = jax.jit(make_eval_step(arch, spec))
+    stream = SyntheticLM(arch.config.vocab, SEQ, seed=1)  # same process
+    nll, acc = 0.0, 0.0
+    for i in range(n_batches):
+        batch = {"tokens": jnp.asarray(stream.batch(100_000 + i, 0, 16))}
+        m = ev(params, batch)
+        nll += float(m["nll"])
+        acc += float(m["top1"])
+    nll /= n_batches
+    acc /= n_batches
+    return {"ppl": float(np.exp(nll)), "nll": nll, "top1": 100 * acc}

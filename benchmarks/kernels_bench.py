@@ -1,0 +1,87 @@
+"""Kernel microbenchmarks: wall time of the jit'd reference paths (this
+container is CPU - Pallas interpret timings are not meaningful) plus the
+derived per-call HBM bytes and FLOPs that set the TPU roofline for each
+kernel.  The Pallas kernels themselves are correctness-validated in
+tests/test_kernels.py against these references.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hadamard import walsh
+from repro.kernels import ref
+from repro.quant import pack, rtn
+from repro.quant.qtypes import QuantConfig
+
+M, D, G = 512, 4096, 128
+
+
+def timeit(fn, *args, iters: int = 10) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run(quiet: bool = False):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(M, D)).astype(np.float32))
+    rows = []
+
+    f_fwht = jax.jit(lambda a: ref.fwht_ref(a))
+    us = timeit(f_fwht, x)
+    rows.append({"name": "fwht_ref", "us": us,
+                 "hbm_bytes": 2 * M * D * 4,
+                 "flops": M * D * int(np.log2(D))})
+
+    blocks = jnp.asarray(walsh(G), jnp.float32)[None]
+    f_rot = jax.jit(lambda a: ref.grouped_rotate_ref(a, blocks))
+    us = timeit(f_rot, x)
+    rows.append({"name": "grouped_rotate_ref(GSR)", "us": us,
+                 "hbm_bytes": 2 * M * D * 4 + G * G * 4,
+                 "flops": 2 * M * D * G})
+
+    cfg = QuantConfig(bits=4, group=G, symmetric=False)
+    w = jnp.asarray(rng.normal(size=(D, 1024)).astype(np.float32))
+    qt = pack.pack(rtn.quantize_weight_grouped(w, cfg))
+    f_dq = jax.jit(lambda a: ref.dequant_matmul_ref(a, qt))
+    us = timeit(f_dq, x)
+    packed_bytes = D // 2 * 1024 + 2 * (D // G) * 1024 * 4
+    rows.append({"name": "dequant_matmul_ref(W4)", "us": us,
+                 "hbm_bytes": M * D * 4 + packed_bytes + M * 1024 * 4,
+                 "flops": 2 * M * D * 1024,
+                 "bf16_weight_bytes": D * 1024 * 2, "packed_weight_bytes": packed_bytes})
+
+    f_q = jax.jit(lambda a: ref.rtn_fake_quant_ref(a, bits=4, group=G))
+    us = timeit(f_q, x)
+    rows.append({"name": "rtn_fake_quant_ref(A4)", "us": us,
+                 "hbm_bytes": 2 * M * D * 4, "flops": 4 * M * D})
+
+    if not quiet:
+        for r in rows:
+            ai = r["flops"] / r["hbm_bytes"]
+            print(f"{r['name']:28s} {r['us']:10.1f} us/call  "
+                  f"bytes/call={r['hbm_bytes']:.2e}  arith-intensity={ai:.2f}")
+    os.makedirs("results", exist_ok=True)
+    with open("results/kernels_bench.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"kernel/{r['name']},{r['us']:.1f},bytes={r['hbm_bytes']:.3e}")
+
+
+if __name__ == "__main__":
+    main()

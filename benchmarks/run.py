@@ -1,0 +1,63 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark driver: every paper table/figure + framework microbenches.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Order: cheap theory checks first, then kernel microbench, then the
+end-to-end PTQ tables on the trained bench model (slowest).  Each suite
+also writes results/<suite>.json.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    t0 = time.time()
+
+    print("# === sequency_analysis (paper Sec 2.1/3.2) ===")
+    from benchmarks import sequency_analysis
+
+    for r in sequency_analysis.run(quiet=True):
+        print(f"sequency/dim{r['dim']}/g{r['group']},0,"
+              f"varH={r['var_hadamard']:.1f};varRHT={r['var_rht']:.1f};"
+              f"varW={r['var_walsh']:.1f}")
+
+    print("# === quant_error (paper Sec 3.2 / Obs #1) ===")
+    from benchmarks import quant_error
+
+    for r in quant_error.run(quiet=True):
+        vals = ";".join(f"{k}={r[k]:.5f}" for k in ("I", "GH", "GW", "LH", "GSR"))
+        print(f"quant_error/{r['weights']}/W{r['bits']},0,{vals}")
+
+    print("# === kernels (deployment hot spots) ===")
+    from benchmarks import kernels_bench
+
+    for r in kernels_bench.run(quiet=True):
+        print(f"kernel/{r['name']},{r['us']:.1f},bytes={r['hbm_bytes']:.3e}")
+
+    if not fast:
+        print("# === table1 (paper Table 1) ===")
+        from benchmarks import table1
+
+        rows1 = table1.run(quiet=True)
+        for r in rows1:
+            print(f"table1/{r['method']}/{r['bits']}/{r['r1']},"
+                  f"{r.get('quant_s', 0)},ppl={r['ppl']:.3f};top1={r['top1']:.2f}")
+        ok, n = table1._verdict(rows1, quiet=True)
+        print(f"table1/ordering_checks,0,{ok}/{n} hold")
+
+        print("# === table2 (paper Table 2 / A.2) ===")
+        from benchmarks import table2
+
+        for r in table2.run(quiet=True):
+            print(f"table2/R1={r['r1']}/R4={r['r4']},0,"
+                  f"ppl_w2={r['ppl_w2']:.3f};ppl_w2a4={r['ppl_w2a4']:.3f}")
+
+    print(f"# total {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

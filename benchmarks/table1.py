@@ -1,0 +1,82 @@
+"""Paper Table 1: {QuaRot, SpinQuant-lite, OSTQuant-lite} x {GH, GW, LH, GSR}
+x {W2A16, W2A4} -> PPL + 0-shot proxy accuracy.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = "ppl=..;top1=..")
+and a verdict on the paper's claimed orderings.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks.common import GROUP, evaluate, get_trained_model
+from repro.models.common import NOQUANT
+from repro.quant.pipeline import PTQConfig, quantize_model
+
+ROTS = ["GH", "GW", "LH", "GSR"]
+METHODS = [
+    ("quarot", "gptq", "none"),
+    ("spinquant-lite", "gptq", "rotation"),
+    ("ostquant-lite", "gptq", "rotation+scale"),
+]
+SETTINGS = ["W2A16", "W2A4"]
+
+
+def run(quiet: bool = False):
+    arch, params = get_trained_model(quiet=quiet)
+    base = evaluate(arch, params, NOQUANT)
+    rows = [{"method": "fp", "r1": "-", "bits": "W16A16", **base}]
+    if not quiet:
+        print(f"fp16 baseline: ppl={base['ppl']:.2f} top1={base['top1']:.2f}")
+    for bits in SETTINGS:
+        for mname, wq_method, learned in METHODS:
+            for r1 in ROTS:
+                t0 = time.time()
+                ptq = PTQConfig(r1_kind=r1, wakv=bits, method=wq_method,
+                                group=GROUP, learned=learned, learn_steps=80,
+                                n_calib=4, calib_seq=64)
+                qp, spec = quantize_model(arch, params, ptq)
+                m = evaluate(arch, qp, spec)
+                dt = time.time() - t0
+                rows.append({"method": mname, "r1": r1, "bits": bits, **m,
+                             "quant_s": round(dt, 1)})
+                if not quiet:
+                    print(f"{mname:15s} {bits:6s} {r1:4s} ppl={m['ppl']:8.2f} "
+                          f"top1={m['top1']:6.2f}  ({dt:.0f}s)")
+    os.makedirs("results", exist_ok=True)
+    with open("results/table1.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    _verdict(rows, quiet)
+    return rows
+
+
+def _verdict(rows, quiet=False):
+    """Check the paper's ordering claims on the measured numbers."""
+    byk = {(r["method"], r["bits"], r["r1"]): r["ppl"] for r in rows if r["r1"] != "-"}
+    checks = []
+    for bits in SETTINGS:
+        for m, _, _ in METHODS:
+            gh, gw = byk[(m, bits, "GH")], byk[(m, bits, "GW")]
+            lh, gsr = byk[(m, bits, "LH")], byk[(m, bits, "GSR")]
+            checks.append((f"{m}/{bits}: GW<=GH (sequency helps)", gw <= gh * 1.02))
+            checks.append((f"{m}/{bits}: GSR<=LH (sequency helps locally)", gsr <= lh * 1.02))
+            checks.append((f"{m}/{bits}: local<=global (LH<=GH)", lh <= gh * 1.02))
+            checks.append((f"{m}/{bits}: GSR<=GH (paper headline)", gsr <= gh * 1.02))
+    ok = sum(c for _, c in checks)
+    if not quiet:
+        for name, c in checks:
+            print(("  PASS " if c else "  fail ") + name)
+        print(f"[table1] {ok}/{len(checks)} ordering checks hold")
+    return ok, len(checks)
+
+
+def main():
+    rows = run()
+    for r in rows:
+        print(f"table1/{r['method']}/{r['bits']}/{r['r1']},0,"
+              f"ppl={r['ppl']:.3f};top1={r['top1']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

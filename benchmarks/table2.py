@@ -1,0 +1,56 @@
+"""Paper Table 2 (A.2 ablation): global vs local rotation for R4.
+
+R1 in {LH, GSR} x R4 in {GH, LH, GSR} under W2A16 and W2A4.  The paper
+finds local R4 helps only when activations are quantized (W2A4), and
+notes local online rotation is impractical on GPU - on this TPU target it
+is the MXU-shaped fast path (see kernels/grouped_rotate.py), so the
+framework treats it as a first-class deployment option.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import GROUP, evaluate, get_trained_model
+from repro.quant.pipeline import PTQConfig, quantize_model
+
+
+def run(quiet: bool = False):
+    arch, params = get_trained_model(quiet=True)
+    rows = []
+    for r1 in ("LH", "GSR"):
+        for r4 in ("GH", "LH", "GSR"):
+            row = {"r1": r1, "r4": r4}
+            for bits in ("W2A16", "W2A4"):
+                ptq = PTQConfig(r1_kind=r1, r4_kind=r4, wakv=bits, method="gptq",
+                                group=GROUP, n_calib=4, calib_seq=64)
+                qp, spec = quantize_model(arch, params, ptq)
+                m = evaluate(arch, qp, spec)
+                row["ppl_w2" if bits == "W2A16" else "ppl_w2a4"] = m["ppl"]
+            rows.append(row)
+            if not quiet:
+                print(f"R1={r1:4s} R4={r4:4s} PPL(W2)={row['ppl_w2']:8.2f} "
+                      f"PPL(W2A4)={row['ppl_w2a4']:8.2f}")
+    os.makedirs("results", exist_ok=True)
+    with open("results/table2.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    # paper claim: local R4 helps under activation quantization
+    g = {(r["r1"], r["r4"]): r for r in rows}
+    for r1 in ("LH", "GSR"):
+        glob = g[(r1, "GH")]["ppl_w2a4"]
+        loc = min(g[(r1, "LH")]["ppl_w2a4"], g[(r1, "GSR")]["ppl_w2a4"])
+        tag = "PASS" if loc <= glob * 1.02 else "fail"
+        if not quiet:
+            print(f"  {tag} R1={r1}: local R4 <= global R4 under W2A4 "
+                  f"({loc:.2f} vs {glob:.2f})")
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"table2/R1={r['r1']}/R4={r['r4']},0,"
+              f"ppl_w2={r['ppl_w2']:.3f};ppl_w2a4={r['ppl_w2a4']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

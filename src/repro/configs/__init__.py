@@ -1,0 +1,1 @@
+"""Exact published configs for the assigned architectures (one per file)."""

@@ -1,0 +1,236 @@
+"""Model configuration system.
+
+One frozen dataclass covers every assigned architecture family; each
+``src/repro/configs/<arch>.py`` instantiates it with the exact published
+numbers.  ``reduced()`` produces a structure-preserving shrunken config for
+CPU smoke tests (same family/block pattern, tiny widths).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+FAMILIES = ("dense", "moe", "mla", "ssm", "hybrid")
+MODALITIES = ("text", "vlm", "audio")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    modality: str = "text"
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    d_expert: int = 0  # per-expert FFN width (fine-grained MoE)
+    capacity_factor: float = 1.25
+    moe_every: int = 1  # MoE layer every N layers (others dense), llama4=2
+    # --- MLA (multi-head latent attention) ---
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    # --- SSM / recurrent ---
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    ssm_head_dim: int = 0
+    ssm_expand: int = 2
+    conv_width: int = 4
+    slstm_every: int = 0  # xLSTM: one sLSTM block per this many layers
+    attn_every: int = 0  # Zamba: shared attention block every N ssm layers
+    # --- modality stubs ---
+    n_patches: int = 0  # vlm: precomputed patch embeddings prepended
+    n_codebooks: int = 0  # audio: EnCodec codebooks (summed embeddings)
+    # --- attention behaviour ---
+    sliding_window: int = 0  # 0 = full causal attention
+
+    def __post_init__(self):
+        assert self.family in FAMILIES, self.family
+        assert self.modality in MODALITIES, self.modality
+
+    # ------------------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def is_recurrent(self) -> bool:
+        """True if decode state is O(1) in sequence length (SSM family)."""
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """long_500k cells run only for sub-quadratic archs (SSM/hybrid).
+
+        A hybrid still carries attention KV, but its shared-block KV at
+        seq 500k (batch 1) is small; pure full-attention archs skip the
+        cell (DESIGN.md 'Arch-applicability')."""
+        return self.family in ("ssm", "hybrid")
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> Tuple[int, int]:
+        """(total, active-per-token) parameter counts, embeddings included.
+
+        Used for MODEL_FLOPS = 6 * N_active * D in the roofline analysis.
+        """
+        d, v = self.d_model, self.vocab
+        embed = v * d * (self.n_codebooks or 1)
+        head = 0 if self.tie_embeddings else v * d * (self.n_codebooks or 1)
+        total = active = embed + head + d  # + final norm
+
+        if self.family in ("dense", "moe"):
+            hd = self.hd
+            attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+            if self.qkv_bias:
+                attn += (self.n_heads + 2 * self.n_kv_heads) * hd
+            if self.family == "dense":
+                mlp_total = mlp_active = 3 * d * self.d_ff
+                n_moe_layers = 0
+            else:
+                de = self.d_expert or self.d_ff
+                router = d * self.n_experts
+                mlp_total = router + 3 * d * de * (self.n_experts + self.n_shared_experts)
+                mlp_active = router + 3 * d * de * (self.top_k + self.n_shared_experts)
+                n_moe_layers = self.n_layers // self.moe_every
+            n_dense_layers = self.n_layers - n_moe_layers
+            dense_mlp = 3 * d * self.d_ff if self.family == "moe" else mlp_total
+            total += self.n_layers * (attn + 2 * d)
+            active += self.n_layers * (attn + 2 * d)
+            total += n_moe_layers * mlp_total + (
+                n_dense_layers * dense_mlp if self.family == "moe" else n_dense_layers * mlp_total
+            )
+            active += n_moe_layers * mlp_active + (
+                n_dense_layers * dense_mlp if self.family == "moe" else n_dense_layers * mlp_active
+            )
+        elif self.family == "mla":
+            qk_head = self.qk_nope_dim + self.qk_rope_dim
+            attn = (
+                d * self.q_lora_rank
+                + self.q_lora_rank * self.n_heads * qk_head
+                + d * (self.kv_lora_rank + self.qk_rope_dim)
+                + self.kv_lora_rank * self.n_heads * (self.qk_nope_dim + self.v_head_dim)
+                + self.n_heads * self.v_head_dim * d
+            )
+            per_layer = attn + 3 * d * self.d_ff + 2 * d
+            total += self.n_layers * per_layer
+            active += self.n_layers * per_layer
+        elif self.family == "ssm":  # xLSTM
+            n_slstm = self.n_layers // self.slstm_every if self.slstm_every else 0
+            n_mlstm = self.n_layers - n_slstm
+            di = self.ssm_expand * d
+            mlstm = 4 * d * di + di * d  # q,k,v,gates in_proj + out_proj
+            hds = d // max(self.n_heads, 1)
+            slstm = 4 * d * d + 4 * self.n_heads * hds * hds + d * d
+            total += n_mlstm * mlstm + n_slstm * slstm + self.n_layers * d
+            active = total
+        elif self.family == "hybrid":  # Zamba2: Mamba2 + one shared attn blk
+            di = self.ssm_expand * d
+            nh = self.ssm_heads
+            mamba = (
+                d * (2 * di + 2 * self.ssm_state + nh)  # in_proj (x,z,B,C,dt)
+                + self.conv_width * (di + 2 * self.ssm_state)
+                + nh  # A_log
+                + di  # D skip
+                + di * d  # out_proj
+                + d
+            )
+            hd = self.hd
+            shared = (
+                d * self.n_heads * hd
+                + 2 * d * self.n_kv_heads * hd
+                + self.n_heads * hd * d
+                + 3 * d * self.d_ff
+                + 2 * d
+            )
+            total += self.n_layers * mamba + shared
+            active = total
+        return int(total), int(active)
+
+    # ------------------------------------------------------------------
+    def reduced(self) -> "ModelConfig":
+        """Tiny structure-preserving config for CPU smoke tests."""
+
+        def shrink_heads(h, kv):
+            if h == 0:
+                return 0, 0
+            ratio = max(h // max(kv, 1), 1)
+            h2 = min(h, 4)
+            kv2 = max(h2 // ratio, 1)
+            return h2, kv2
+
+        h2, kv2 = shrink_heads(self.n_heads, self.n_kv_heads)
+        d2 = 64
+        kw = dict(
+            name=self.name + "-reduced",
+            n_layers=min(self.n_layers, max(2, self.slstm_every or 0, self.attn_every or 0) * 2)
+            if (self.slstm_every or self.attn_every)
+            else min(self.n_layers, 2),
+            d_model=d2,
+            n_heads=h2,
+            n_kv_heads=kv2,
+            head_dim=d2 // h2 if h2 else 0,
+            d_ff=128 if self.d_ff else 0,
+            vocab=256,
+        )
+        if self.family == "moe":
+            # capacity_factor = E makes reduced routing dropless, so the
+            # prefill/decode teacher-forcing equivalence tests are exact.
+            kw.update(
+                n_experts=min(self.n_experts, 8),
+                top_k=min(self.top_k, 2),
+                d_expert=32,
+                capacity_factor=8.0,
+            )
+        if self.family == "mla":
+            kw.update(q_lora_rank=32, kv_lora_rank=16, qk_nope_dim=8, qk_rope_dim=8, v_head_dim=8)
+        if self.family in ("ssm", "hybrid"):
+            kw.update(ssm_state=16, ssm_heads=max(h2, 2), ssm_head_dim=0)
+        if self.n_patches:
+            kw.update(n_patches=8)
+        return dataclasses.replace(self, **kw)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Input shape sets (assigned): every LM cell is seq_len x global_batch.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def cells_for(cfg: ModelConfig):
+    """The (arch x shape) dry-run cells this arch participates in."""
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.supports_long_context:
+        out.append("long_500k")
+    return out

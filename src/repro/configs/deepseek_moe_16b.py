@@ -1,0 +1,22 @@
+"""deepseek-moe-16b [arXiv:2401.06066; hf] - fine-grained MoE.
+
+28L d_model=2048 16H (MHA kv=16) per-expert d_ff=1408 vocab=102400,
+64 routed experts top-6 + 2 shared experts.  (The HF model's first layer
+is dense; we use the assigned uniform MoE stack - DESIGN.md §Fidelity.)
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    n_layers=28,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,
+    vocab=102400,
+    n_experts=64,
+    top_k=6,
+    n_shared_experts=2,
+    d_expert=1408,
+)

@@ -1,0 +1,21 @@
+"""internvl2-2b [arXiv:2404.16821; hf] - InternViT + InternLM2 backbone.
+
+24L d_model=2048 16H (GQA kv=8) d_ff=8192 vocab=92553.  The ViT frontend
+is a STUB: input_specs supplies precomputed patch embeddings (B, 256, D)
+prepended to the text sequence; an identity patch_proj weight exists so
+R1 rotation fuses into the vision path too.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-2b",
+    family="dense",
+    modality="vlm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab=92553,
+    n_patches=256,
+)

@@ -1,0 +1,18 @@
+"""llama2-7b [arXiv:2307.09288] - the paper's evaluation model.
+
+32L d_model=4096 32H (MHA) d_ff=11008 vocab=32000.  Used by the
+Table 1/2 reproduction benchmarks (at reduced scale on CPU) and
+available as a full dry-run config.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama2-7b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=11008,
+    vocab=32000,
+)

@@ -1,0 +1,25 @@
+"""llama4-maverick-400b-a17b [hf:meta-llama/Llama-4; unverified].
+
+48L d_model=5120 40H (GQA kv=8) d_ff=8192 vocab=202048, 128 routed
+experts top-1 + 1 shared expert (sigmoid gate), MoE every other layer
+(interleave step 2, as in the released Maverick; this also reconciles
+the 400B-total / 17B-active numbers in the model name - DESIGN.md).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab=202048,
+    n_experts=128,
+    top_k=1,
+    n_shared_experts=1,
+    d_expert=8192,
+    moe_every=2,
+    rope_theta=500000.0,
+)

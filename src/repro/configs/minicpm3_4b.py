@@ -1,0 +1,22 @@
+"""minicpm3-4b [hf:openbmb/MiniCPM3-4B; hf] - Multi-head Latent Attention.
+
+62L d_model=2560 40H d_ff=6400 vocab=73448; MLA dims from the HF config:
+q_lora_rank=768, kv_lora_rank=256, qk_nope=64, qk_rope=32, v_head=64.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm3-4b",
+    family="mla",
+    n_layers=62,
+    d_model=2560,
+    n_heads=40,
+    n_kv_heads=40,
+    d_ff=6400,
+    vocab=73448,
+    q_lora_rank=768,
+    kv_lora_rank=256,
+    qk_nope_dim=64,
+    qk_rope_dim=32,
+    v_head_dim=64,
+)

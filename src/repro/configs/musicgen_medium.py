@@ -1,0 +1,21 @@
+"""musicgen-medium [arXiv:2306.05284; hf] - decoder over EnCodec tokens.
+
+48L d_model=1536 24H (MHA kv=24) d_ff=6144 vocab=2048, K=4 codebooks
+(delay pattern handled by the frontend STUB: inputs are 4 token ids per
+step, embeddings summed, 4 output heads).  Cross-attention conditioning
+is out of scope for the backbone spec (DESIGN.md §Fidelity).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    family="dense",
+    modality="audio",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,
+    d_ff=6144,
+    vocab=2048,
+    n_codebooks=4,
+)

@@ -1,0 +1,17 @@
+"""smollm-135m [hf:HuggingFaceTB/SmolLM-135M; hf] - small llama arch.
+
+30L d_model=576 9H (GQA kv=3) d_ff=1536 vocab=49152.  Also the
+~100M-class model used by the end-to-end training example.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-135m",
+    family="dense",
+    n_layers=30,
+    d_model=576,
+    n_heads=9,
+    n_kv_heads=3,
+    d_ff=1536,
+    vocab=49152,
+)

@@ -1,0 +1,20 @@
+"""xlstm-1.3b [arXiv:2405.04517; unverified] - sLSTM + mLSTM blocks.
+
+48L d_model=2048 4H d_ff=0 (blocks carry their own projections)
+vocab=50304; one sLSTM block per 8 layers (7 mLSTM + 1 sLSTM groups).
+Runs the long_500k cell: decode state is O(1) in context.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab=50304,
+    ssm_expand=1,
+    slstm_every=8,
+)

@@ -1,0 +1,23 @@
+"""zamba2-1.2b [arXiv:2411.15242; hf] - Mamba2 backbone + shared attn.
+
+38 Mamba2 layers, d_model=2048, ssm_state=64, 32 SSD heads (head dim
+128 with expand=2); one shared attention block (32H, d_ff=8192) applied
+every 6 layers.  Runs the long_500k cell (O(1) backbone state).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    n_layers=38,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab=32000,
+    ssm_state=64,
+    ssm_heads=32,
+    ssm_expand=2,
+    conv_width=4,
+    attn_every=6,
+)

@@ -1,0 +1,287 @@
+"""Hadamard / Walsh matrix construction and sequency machinery.
+
+This module is the numerical heart of the paper:
+
+  *Grouped Sequency-arranged Rotation: Optimizing Rotation Transformation
+  for Quantization for Free* (ACL 2025 SRW).
+
+Everything here is **host-side, training-free construction**: matrices are
+built once in numpy (they are static w.r.t. the computation graph) and then
+consumed by JAX transforms / Pallas kernels.  The only runtime cost of the
+paper's method is a permutation + (optional) block-diagonal structure on top
+of a Sylvester Hadamard matrix - i.e. "for free".
+
+Definitions
+-----------
+Sylvester Hadamard
+    H_2 = [[1, 1], [1, -1]] / sqrt(2),  H_{2^n} = H_2 (x) H_{2^{n-1}}.
+    Entry closed form (unnormalised):  H[i, j] = (-1)^{popcount(i & j)}.
+
+Sequency
+    The number of sign changes along a row.  The natural (Sylvester)
+    ordering has scrambled sequencies; e.g. for n=8 the row sequencies are
+    [0, 7, 3, 4, 1, 6, 2, 5].
+
+Walsh matrix
+    The Hadamard matrix with rows permuted into *ascending sequency*
+    ("sequency ordering").  Closed form of the permutation: row ``i`` of the
+    Walsh matrix is row ``bit_reverse(gray(i))`` of the Sylvester matrix.
+
+Randomized Hadamard Transform (RHT)
+    H @ diag(s), s in {-1, +1}^n, per QuIP# / QuaRot.  Used for the GH / LH
+    baselines; the Walsh variants intentionally do *not* randomise (the
+    paper uses the deterministic Walsh matrix so the sequency arrangement
+    is preserved).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+__all__ = [
+    "is_pow2",
+    "hadamard",
+    "hadamard_auto",
+    "paley_hadamard",
+    "sequency_of_rows",
+    "natural_sequency",
+    "walsh_permutation",
+    "walsh",
+    "walsh_auto",
+    "random_signs",
+    "randomized_hadamard",
+    "randomized_hadamard_auto",
+    "block_diag_rotation",
+    "gsr_matrix",
+    "local_hadamard_matrix",
+]
+
+
+def is_pow2(n: int) -> bool:
+    return n >= 1 and (n & (n - 1)) == 0
+
+
+def _check_pow2(n: int) -> None:
+    if not is_pow2(n):
+        raise ValueError(f"Hadamard/Walsh size must be a power of two, got {n}")
+
+
+@functools.lru_cache(maxsize=64)
+def _hadamard_unnormalized(n: int) -> np.ndarray:
+    """Sylvester Hadamard matrix with +-1 entries (un-normalised), cached."""
+    _check_pow2(n)
+    # Closed form H[i, j] = (-1)^{popcount(i & j)}; vectorised via bit tricks.
+    i = np.arange(n, dtype=np.uint64)
+    # popcount(i & j) parity table computed by XOR-folding.
+    a = i[:, None] & i[None, :]
+    parity = np.zeros_like(a)
+    while a.any():
+        parity ^= a & 1
+        a >>= 1
+    return np.where(parity.astype(bool), -1.0, 1.0)
+
+
+def hadamard(n: int, *, normalize: bool = True, dtype=np.float64) -> np.ndarray:
+    """Sylvester ("natural order") Hadamard matrix of size n (power of two)."""
+    h = _hadamard_unnormalized(n).astype(dtype)
+    if normalize:
+        h = h / np.sqrt(n).astype(dtype)
+    return h
+
+
+def sequency_of_rows(m: np.ndarray) -> np.ndarray:
+    """Number of sign changes along each row of a +-1 (or scaled) matrix."""
+    signs = np.sign(m)
+    return (signs[:, 1:] != signs[:, :-1]).sum(axis=1)
+
+
+def _gray(i: np.ndarray) -> np.ndarray:
+    return i ^ (i >> 1)
+
+
+def _bit_reverse(i: np.ndarray, bits: int) -> np.ndarray:
+    out = np.zeros_like(i)
+    for b in range(bits):
+        out = (out << 1) | ((i >> b) & 1)
+    return out
+
+
+def natural_sequency(n: int) -> np.ndarray:
+    """Sequency value of the i-th row of the *natural* (Sylvester) matrix.
+
+    Computed analytically; equals ``sequency_of_rows(hadamard(n))``.
+    For n=8 this is [0, 7, 3, 4, 1, 6, 2, 5] (paper, Sec. 2.1).
+    """
+    _check_pow2(n)
+    bits = int(np.log2(n))
+    i = np.arange(n, dtype=np.uint64)
+    # Row i of the Sylvester matrix equals Walsh row s where
+    # i = bit_reverse(gray(s)); invert: s = gray_inverse(bit_reverse(i)).
+    rev = _bit_reverse(i, bits)
+    # Gray-code inverse (binary-to-gray inverse): s = rev ^ (rev>>1) ^ ...
+    s = rev.copy()
+    shift = 1
+    while shift < bits:
+        s ^= s >> shift
+        shift <<= 1
+    return s.astype(np.int64)
+
+
+def walsh_permutation(n: int) -> np.ndarray:
+    """Permutation p with Walsh[i] = Hadamard[p[i]]: p(i) = bitrev(gray(i)).
+
+    Row i of the Walsh (sequency-ordered) matrix has sequency exactly i.
+    """
+    _check_pow2(n)
+    bits = int(np.log2(n))
+    i = np.arange(n, dtype=np.uint64)
+    return _bit_reverse(_gray(i), bits).astype(np.int64)
+
+
+def walsh(n: int, *, normalize: bool = True, dtype=np.float64) -> np.ndarray:
+    """Walsh (sequency-ordered Hadamard) matrix of size n."""
+    h = hadamard(n, normalize=normalize, dtype=dtype)
+    return h[walsh_permutation(n)]
+
+
+# ---------------------------------------------------------------------------
+# Non-power-of-two sizes (QuaRot-style mixed Kronecker constructions).
+#
+# Several assigned archs have d_model = 2^k * m with m in {3, 5, 9}; a global
+# Hadamard then needs a base Hadamard matrix of order 12/20/36, built here
+# with the Paley constructions (instead of QuaRot's shipped tables).  GSR
+# never needs this - its 128-sized Walsh blocks are always Sylvester - which
+# is itself a deployment advantage of the paper's method.
+# ---------------------------------------------------------------------------
+
+
+def _legendre(a: int, p: int) -> int:
+    a %= p
+    if a == 0:
+        return 0
+    return 1 if pow(a, (p - 1) // 2, p) == 1 else -1
+
+
+def _jacobsthal(q: int) -> np.ndarray:
+    return np.array([[_legendre(i - j, q) for j in range(q)] for i in range(q)], dtype=np.float64)
+
+
+@functools.lru_cache(maxsize=16)
+def paley_hadamard(n: int) -> np.ndarray:
+    """Unnormalised Hadamard matrix of order n via Paley I/II."""
+    q = n - 1
+    if q % 4 == 3 and _is_prime(q):  # Paley I
+        jac = _jacobsthal(q)
+        # H = I + S, S = [[0, 1^T], [-1, Q]] skew (Q skew for q=3 mod 4)
+        h = np.ones((n, n))
+        h[1:, 1:] = jac + np.eye(q)
+        h[1:, 0] = -1.0
+        assert np.allclose(h @ h.T, n * np.eye(n)), f"Paley I failed for {n}"
+        return h
+    q = n // 2 - 1
+    if n % 2 == 0 and q % 4 == 1 and _is_prime(q):  # Paley II
+        jac = _jacobsthal(q)
+        s = np.zeros((q + 1, q + 1))
+        s[0, 1:] = 1.0
+        s[1:, 0] = 1.0
+        s[1:, 1:] = jac
+        a = np.array([[1.0, 1.0], [1.0, -1.0]])
+        b = np.array([[1.0, -1.0], [-1.0, -1.0]])
+        h = np.kron(s, a) + np.kron(np.eye(q + 1), b)
+        assert np.allclose(h @ h.T, n * np.eye(n)), f"Paley II failed for {n}"
+        return h
+    raise ValueError(f"no Paley construction for order {n}")
+
+
+def _is_prime(p: int) -> bool:
+    if p < 2:
+        return False
+    return all(p % d for d in range(2, int(p**0.5) + 1))
+
+
+_BASE_ORDERS = (12, 20, 28, 36, 44)  # Paley-constructible small orders
+
+
+@functools.lru_cache(maxsize=64)
+def _hadamard_auto_unnormalized(n: int) -> np.ndarray:
+    if is_pow2(n):
+        return _hadamard_unnormalized(n)
+    for base in _BASE_ORDERS:
+        if n % base == 0 and is_pow2(n // base):
+            return np.kron(paley_hadamard(base), _hadamard_unnormalized(n // base))
+    raise ValueError(
+        f"no Hadamard construction for size {n} (needs 2^k or base*2^k, "
+        f"base in {_BASE_ORDERS})"
+    )
+
+
+def hadamard_auto(n: int, *, normalize: bool = True, dtype=np.float64) -> np.ndarray:
+    """Hadamard matrix for pow2 or base*2^k sizes (QuaRot-style)."""
+    h = _hadamard_auto_unnormalized(n).astype(dtype)
+    return h / np.sqrt(n).astype(dtype) if normalize else h
+
+
+def walsh_auto(n: int, *, normalize: bool = True, dtype=np.float64) -> np.ndarray:
+    """Sequency-ordered (ascending sign-change count) Hadamard, any
+    constructible size.  For pow2 sizes equals :func:`walsh` exactly."""
+    h = hadamard_auto(n, normalize=normalize, dtype=dtype)
+    order = np.argsort(sequency_of_rows(h), kind="stable")
+    return h[order]
+
+
+def randomized_hadamard_auto(n: int, seed: int, *, dtype=np.float64) -> np.ndarray:
+    return hadamard_auto(n, dtype=dtype) * random_signs(n, seed)[None, :].astype(dtype)
+
+
+def random_signs(n: int, seed: int) -> np.ndarray:
+    """Deterministic +-1 diagonal for the RHT (QuIP#-style randomisation)."""
+    rng = np.random.default_rng(seed)
+    return rng.choice(np.array([-1.0, 1.0]), size=n)
+
+
+def randomized_hadamard(n: int, seed: int, *, dtype=np.float64) -> np.ndarray:
+    """RHT matrix H @ diag(s): still orthogonal; suppresses incoherence.
+
+    Note (paper Sec. 3.2, "Comparing RHT and Walsh"): the sign flips act on
+    *columns* and therefore keep each row's sequency unchanged - the RHT has
+    the same (scrambled) sequency arrangement as the plain Hadamard.
+    """
+    return hadamard(n, dtype=dtype) * random_signs(n, seed)[None, :].astype(dtype)
+
+
+def block_diag_rotation(block: np.ndarray, num_blocks: int) -> np.ndarray:
+    """Materialise blockdiag(block, ..., block) = I_N (x) block.
+
+    Only used for testing / fusion bookkeeping; runtime application uses the
+    factored (reshape + small matmul) form, never this dense matrix.
+    """
+    g = block.shape[0]
+    out = np.zeros((num_blocks * g, num_blocks * g), dtype=block.dtype)
+    for b in range(num_blocks):
+        out[b * g : (b + 1) * g, b * g : (b + 1) * g] = block
+    return out
+
+
+def gsr_matrix(dim: int, group: int, *, dtype=np.float64) -> np.ndarray:
+    """The paper's R_GSR = I_{dim/group} (x) Walsh(group)   (Eqn. 3).
+
+    Training-free: a Walsh block per quantization group. Dense materialised
+    form - see :mod:`repro.core.rotation` for the factored application.
+    """
+    if dim % group != 0:
+        raise ValueError(f"dim {dim} not divisible by group {group}")
+    return block_diag_rotation(walsh(group, dtype=dtype), dim // group)
+
+
+def local_hadamard_matrix(dim: int, group: int, seed: int, *, dtype=np.float64) -> np.ndarray:
+    """LH baseline: block-diagonal randomized Hadamard (per-block RHT)."""
+    if dim % group != 0:
+        raise ValueError(f"dim {dim} not divisible by group {group}")
+    n = dim // group
+    out = np.zeros((dim, dim), dtype=dtype)
+    for b in range(n):
+        out[b * group : (b + 1) * group, b * group : (b + 1) * group] = randomized_hadamard(
+            group, seed + b, dtype=dtype
+        )
+    return out

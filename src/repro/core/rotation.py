@@ -1,0 +1,195 @@
+"""Rotation construction + application for rotation-based PTQ.
+
+The four rotation kinds benchmarked in the paper (Table 1), all orthogonal:
+
+======  ==============================================================
+kind    construction
+======  ==============================================================
+GH      global randomized Hadamard (QuaRot / SpinQuant default)
+GW      global Walsh (sequency-ordered Hadamard, deterministic)
+LH      local (block-diagonal, per-group) randomized Hadamard
+GSR     local (block-diagonal, per-group) Walsh  == the paper's method
+I       identity (no rotation; ablation / unquantized reference)
+==    ================================================================
+
+A :class:`Rotation` is a *factored* representation: global rotations keep a
+single ``(dim, dim)`` matrix (or are applied via the FWHT fast path), local
+rotations keep only the ``(group, group)`` block and are applied as a
+reshape + small matmul - which is exactly an MXU-shaped ``(…, G) @ (G, G)``
+contraction on TPU when ``G == 128``.  This is the TPU-native adaptation of
+the paper: on GPUs local online rotation "disables the fast-hadamard-
+transform" (paper A.2), but on a TPU a 128x128 block-diagonal rotation maps
+*perfectly* onto the 128x128 systolic MXU tile, so GSR's local rotation is
+the fast path here rather than a liability.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hadamard as hd
+
+__all__ = ["RotationKind", "Rotation", "make_rotation", "apply_rotation", "fwht"]
+
+
+class RotationKind(str, enum.Enum):
+    IDENTITY = "I"
+    GLOBAL_HADAMARD = "GH"
+    GLOBAL_WALSH = "GW"
+    LOCAL_HADAMARD = "LH"
+    GSR = "GSR"
+
+    @property
+    def is_local(self) -> bool:
+        return self in (RotationKind.LOCAL_HADAMARD, RotationKind.GSR)
+
+    @property
+    def is_walsh(self) -> bool:
+        return self in (RotationKind.GLOBAL_WALSH, RotationKind.GSR)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rotation:
+    """Factored orthogonal rotation of a ``dim``-sized channel axis.
+
+    Attributes:
+      kind: one of RotationKind.
+      dim: the rotated channel dimension.
+      group: block size for local kinds (== quantization group size G).
+      matrix: ``(dim, dim)`` for global kinds, ``(group, group)`` single
+        shared block for GSR, ``(num_blocks, group, group)`` for LH (each
+        block independently randomized), ``None`` for identity.
+    """
+
+    kind: RotationKind
+    dim: int
+    group: Optional[int] = None
+    matrix: Optional[np.ndarray] = None
+
+    @property
+    def num_blocks(self) -> int:
+        if not self.kind.is_local:
+            return 1
+        return self.dim // self.group
+
+    def dense(self) -> np.ndarray:
+        """Materialise the full (dim, dim) orthogonal matrix."""
+        if self.kind == RotationKind.IDENTITY:
+            return np.eye(self.dim)
+        if not self.kind.is_local:
+            return np.asarray(self.matrix)
+        if self.kind == RotationKind.GSR:
+            return hd.block_diag_rotation(np.asarray(self.matrix), self.num_blocks)
+        # LH: stacked independent blocks.
+        out = np.zeros((self.dim, self.dim), dtype=np.asarray(self.matrix).dtype)
+        g = self.group
+        for b in range(self.num_blocks):
+            out[b * g : (b + 1) * g, b * g : (b + 1) * g] = self.matrix[b]
+        return out
+
+    def inverse_dense(self) -> np.ndarray:
+        return self.dense().T  # orthogonal
+
+
+def make_rotation(
+    kind: RotationKind | str,
+    dim: int,
+    *,
+    group: Optional[int] = None,
+    seed: int = 0,
+    dtype=np.float64,
+) -> Rotation:
+    """Build a rotation per the paper's recipes.
+
+    GH / LH are randomized (RHT) "following common practice in previous
+    rotation-based algorithms"; GW / GSR use the deterministic Walsh matrix
+    ("when constructing Walsh matrices, the original Hadamard matrix is
+    used") - randomizing would scramble the sequency arrangement that the
+    method exists to exploit.
+    """
+    kind = RotationKind(kind)
+    if kind == RotationKind.IDENTITY:
+        return Rotation(kind=kind, dim=dim)
+    if kind == RotationKind.GLOBAL_HADAMARD:
+        return Rotation(
+            kind=kind, dim=dim, matrix=hd.randomized_hadamard_auto(dim, seed, dtype=dtype)
+        )
+    if kind == RotationKind.GLOBAL_WALSH:
+        return Rotation(kind=kind, dim=dim, matrix=hd.walsh_auto(dim, dtype=dtype))
+    if group is None:
+        raise ValueError(f"{kind} requires a group size")
+    if dim % group != 0:
+        raise ValueError(f"dim {dim} not divisible by group {group}")
+    if kind == RotationKind.GSR:
+        return Rotation(kind=kind, dim=dim, group=group, matrix=hd.walsh(group, dtype=dtype))
+    # LH: independent randomized Hadamard per block.
+    blocks = np.stack(
+        [hd.randomized_hadamard(group, seed + b, dtype=dtype) for b in range(dim // group)]
+    )
+    return Rotation(kind=kind, dim=dim, group=group, matrix=blocks)
+
+
+# ---------------------------------------------------------------------------
+# Application (jax; differentiable; used online for R4-style rotations and
+# offline when fusing into weights).
+# ---------------------------------------------------------------------------
+
+
+def fwht(x: jax.Array, *, normalize: bool = True) -> jax.Array:
+    """Fast Walsh-Hadamard transform over the last axis (natural order).
+
+    O(d log d) butterfly; the pure-jnp reference for the Pallas kernel in
+    :mod:`repro.kernels.fwht`.  Equivalent to ``x @ hadamard(d)``.
+    """
+    d = x.shape[-1]
+    if not hd.is_pow2(d):
+        raise ValueError(f"fwht dim must be power of two, got {d}")
+    orig_shape = x.shape
+    x = x.reshape(-1, d)
+    h = 1
+    while h < d:
+        x = x.reshape(-1, d // (2 * h), 2, h)
+        a = x[:, :, 0, :]
+        b = x[:, :, 1, :]
+        x = jnp.stack([a + b, a - b], axis=2)
+        h *= 2
+    x = x.reshape(orig_shape)
+    if normalize:
+        x = x * (1.0 / np.sqrt(d)).astype(x.dtype)
+    return x
+
+
+def apply_rotation(x: jax.Array, rot: Rotation, *, inverse: bool = False) -> jax.Array:
+    """Apply ``x @ R`` (or ``x @ R^T``) along the last axis.
+
+    Local kinds use the factored form: reshape to (..., N, G) and contract
+    the G axis with the (G, G) block - a batched MXU-aligned matmul.
+    """
+    if rot.kind == RotationKind.IDENTITY:
+        return x
+    if x.shape[-1] != rot.dim:
+        raise ValueError(f"last dim {x.shape[-1]} != rotation dim {rot.dim}")
+    dtype = x.dtype
+    if not rot.kind.is_local:
+        m = jnp.asarray(rot.matrix, dtype=jnp.float32)
+        if inverse:
+            m = m.T
+        return (x.astype(jnp.float32) @ m).astype(dtype)
+    g, n = rot.group, rot.num_blocks
+    xs = x.astype(jnp.float32).reshape(*x.shape[:-1], n, g)
+    if rot.kind == RotationKind.GSR:
+        m = jnp.asarray(rot.matrix, dtype=jnp.float32)
+        if inverse:
+            m = m.T
+        out = jnp.einsum("...ng,gh->...nh", xs, m)
+    else:  # LH - a different block per group
+        m = jnp.asarray(rot.matrix, dtype=jnp.float32)
+        if inverse:
+            m = jnp.swapaxes(m, -1, -2)
+        out = jnp.einsum("...ng,ngh->...nh", xs, m)
+    return out.reshape(x.shape).astype(dtype)

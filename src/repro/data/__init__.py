@@ -1,0 +1,1 @@
+from repro.data.synthetic import SyntheticLM, calibration_batches  # noqa: F401

@@ -1,0 +1,27 @@
+"""Pallas TPU kernels for the performance-critical hot spots.
+
+The paper's pipeline has four compute hot spots on the serving path, each
+with a kernel here, a jit'd wrapper in :mod:`repro.kernels.ops`, and a
+pure-jnp oracle in :mod:`repro.kernels.ref`:
+
+  * ``fwht``            - global fast Walsh-Hadamard transform (the GH/GW
+                          online rotation, e.g. QuaRot's R4).
+  * ``grouped_rotate``  - block-diagonal (local) rotation: LH / GSR.  On
+                          TPU with G=128 this is a single MXU tile per
+                          group - the reason GSR's local online rotation is
+                          *cheap* here, unlike the GPU caveat in paper A.2.
+  * ``dequant_matmul``  - fused packed-W2/W4 dequantize + matmul (streams
+                          packed bytes HBM->VMEM; the W2/W4 decode-path
+                          memory-roofline win).
+  * ``rtn_quant``       - grouped symmetric RTN activation fake-quant
+                          (the A4 online quantizer in front of every GEMM).
+  * ``gsr_quant``       - FUSED grouped-rotate + activation-quantize: the
+                          W2A4 serving path's online R4->A4 in one VMEM
+                          pass (half the HBM traffic of the two-kernel
+                          pipeline; only possible because GSR's rotation
+                          group coincides with the quantization group).
+
+All kernels are written against ``pl.pallas_call`` with explicit BlockSpec
+VMEM tiling for TPU as the *target*, and validated on CPU in interpret
+mode (kernel bodies run in Python) against the oracles.
+"""

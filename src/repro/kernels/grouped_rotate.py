@@ -1,0 +1,70 @@
+"""Block-diagonal (local) rotation Pallas kernel: the GSR/LH online path.
+
+Computes ``y[:, nG:(n+1)G] = x[:, nG:(n+1)G] @ R_n`` for every group n.
+With G = 128 each grid step is exactly one 128x128 MXU tile contraction -
+the TPU-native answer to the paper's A.2 concern that local online
+rotation "disables the fast-hadamard-transform": on a systolic-array
+machine the G x G dense block *is* the fast path.
+
+Blocks: x ``(block_m, G)`` at (i, n); rotation ``(1, G, G)`` at block n
+(or the single shared Walsh block for GSR, index 0).  FLOPs per element:
+G MACs vs log2(D) adds for global FWHT - but at G=128 on the MXU this is
+~1 tile-op, while FWHT's log-depth shuffle is VPU-bound, so GSR rotation
+is *faster* per byte than the global transform it replaces.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rot_kernel(x_ref, r_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)  # (bm, G)
+    r = r_ref[0].astype(jnp.float32)  # (G, G)
+    o_ref[...] = jax.lax.dot(x, r, precision=jax.lax.Precision.HIGHEST).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret", "inverse"))
+def grouped_rotate_pallas(
+    x: jax.Array,
+    blocks: jax.Array,
+    *,
+    inverse: bool = False,
+    block_m: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """x: (M, C); blocks: (N, G, G) per-group rotations (N=1 = shared/GSR).
+
+    C must equal num_groups * G where num_groups = C // G.
+    """
+    m, c = x.shape
+    nb, g, g2 = blocks.shape
+    assert g == g2, "rotation blocks must be square"
+    if c % g != 0:
+        raise ValueError(f"C={c} not divisible by G={g}")
+    n = c // g
+    if nb not in (1, n):
+        raise ValueError(f"blocks leading dim {nb} must be 1 or {n}")
+    if inverse:
+        blocks = jnp.swapaxes(blocks, -1, -2)
+    bm = block_m or min(256, m)
+    pad = (-m) % bm
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    mp = x.shape[0]
+    rot_idx = (lambda i, j: (0, 0, 0)) if nb == 1 else (lambda i, j: (j, 0, 0))
+    out = pl.pallas_call(
+        _rot_kernel,
+        grid=(mp // bm, n),
+        in_specs=[
+            pl.BlockSpec((bm, g), lambda i, j: (i, j)),
+            pl.BlockSpec((1, g, g), rot_idx),
+        ],
+        out_specs=pl.BlockSpec((bm, g), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, c), x.dtype),
+        interpret=interpret,
+    )(x, blocks)
+    return out[:m] if pad else out

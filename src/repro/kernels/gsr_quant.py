@@ -1,0 +1,77 @@
+"""Fused GSR-rotate + RTN activation-quantize Pallas kernel.
+
+The W2A4 serving path runs ``act_quant(grouped_rotate(x))`` in front of
+every down projection (the paper's online R4 followed by the A4
+quantizer).  As two kernels that is two full HBM round-trips of the
+activation; fused, the rotated block never leaves VMEM before being
+quantized - halving the HBM traffic of the hottest online op in the
+paper's deployment (a beyond-paper optimization enabled by GSR's local
+structure: the rotation group and the quantization group coincide, so
+one (bm, G) VMEM tile sees everything both steps need.  A *global*
+Hadamard R4 cannot fuse this way - the quantizer groups would straddle
+the full-width transform).
+
+Grid (M/bm, N): x block (bm, G) at (i, n); rotation (1|N, G, G); output
+fake-quantized in x.dtype (int8-codes emission differs only in the final
+store).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gsr_quant_kernel(x_ref, r_ref, o_ref, *, qmax: int, clip_ratio: float):
+    x = x_ref[...].astype(jnp.float32)  # (bm, G)
+    r = r_ref[0].astype(jnp.float32)  # (G, G)
+    y = jax.lax.dot(x, r, precision=jax.lax.Precision.HIGHEST)
+    # per-(row, group) symmetric RTN - the group IS this block's lane axis
+    amax = jnp.max(jnp.abs(y), axis=-1, keepdims=True) * clip_ratio
+    scale = jnp.where(amax <= 0, 1.0, amax / qmax)
+    q = jnp.clip(jnp.round(y / scale), -qmax - 1, qmax)
+    o_ref[...] = (q * scale).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "clip_ratio", "block_m", "interpret")
+)
+def gsr_rotate_quant_pallas(
+    x: jax.Array,
+    blocks: jax.Array,
+    *,
+    bits: int = 4,
+    clip_ratio: float = 0.9,
+    block_m: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """x: (M, C); blocks: (N|1, G, G). Fused y = fq(x @ blockdiag(R))."""
+    m, c = x.shape
+    nb, g, g2 = blocks.shape
+    assert g == g2
+    if c % g:
+        raise ValueError(f"C={c} not divisible by G={g}")
+    n = c // g
+    if nb not in (1, n):
+        raise ValueError(f"blocks leading dim {nb} must be 1 or {n}")
+    qmax = 2 ** (bits - 1) - 1
+    bm = block_m or min(256, m)
+    pad = (-m) % bm
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    mp = x.shape[0]
+    rot_idx = (lambda i, j: (0, 0, 0)) if nb == 1 else (lambda i, j: (j, 0, 0))
+    out = pl.pallas_call(
+        functools.partial(_gsr_quant_kernel, qmax=qmax, clip_ratio=clip_ratio),
+        grid=(mp // bm, n),
+        in_specs=[
+            pl.BlockSpec((bm, g), lambda i, j: (i, j)),
+            pl.BlockSpec((1, g, g), rot_idx),
+        ],
+        out_specs=pl.BlockSpec((bm, g), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, c), x.dtype),
+        interpret=interpret,
+    )(x, blocks)
+    return out[:m] if pad else out

@@ -1,0 +1,67 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels run in interpret mode; on a real TPU
+deployment ``INTERPRET`` flips to False and the same BlockSpecs compile to
+Mosaic.  Wrappers accept arbitrary leading batch dims and restore them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dequant_matmul import dequant_matmul_pallas
+from repro.kernels.fwht import fwht_pallas
+from repro.kernels.grouped_rotate import grouped_rotate_pallas
+from repro.kernels.gsr_quant import gsr_rotate_quant_pallas
+from repro.kernels.rtn_quant import rtn_fake_quant_pallas
+from repro.quant.qtypes import QuantizedTensor
+
+# Pallas interpret mode: required on CPU; flipped off on TPU backends.
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def _flatten_batch(x: jax.Array):
+    lead = x.shape[:-1]
+    return x.reshape(-1, x.shape[-1]), lead
+
+
+def fwht(x: jax.Array, *, normalize: bool = True) -> jax.Array:
+    """Hadamard transform along the last axis (any leading dims)."""
+    x2, lead = _flatten_batch(x)
+    return fwht_pallas(x2, normalize=normalize, interpret=INTERPRET).reshape(*lead, -1)
+
+
+def grouped_rotate(x: jax.Array, blocks: jax.Array, *, inverse: bool = False) -> jax.Array:
+    """Block-diagonal rotation along the last axis; blocks (N|1, G, G)."""
+    x2, lead = _flatten_batch(x)
+    out = grouped_rotate_pallas(x2, blocks, inverse=inverse, interpret=INTERPRET)
+    return out.reshape(*lead, -1)
+
+
+def dequant_matmul(x: jax.Array, qt: QuantizedTensor) -> jax.Array:
+    """x (..., C) @ dequant(Wq (C, H)) -> (..., H)."""
+    x2, lead = _flatten_batch(x)
+    out = dequant_matmul_pallas(x2, qt, interpret=INTERPRET)
+    return out.reshape(*lead, out.shape[-1])
+
+
+def rtn_fake_quant(
+    x: jax.Array, *, bits: int = 4, group: int = 128, clip_ratio: float = 0.9
+) -> jax.Array:
+    """Grouped symmetric activation fake-quant along the last axis."""
+    x2, lead = _flatten_batch(x)
+    out = rtn_fake_quant_pallas(
+        x2, bits=bits, group=group, clip_ratio=clip_ratio, interpret=INTERPRET
+    )
+    return out.reshape(*lead, -1)
+
+
+def gsr_rotate_quant(
+    x: jax.Array, blocks: jax.Array, *, bits: int = 4, clip_ratio: float = 0.9
+) -> jax.Array:
+    """Fused online R4 (GSR/LH) + A-bit activation fake-quant."""
+    x2, lead = _flatten_batch(x)
+    out = gsr_rotate_quant_pallas(
+        x2, blocks, bits=bits, clip_ratio=clip_ratio, interpret=INTERPRET
+    )
+    return out.reshape(*lead, -1)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function mirrors the exact numerics the kernel is required to
+reproduce; tests sweep shapes/dtypes and assert_allclose kernel vs oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rotation import fwht as _fwht_core
+from repro.quant import pack as packmod
+from repro.quant import rtn
+from repro.quant.qtypes import QuantConfig, QuantizedTensor
+
+
+def fwht_ref(x: jax.Array, *, normalize: bool = True) -> jax.Array:
+    """(M, D) Hadamard transform along D, natural (Sylvester) order."""
+    return _fwht_core(x, normalize=normalize)
+
+
+def grouped_rotate_ref(x: jax.Array, blocks: jax.Array, *, inverse: bool = False) -> jax.Array:
+    """(M, C) block-diagonal rotation; blocks (N|1, G, G)."""
+    m, c = x.shape
+    nb, g, _ = blocks.shape
+    n = c // g
+    b = blocks if not inverse else jnp.swapaxes(blocks, -1, -2)
+    xs = x.astype(jnp.float32).reshape(m, n, g)
+    if nb == 1:
+        out = jnp.einsum("mng,gh->mnh", xs, b[0].astype(jnp.float32))
+    else:
+        out = jnp.einsum("mng,ngh->mnh", xs, b.astype(jnp.float32))
+    return out.reshape(m, c).astype(x.dtype)
+
+
+def dequant_matmul_ref(x: jax.Array, qt: QuantizedTensor) -> jax.Array:
+    """y = x @ dequant(Wq) in f32, cast back to x.dtype."""
+    if qt.packed:
+        qt = packmod.unpack(qt)
+    w = rtn.dequantize_weight(qt)
+    return (x.astype(jnp.float32) @ w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rtn_fake_quant_ref(
+    x: jax.Array, *, bits: int = 4, group: int = 128, clip_ratio: float = 0.9
+) -> jax.Array:
+    """Symmetric grouped fake-quant, same conventions as the kernel."""
+    cfg = QuantConfig(bits=bits, group=group, symmetric=True, clip_ratio=clip_ratio)
+    return rtn.fake_quant_act_grouped(x, cfg)
+
+
+def gsr_rotate_quant_ref(
+    x: jax.Array, blocks: jax.Array, *, bits: int = 4, clip_ratio: float = 0.9
+) -> jax.Array:
+    """Oracle: grouped rotation, then grouped symmetric RTN (group == G)."""
+    y = grouped_rotate_ref(x, blocks)
+    g = blocks.shape[-1]
+    return rtn_fake_quant_ref(y, bits=bits, group=g, clip_ratio=clip_ratio)

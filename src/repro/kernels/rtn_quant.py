@@ -1,0 +1,59 @@
+"""Grouped symmetric RTN activation quantization Pallas kernel.
+
+The A4 path quantizes every GEMM input activation online (paper A.1:
+symmetric RTN, clip ratio 0.9, group 128).  This runs on *every* token at
+serving time, so it must be a single streaming pass: one block read, a
+per-(row, group) max-reduce, scale, round, write.
+
+Fake-quant form (quantize-dequantize) is emitted here; the real-int8 form
+only changes the store dtype and is handled by the wrapper.
+
+Blocks: ``(block_m, G)`` at grid (i, g) - group g of row stripe i; the
+reduction is over the last (lane) axis which is the cheap axis on the VPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rtn_kernel(x_ref, o_ref, *, qmax: int, clip_ratio: float):
+    x = x_ref[...].astype(jnp.float32)  # (bm, G)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True) * clip_ratio
+    scale = jnp.where(amax <= 0, 1.0, amax / qmax)
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax)
+    o_ref[...] = (q * scale).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group", "clip_ratio", "block_m", "interpret"))
+def rtn_fake_quant_pallas(
+    x: jax.Array,
+    *,
+    bits: int = 4,
+    group: int = 128,
+    clip_ratio: float = 0.9,
+    block_m: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """x: (M, C) -> fake-quantized x, groups of `group` along C."""
+    m, c = x.shape
+    if c % group != 0:
+        raise ValueError(f"C={c} not divisible by group={group}")
+    qmax = 2 ** (bits - 1) - 1
+    bm = block_m or min(512, m)
+    pad = (-m) % bm
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    mp = x.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_rtn_kernel, qmax=qmax, clip_ratio=clip_ratio),
+        grid=(mp // bm, c // group),
+        in_specs=[pl.BlockSpec((bm, group), lambda i, g: (i, g))],
+        out_specs=pl.BlockSpec((bm, group), lambda i, g: (i, g)),
+        out_shape=jax.ShapeDtypeStruct((mp, c), x.dtype),
+        interpret=interpret,
+    )(x)
+    return out[:m] if pad else out

@@ -1,0 +1,81 @@
+"""Post-SPMD HLO statistics: collective bytes per op class.
+
+``cost_analysis`` has no collective accounting, so the roofline's third
+term is derived here by parsing the compiled (per-device SPMD) HLO text
+and summing result-shape bytes of every collective.  Wire-cost factors
+follow the standard ring models: all-reduce moves ~2x its payload,
+all-gather / reduce-scatter / all-to-all / permute ~1x.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+_WIRE_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "ragged-all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\][^ ]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|ragged-all-to-all|"
+    r"collective-permute)(?:-start)?\("
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str, *, body_multiplier: int = 1) -> Dict[str, Dict[str, float]]:
+    """{op: {count, bytes, wire_bytes}} from per-device optimized HLO.
+
+    Collectives inside non-ENTRY computations (scan/while bodies - in this
+    framework, the layer scan) execute once per layer: their bytes are
+    multiplied by ``body_multiplier`` (pass the scan length).  This is the
+    accounting used consistently across all roofline comparisons.
+    """
+    out = {op: {"count": 0, "bytes": 0.0, "wire_bytes": 0.0} for op in _COLLECTIVES}
+    in_entry = False
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if stripped.startswith("ENTRY"):
+            in_entry = True
+        elif stripped.endswith("{") and ("(" in stripped) and not line.startswith(" "):
+            in_entry = False
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        mult = 1 if in_entry else body_multiplier
+        b = _shape_bytes(shape_str) * mult
+        out[op]["count"] += mult
+        out[op]["bytes"] += b
+        out[op]["wire_bytes"] += b * _WIRE_FACTOR[op]
+    return out
+
+
+def total_wire_bytes(stats: Dict[str, Dict[str, float]]) -> float:
+    return sum(v["wire_bytes"] for v in stats.values())

@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+Target hardware: TPU v5e pods, 256 chips each (16x16 ICI torus).  The
+single-pod mesh is (data=16, model=16); the multi-pod mesh adds a leading
+``pod`` axis over DCN: (pod=2, data=16, model=16) = 512 chips.
+
+Defined as functions (never module-level constants) so importing this
+module touches no jax device state - the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any
+device query, and smoke tests must keep seeing 1 CPU device.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes_of(mesh) -> Tuple[str, ...]:
+    """The data-parallel axes (everything except 'model')."""
+    return tuple(n for n in mesh.axis_names if n != "model")
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Arbitrary mesh for elastic re-mesh / tests."""
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,207 @@
+"""Quantized-serving dry-run: packed low-bit weights on the decode path.
+
+The paper's deployment story: after GSR rotation + GPTQ, weights live in
+HBM as packed uint8 codes (4x-8x fewer bytes than bf16) with per-group
+scales/zeros.  Decode is memory-roofline-bound on weight streaming, so
+this is the dominant-term lever for the decode cells (§Perf).
+
+Here the packed representation is lowered through a dequant-on-use wrapper
+(proving sharding + compile of the packed tensors at mesh scale); on real
+TPU the fused Pallas ``dequant_matmul`` kernel streams the packed bytes
+without materialising bf16 weights, so the roofline memory term for
+quantized decode is computed from ``argument_bytes`` (weights + cache
+actually resident in HBM), recorded alongside the HLO terms.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ShapeConfig
+from repro.dist.sharding import batch_pspecs, cache_pspecs, param_pspecs, sanitize_pspecs
+from repro.launch.hlo_stats import collective_stats, total_wire_bytes
+from repro.launch.mesh import dp_axes_of
+from repro.models.common import QuantizeSpec
+from repro.quant.pipeline import _FAMILY_WEIGHTS, fit_group
+from repro.quant.pack import codes_per_byte
+
+
+def _quantizable(path_keys, leaf, names) -> bool:
+    return path_keys[-1] in names and getattr(leaf, "ndim", 0) >= 2 and (
+        not path_keys[-1].startswith("b")
+    )
+
+
+def quant_param_specs(cfg, params_sds, wbits: int, group: int = 128):
+    """Replace quantizable leaves with {codes, scale, zero} SDS subtrees."""
+    names = _FAMILY_WEIGHTS[cfg.family]
+    pb = codes_per_byte(wbits)
+
+    def visit(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        if not _quantizable(keys, leaf, names):
+            return leaf
+        *lead, c, h = leaf.shape
+        g = fit_group(c, group)
+        if c % pb:
+            return leaf  # unpackable channel count: keep bf16
+        return {
+            "codes": jax.ShapeDtypeStruct((*lead, c // pb, h), jnp.uint8),
+            "scale": jax.ShapeDtypeStruct((*lead, c // g, h), jnp.float32),
+            "zero": jax.ShapeDtypeStruct((*lead, c // g, h), jnp.float32),
+            "__meta__": (wbits, g, c),
+        }
+
+    return jax.tree_util.tree_map_with_path(visit, params_sds)
+
+
+def dequant_leaf(q: Dict, dtype=jnp.bfloat16) -> jax.Array:
+    """Unpack + dequantize a packed leaf (any leading stack dims)."""
+    wbits, g, c = q["__meta__"]
+    codes, scale, zero = q["codes"], q["scale"], q["zero"]
+    pb = codes_per_byte(wbits)
+    mask = (1 << wbits) - 1
+    parts = [((codes >> (wbits * i)) & mask).astype(jnp.float32) for i in range(pb)]
+    w = jnp.stack(parts, axis=-2)  # (..., C/pb, pb, H)
+    w = w.reshape(*codes.shape[:-2], c, codes.shape[-1])
+    ng = c // g
+    wg = w.reshape(*codes.shape[:-2], ng, g, codes.shape[-1])
+    wg = (wg - zero[..., :, None, :]) * scale[..., :, None, :]
+    return wg.reshape(*codes.shape[:-2], c, codes.shape[-1]).astype(dtype)
+
+
+def _is_qleaf(x) -> bool:
+    return isinstance(x, dict) and "__meta__" in x
+
+
+def dequant_params(qparams, dtype=jnp.bfloat16):
+    return jax.tree.map(
+        lambda x: dequant_leaf(x, dtype) if _is_qleaf(x) else x,
+        qparams,
+        is_leaf=lambda x: _is_qleaf(x) or not isinstance(x, dict),
+    )
+
+
+def quant_param_pspecs(cfg, params_sds, qparams_sds, fsdp_axes=None):
+    """Mirror the bf16 param specs onto the packed representation."""
+    base = param_pspecs(cfg, params_sds, fsdp_axes=fsdp_axes)
+
+    def visit(spec, qleaf):
+        if not _is_qleaf(qleaf):
+            return spec
+        nd = qleaf["codes"].ndim
+        parts = list(spec) + [None] * (nd - len(spec))
+        sub = P(*parts)
+        return {"codes": sub, "scale": sub, "zero": sub, "__meta__": None}
+
+    return jax.tree.map(
+        visit, base, qparams_sds,
+        is_leaf=lambda x: isinstance(x, P) or _is_qleaf(x),
+    )
+
+
+def lower_quant_decode(arch, shape: ShapeConfig, mesh, rec: Dict, wbits: int,
+                       kvbits: int) -> Dict:
+    cfg = arch.config
+    dp = dp_axes_of(mesh)
+    spec = QuantizeSpec(kv_bits=kvbits)
+    long_ctx = shape.seq_len > 100_000
+
+    t0 = time.time()
+    params_sds = arch.param_specs(dtype=jnp.bfloat16)
+    qparams_sds = quant_param_specs(cfg, params_sds, wbits)
+    # strip __meta__ (static) from the SDS pytree passed to jit
+    metas = {}
+
+    def strip(path, x):
+        if _is_qleaf(x):
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            metas[key] = x["__meta__"]
+            return {k: v for k, v in x.items() if k != "__meta__"}
+        return x
+
+    qsds = jax.tree_util.tree_map_with_path(
+        strip, qparams_sds, is_leaf=lambda x: _is_qleaf(x) or not isinstance(x, dict)
+    )
+
+    max_seq = shape.seq_len + (cfg.n_patches if cfg.modality == "vlm" else 0)
+    cache_sds = arch.cache_specs(shape.global_batch, max_seq, spec)
+    cspec = sanitize_pspecs(
+        mesh, cache_pspecs(cfg, cache_sds, dp, shard_batch=not long_ctx, model_size=mesh.shape['model']), cache_sds
+    )
+    pspec_q = quant_param_pspecs(cfg, params_sds, qparams_sds)
+    pspec_q = jax.tree_util.tree_map_with_path(
+        lambda path, x: {k: v for k, v in x.items() if k != "__meta__"}
+        if isinstance(x, dict) and "__meta__" in x
+        else x,
+        pspec_q,
+        is_leaf=lambda x: (isinstance(x, dict) and "__meta__" in x) or isinstance(x, P),
+    )
+    pspec_q = sanitize_pspecs(mesh, pspec_q, qsds)
+    tok_sds = arch.input_specs(shape)
+    tspec = (
+        jax.tree.map(lambda x: P(), tok_sds)
+        if long_ctx
+        else sanitize_pspecs(mesh, batch_pspecs(cfg, tok_sds, dp), tok_sds)
+    )
+
+    def is_packed(x):
+        return isinstance(x, dict) and set(x) >= {"codes", "scale", "zero"}
+
+    def decode_fn(qp, toks, cache):
+        def deq(path, x):
+            if is_packed(x):
+                key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+                return dequant_leaf({**x, "__meta__": metas[key]})
+            return x
+
+        params = jax.tree_util.tree_map_with_path(
+            deq, qp, is_leaf=lambda x: is_packed(x) or not isinstance(x, dict)
+        )
+        return arch.decode(params, toks["tokens"], cache, spec)
+
+    ns = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree, is_leaf=lambda x: isinstance(x, P)
+    )
+    fn = jax.jit(
+        decode_fn,
+        in_shardings=(ns(pspec_q), ns(tspec), ns(cspec)),
+        out_shardings=(NamedSharding(mesh, P()), ns(cspec)),
+        donate_argnums=(2,),
+    )
+    with mesh:
+        lowered = fn.lower(qsds, tok_sds, cache_sds)
+    rec["lower_s"] = round(time.time() - t0, 2)
+    rec["model_flops"] = 2.0 * rec["params_active"] * shape.global_batch
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 2)
+    ma = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "peak_device_bytes": int(
+            ma.argument_size_in_bytes + ma.output_size_in_bytes
+            - ma.alias_size_in_bytes + ma.temp_size_in_bytes
+        ),
+    }
+    ca = compiled.cost_analysis()
+    rec["cost"] = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+    }
+    hlo = compiled.as_text()
+    colls = collective_stats(hlo, body_multiplier=cfg.n_layers)
+    rec["collectives"] = colls
+    rec["collective_wire_bytes"] = total_wire_bytes(colls)
+    rec["hlo_bytes"] = len(hlo)
+    return rec

@@ -1,0 +1,71 @@
+"""Distributed training launcher.
+
+On real hardware each host runs this under its TPU runtime (jax.distributed
+initializes from the cluster env); on this container it drives the same
+code single-process.  Wires together: mesh + sharding rules, the
+fault-tolerant Trainer (checkpoint/resume, NaN-skip, SIGTERM-clean-exit),
+the sharded synthetic data pipeline, and optional gradient compression.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+      --reduced --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ck
+"""
+from __future__ import annotations
+
+import argparse
+import signal
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import SyntheticLM
+from repro.data.synthetic import make_batch_for
+from repro.models.common import QuantizeSpec
+from repro.models.registry import ARCH_IDS, get_arch
+from repro.train.optimizer import OptConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m", choices=ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-interval", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    arch = get_arch(args.arch, reduced=args.reduced)
+    cfg = arch.config
+    opt = OptConfig(lr=args.lr, warmup_steps=min(50, args.steps // 10 + 1),
+                    total_steps=args.steps)
+    tcfg = TrainerConfig(
+        total_steps=args.steps, ckpt_interval=args.ckpt_interval,
+        ckpt_dir=args.ckpt_dir, microbatches=args.microbatches,
+        compress_grads=args.compress_grads, seed=args.seed,
+    )
+    trainer = Trainer(arch, opt, tcfg, QuantizeSpec())
+    # preemption-clean exit: finish step, checkpoint, stop
+    signal.signal(signal.SIGTERM, trainer.request_stop)
+
+    shard = jax.process_index()
+    data = SyntheticLM(cfg.vocab, args.seq, seed=args.seed)
+
+    def batches():
+        step = trainer.step
+        while True:
+            yield make_batch_for(cfg, data, step, shard, args.batch)
+            step += 1
+
+    out = trainer.run(batches())
+    print(f"[train] finished at step {out['step']}; "
+          f"final loss {out['log'][-1]['loss'] if out['log'] else float('nan'):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Model zoo: every assigned architecture as a functional JAX model.
+
+Params are plain nested dicts of arrays (pjit-friendly pytrees); layers are
+stacked on a leading L axis and executed with ``lax.scan`` so compile time
+is O(1) in depth.  Each arch provides train-forward, prefill, and decode
+entry points plus ShapeDtypeStruct ``input_specs`` for the dry-run.
+"""

@@ -1,0 +1,425 @@
+"""Shared model primitives: norms, RoPE, flash attention, quant hooks.
+
+Attention is a pure-JAX flash formulation (two-level ``lax.scan`` over
+query/key blocks with online softmax) so 32k-token prefill fits HBM
+without materialising the (S, S) score matrix.  On TPU the inner block
+matmuls are MXU-shaped; a Pallas flash kernel is a further §Perf option
+but the scan form is what the dry-run lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype=jnp.float32, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    # python float stays weak-typed: a np.float64 scalar would silently
+    # promote bf16 params to f32
+    s = float(scale if scale is not None else 1.0 / np.sqrt(fan_in))
+    return jax.random.normal(key, shape, dtype) * s
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# Norms / positional
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def rope_freqs(dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, dim, 2, dtype=np.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D_rot) with D_rot even; positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta))  # (d/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, d/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Quantization hooks (static spec -> online ops inside forward)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizeSpec:
+    """Static description of the *online* quantization/rotation ops.
+
+    Weight rotation+quantization happens offline (core.fuse / quant.gptq);
+    this spec controls what runs inside the forward pass: activation
+    fake-quant in front of each GEMM (Ay), the online R4 rotation before
+    down_proj, the online R3 rotation after RoPE, and KV-cache quant.
+    """
+
+    act_bits: int = 16
+    act_group: int = 128
+    act_clip: float = 0.9
+    r4_kind: str = "I"  # I | GH | GW | LH | GSR
+    r4_group: int = 128
+    r4_seed: int = 1234
+    r3: bool = False
+    kv_bits: int = 16
+    use_kernels: bool = False
+
+    @property
+    def act_enabled(self) -> bool:
+        return self.act_bits < 16
+
+
+NOQUANT = QuantizeSpec()
+
+
+def act_q(x: jax.Array, spec: QuantizeSpec) -> jax.Array:
+    """Grouped symmetric activation fake-quant (no-op at 16 bits)."""
+    if not spec.act_enabled:
+        return x
+    group = min(spec.act_group, x.shape[-1])
+    if x.shape[-1] % group:
+        group = x.shape[-1]
+    if spec.use_kernels:
+        from repro.kernels import ops as kops
+
+        return kops.rtn_fake_quant(x, bits=spec.act_bits, group=group, clip_ratio=spec.act_clip)
+    from repro.quant.qtypes import QuantConfig
+    from repro.quant.rtn import fake_quant_act_grouped
+
+    cfg = QuantConfig(bits=spec.act_bits, group=group, symmetric=True, clip_ratio=spec.act_clip)
+    return fake_quant_act_grouped(x, cfg)
+
+
+@functools.lru_cache(maxsize=32)
+def _r4_blocks(kind: str, dim: int, group: int, seed: int):
+    from repro.core.rotation import RotationKind, make_rotation
+
+    kind = RotationKind(kind)
+    if not kind.is_local:
+        try:
+            return make_rotation(kind, dim, seed=seed)
+        except ValueError:
+            # d_ff not Hadamard-constructible globally (e.g. 11008): fall
+            # back to the corresponding local kind - the paper's local
+            # rotations never hit this (another GSR deployment advantage).
+            kind = (
+                RotationKind.GSR
+                if kind == RotationKind.GLOBAL_WALSH
+                else RotationKind.LOCAL_HADAMARD
+            )
+    g = min(group, dim)
+    while dim % g or not (g & (g - 1)) == 0:
+        g //= 2
+        if g == 0:
+            raise ValueError(f"no valid rotation group for dim {dim}")
+    return make_rotation(kind, dim, group=g, seed=seed)
+
+
+def apply_r4(x: jax.Array, spec: QuantizeSpec) -> jax.Array:
+    """Online rotation of the down_proj input (QuaRot's R4 position)."""
+    if spec.r4_kind == "I":
+        return x
+    rot = _r4_blocks(spec.r4_kind, x.shape[-1], spec.r4_group, spec.r4_seed)
+    if spec.use_kernels and rot.kind.is_local:
+        from repro.kernels import ops as kops
+
+        blocks = jnp.asarray(rot.matrix, jnp.float32)
+        if blocks.ndim == 2:
+            blocks = blocks[None]
+        return kops.grouped_rotate(x, blocks)
+    if spec.use_kernels and not rot.kind.is_local and rot.kind.value == "GW":
+        # GW = FWHT then the Walsh row-permutation of outputs.
+        from repro.kernels import ops as kops
+        from repro.core.hadamard import walsh_permutation
+
+        y = kops.fwht(x)
+        return y[..., np.argsort(walsh_permutation(x.shape[-1]))]
+    from repro.core.rotation import apply_rotation
+
+    return apply_rotation(x, rot)
+
+
+def apply_r3(q: jax.Array, k: jax.Array, spec: QuantizeSpec):
+    """Per-head Hadamard on q/k after RoPE (SpinQuant's R3, for KV quant)."""
+    if not spec.r3:
+        return q, k
+    from repro.core.rotation import fwht
+
+    return fwht(q), fwht(k)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B, S, KV, D) -> (B, S, H, D) by repeating each kv head."""
+    b, s, kv, d = k.shape
+    rep = n_heads // kv
+    if rep == 1:
+        return k
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, rep, d)).reshape(b, s, n_heads, d)
+
+
+NEG_INF = -1e30
+
+
+def _blk_mask(iq, ik, qc, kc, q_off, skv, causal, window):
+    qpos = q_off + iq * qc + jnp.arange(qc)
+    kpos = ik * kc + jnp.arange(kc)
+    mask = (kpos < skv)[None, :]  # kv padding
+    if causal:
+        mask = mask & (qpos[:, None] >= kpos[None, :])
+    if window:
+        mask = mask & (qpos[:, None] - kpos[None, :] < window)
+    return mask
+
+
+def _flash_fwd_impl(qs, ks, vs, dims):
+    """GQA-aware flash forward, casts per block (input dtype stays bf16).
+
+    qs: (nq, B, KV, rep, qc, d); ks: (nk, B, KV, kc, d); vs may have a
+    different feature dim dv (MLA: qk 96 vs v 64).
+    Returns out (nq, B, KV, rep, qc, dv) f32 and lse (nq, B, KV, rep, qc).
+    """
+    b, kv, rep, qc, d = qs.shape[1:]
+    nk, kc = ks.shape[0], ks.shape[3]
+    dv = vs.shape[-1]
+    q_off, skv, causal, window, scale = dims
+
+    def q_block(iq, qb):
+        qb = qb.astype(jnp.float32) * scale
+
+        def kv_step(carry, inp):
+            ik, kb, vb = inp
+            m, l, acc = carry
+            s = jnp.einsum("bgrqd,bgkd->bgrqk", qb, kb.astype(jnp.float32))
+            mask = _blk_mask(iq, ik, qc, kc, q_off, skv, causal, window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bgrqk,bgkd->bgrqd", p, vb.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((b, kv, rep, qc), NEG_INF, jnp.float32),
+            jnp.zeros((b, kv, rep, qc), jnp.float32),
+            jnp.zeros((b, kv, rep, qc, dv), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, (jnp.arange(nk), ks, vs))
+        lsafe = jnp.maximum(l, 1e-30)
+        out = acc / lsafe[..., None]
+        lse = m + jnp.log(lsafe)
+        return out, lse
+
+    outs, lses = jax.lax.map(lambda args: q_block(*args), (jnp.arange(qs.shape[0]), qs))
+    return outs, lses
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _flash_core(qs, ks, vs, dims):
+    return _flash_fwd_impl(qs, ks, vs, dims)[0]
+
+
+def _flash_core_fwd(qs, ks, vs, dims):
+    out, lse = _flash_fwd_impl(qs, ks, vs, dims)
+    return out, (qs, ks, vs, out, lse)
+
+
+def _flash_core_bwd(dims, res, dout):
+    """Blockwise recompute backward: O(block) memory, ~2x fwd flops.
+
+    The rep (GQA expansion) axis contracts in dk/dv - the grouped-head
+    gradient reduction falls out of the einsums for free.
+    """
+    qs, ks, vs, out, lse = res
+    nq, b, kv, rep, qc, d = qs.shape
+    nk, kc = ks.shape[0], ks.shape[3]
+    dvf = vs.shape[-1]  # value feature dim (may differ from d, e.g. MLA)
+    q_off, skv, causal, window, scale = dims
+    delta = jnp.einsum("nbgrqd,nbgrqd->nbgrq", dout, out)  # rowsum(do*o)
+
+    def dq_block(iq, qb, do_b, lse_b, dl_b):
+        qb = qb.astype(jnp.float32) * scale
+
+        def kv_step(dq, inp):
+            ik, kb, vb = inp
+            kb = kb.astype(jnp.float32)
+            s = jnp.einsum("bgrqd,bgkd->bgrqk", qb, kb)
+            mask = _blk_mask(iq, ik, qc, kc, q_off, skv, causal, window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            p = jnp.exp(s - lse_b[..., None])
+            dp = jnp.einsum("bgrqd,bgkd->bgrqk", do_b, vb.astype(jnp.float32))
+            ds = p * (dp - dl_b[..., None])
+            return dq + jnp.einsum("bgrqk,bgkd->bgrqd", ds, kb), None
+
+        dq, _ = jax.lax.scan(
+            kv_step, jnp.zeros((b, kv, rep, qc, d), jnp.float32), (jnp.arange(nk), ks, vs)
+        )
+        return dq * scale
+
+    dqs = jax.lax.map(lambda a: dq_block(*a), (jnp.arange(nq), qs, dout, lse, delta))
+
+    def dkv_block(ik, kb, vb):
+        kb = kb.astype(jnp.float32)
+        vb = vb.astype(jnp.float32)
+
+        def q_step(carry, inp):
+            iq, qb, do_b, lse_b, dl_b = inp
+            qb = qb.astype(jnp.float32) * scale
+            dk, dv = carry
+            s = jnp.einsum("bgrqd,bgkd->bgrqk", qb, kb)
+            mask = _blk_mask(iq, ik, qc, kc, q_off, skv, causal, window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            p = jnp.exp(s - lse_b[..., None])
+            dv = dv + jnp.einsum("bgrqk,bgrqd->bgkd", p, do_b)
+            dp = jnp.einsum("bgrqd,bgkd->bgrqk", do_b, vb)
+            ds = p * (dp - dl_b[..., None])
+            dk = dk + jnp.einsum("bgrqk,bgrqd->bgkd", ds, qb)
+            return (dk, dv), None
+
+        init = (
+            jnp.zeros((b, kv, kc, d), jnp.float32),
+            jnp.zeros((b, kv, kc, dvf), jnp.float32),
+        )
+        # ds/dk = scale*q, and qb already carries the scale: dk is exact
+        (dk, dv), _ = jax.lax.scan(q_step, init, (jnp.arange(nq), qs, dout, lse, delta))
+        return dk, dv
+
+    dks, dvs = jax.lax.map(lambda a: dkv_block(*a), (jnp.arange(nk), ks, vs))
+    return dqs.astype(qs.dtype), dks.astype(ks.dtype), dvs.astype(vs.dtype)
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    window: int = 0,
+) -> jax.Array:
+    """Memory-O(S * chunk) causal attention, custom-VJP flash backward.
+
+    q: (B, Sq, H, D); k/v: (B, Skv, KV, D) with H % KV == 0 (GQA, handled
+    without materialising expanded heads).  q positions align to the end
+    of k (prefill: Sq == Skv).
+    """
+    b, sq, h, d = q.shape
+    dv = v.shape[-1]
+    kv = k.shape[2]
+    rep = h // kv
+    skv = k.shape[1]
+    scale = 1.0 / np.sqrt(d)
+
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, skv)
+    nq, nk = -(-sq // qc), -(-skv // kc)
+    pad_q, pad_k = nq * qc - sq, nk * kc - skv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+
+    # (nq, B, KV, rep, qc, d) / (nk, B, KV, kc, d|dv); input dtype preserved
+    qs = q.reshape(b, nq, qc, kv, rep, d).transpose(1, 0, 3, 4, 2, 5)
+    ks = k.reshape(b, nk, kc, kv, d).transpose(1, 0, 3, 2, 4)
+    vs = v.reshape(b, nk, kc, kv, dv).transpose(1, 0, 3, 2, 4)
+    dims = (skv - sq, skv, bool(causal), int(window), float(scale))
+    outs = _flash_core(qs, ks, vs, dims)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, nq * qc, h, dv)
+    return out[:, :sq].astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    length: jax.Array,
+    *,
+    window: int = 0,
+) -> jax.Array:
+    """Single-step attention over a (possibly longer, masked) KV cache.
+
+    q: (B, 1, H, D); caches: (B, Smax, KV, D); length: () current fill.
+    GQA handled by grouped einsums (no expanded-head or f32 cache copies:
+    the contractions accumulate in f32 via preferred_element_type).
+    """
+    b, _, h, d = q.shape
+    kv = k_cache.shape[2]
+    rep = h // kv
+    smax = k_cache.shape[1]
+    qg = q.reshape(b, kv, rep, d)
+    s = jnp.einsum(
+        "bgrd,bsgd->bgrs", qg, k_cache, preferred_element_type=jnp.float32
+    ) * (1.0 / np.sqrt(d))
+    kpos = jnp.arange(smax)
+    mask = kpos[None, None, None, :] < length
+    if window:
+        mask &= kpos[None, None, None, :] >= length - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bgrs,bsgd->bgrd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def swiglu(x: jax.Array, wgate: jax.Array, wup: jax.Array, wdown: jax.Array,
+           spec: QuantizeSpec = NOQUANT) -> jax.Array:
+    xq = act_q(x, spec)
+    hidden = jax.nn.silu(xq @ wgate) * (xq @ wup)
+    hidden = apply_r4(hidden, spec)  # online R4 before down projection
+    hidden = act_q(hidden, spec)
+    return hidden @ wdown
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, mask: Optional[jax.Array] = None):
+    """Mean token NLL in f32. logits (..., V); labels (...) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,122 @@
+"""Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 style).
+
+Prefill path materialises per-head K/V from the latent (direct form);
+decode path uses the *absorbed* form - queries are projected into the
+latent space so attention runs directly against the cached latent
+``c_kv`` (kv_lora_rank) plus the shared RoPE key, avoiding the per-step
+re-expansion of the whole cache.  The cache is therefore
+(B, S, kv_lora_rank + qk_rope_dim) - MLA's memory win, and the natural
+target for KV quantization (one group per latent vector).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import QuantizeSpec, act_q, apply_rope
+
+
+def init_mla_params(key, cfg: ModelConfig, n_layers: int, dtype) -> Dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    qk_head = cfg.qk_nope_dim + cfg.qk_rope_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "wq_a": common.dense_init(ks[0], (n_layers, d, cfg.q_lora_rank), dtype),
+        "q_norm": jnp.ones((n_layers, cfg.q_lora_rank), dtype),
+        "wq_b": common.dense_init(ks[1], (n_layers, cfg.q_lora_rank, h * qk_head), dtype),
+        "wkv_a": common.dense_init(
+            ks[2], (n_layers, d, cfg.kv_lora_rank + cfg.qk_rope_dim), dtype
+        ),
+        "kv_norm": jnp.ones((n_layers, cfg.kv_lora_rank), dtype),
+        # (rank, H, nope + v): sliced into K-expand and V-expand halves
+        "wkv_b": common.dense_init(
+            ks[3],
+            (n_layers, cfg.kv_lora_rank, h, cfg.qk_nope_dim + cfg.v_head_dim),
+            dtype,
+        ),
+        "wo": common.dense_init(ks[4], (n_layers, h * cfg.v_head_dim, d), dtype),
+    }
+
+
+def _project_q(lp, x, cfg: ModelConfig, positions, spec):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    qk_head = cfg.qk_nope_dim + cfg.qk_rope_dim
+    xq = act_q(x, spec)
+    q_lat = xq @ lp["wq_a"]
+    q_lat = common.rmsnorm(q_lat, lp["q_norm"], cfg.norm_eps)
+    q = (act_q(q_lat, spec) @ lp["wq_b"]).reshape(b, s, h, qk_head)
+    q_nope, q_rope = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim :]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_latent(lp, x, cfg: ModelConfig, positions, spec):
+    xq = act_q(x, spec)
+    kv = xq @ lp["wkv_a"]  # (B, S, rank + rope)
+    c_kv = common.rmsnorm(kv[..., : cfg.kv_lora_rank], lp["kv_norm"], cfg.norm_eps)
+    k_rope = kv[..., cfg.kv_lora_rank :][:, :, None, :]  # shared single head
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    return c_kv, k_rope[:, :, 0, :]
+
+
+def mla_prefill_attention(
+    lp: Dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array, spec: QuantizeSpec
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Direct form. Returns (attn_out (B,S,D), c_kv, k_rope) for caching."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope = _project_q(lp, x, cfg, positions, spec)
+    c_kv, k_rope = _project_latent(lp, x, cfg, positions, spec)
+    kv = jnp.einsum("bsr,rhe->bshe", c_kv, lp["wkv_b"])  # (B,S,H,nope+v)
+    k_nope, v = kv[..., : cfg.qk_nope_dim], kv[..., cfg.qk_nope_dim :]
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, cfg.qk_rope_dim))], -1
+    )
+    out = common.flash_attention(q, k, v, causal=True)  # (B,S,H,v)
+    out = act_q(out.reshape(b, s, h * cfg.v_head_dim), spec)
+    return out @ lp["wo"], c_kv, k_rope
+
+
+def mla_decode_attention(
+    lp: Dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    position: jax.Array,
+    ckv_cache: jax.Array,
+    krope_cache: jax.Array,
+    length: jax.Array,
+    spec: QuantizeSpec,
+) -> jax.Array:
+    """Absorbed form against the latent cache.
+
+    ckv_cache: (B, Smax, rank); krope_cache: (B, Smax, rope).
+    """
+    b = x.shape[0]
+    h = cfg.n_heads
+    positions = jnp.broadcast_to(position, (b, 1))
+    q_nope, q_rope = _project_q(lp, x, cfg, positions, spec)  # (B,1,H,*)
+    # absorb K-expansion into the query: q_lat = q_nope @ W_kvb_K^T
+    wk = lp["wkv_b"][..., : cfg.qk_nope_dim]  # (rank, H, nope)
+    q_lat = jnp.einsum("bqhe,rhe->bqhr", q_nope, wk)  # (B,1,H,rank)
+    s_lat = jnp.einsum("bqhr,bsr->bhqs", q_lat.astype(jnp.float32),
+                       ckv_cache.astype(jnp.float32))
+    s_rope = jnp.einsum("bqhe,bse->bhqs", q_rope.astype(jnp.float32),
+                        krope_cache.astype(jnp.float32))
+    scale = 1.0 / np.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    scores = (s_lat + s_rope) * scale
+    mask = jnp.arange(ckv_cache.shape[1])[None, None, None, :] < length
+    scores = jnp.where(mask, scores, common.NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bhqs,bsr->bqhr", p, ckv_cache.astype(jnp.float32))  # (B,1,H,rank)
+    wv = lp["wkv_b"][..., cfg.qk_nope_dim :]  # (rank, H, v)
+    out = jnp.einsum("bqhr,rhv->bqhv", out_lat.astype(x.dtype), wv)
+    out = act_q(out.reshape(b, 1, h * cfg.v_head_dim), spec)
+    return out @ lp["wo"]

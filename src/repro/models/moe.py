@@ -1,0 +1,185 @@
+"""Mixture-of-Experts layer with sort-based capacity routing.
+
+TPU-native formulation: instead of GShard's one-hot dispatch einsums
+(whose (T, E, C) contractions inflate HLO FLOPs by orders of magnitude),
+tokens are *sorted by expert id* and scattered into a static (E, C, D)
+buffer, the experts run as one batched einsum over the E axis, and results
+scatter back.  All shapes are static; the only data-dependent values are
+the gather/scatter indices, which XLA lowers to dynamic-gather - cheap in
+bytes and zero in MACs, keeping ``cost_analysis`` FLOPs honest for the
+roofline.
+
+Expert parallelism: the (E, ...) axes shard over the model axis (EP).
+Under plain pjit the token scatter/gather becomes GSPMD-inserted
+collectives; an explicit shard_map all-to-all schedule is provided in
+``repro.dist.collectives`` as the optimized variant (§Perf).
+
+Covers both assigned MoE archs:
+  * deepseek-moe-16b: 64 routed top-6 + 2 shared experts, fine-grained
+    (d_expert=1408), softmax gate renormalised over the top-k.
+  * llama4-maverick: 128 routed top-1 + 1 shared expert, sigmoid gate.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import QuantizeSpec, act_q, apply_r4
+
+
+def _pin(x: jax.Array, *spec) -> jax.Array:
+    """Sharding hint, active only under an ambient mesh (pjit lowering).
+
+    Pins the expert-parallel layout of the dispatch/compute buffers:
+    batch on the data axes, experts on the model axis - without this
+    GSPMD tends to replicate the E axis of the (B, E, cap, D) buffers.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jax.sharding.get_abstract_mesh()
+    if getattr(mesh, "empty", True) or "model" not in mesh.axis_names:
+        return x
+    dp = tuple(n for n in mesh.axis_names if n != "model")
+    dp_ax = dp if len(dp) > 1 else dp[0]
+    parts = [dp_ax if a == "data" else ("model" if a == "model" else None)
+             for a in spec]
+    # drop non-divisible placements (mirrors dist.sharding.sanitize_pspecs)
+    sizes = dict(zip(mesh.axis_names, mesh.shape_tuple if hasattr(mesh, "shape_tuple")
+                     else tuple(mesh.shape.values())))
+    import numpy as _np
+
+    total = lambda ax: int(_np.prod([sizes[a] for a in (ax if isinstance(ax, tuple) else (ax,))]))
+    parts = [a if (a is None or x.shape[i] % total(a) == 0) else None
+             for i, a in enumerate(parts)]
+    return jax.lax.with_sharding_constraint(x, P(*parts))
+
+
+def init_moe_params(key, cfg: ModelConfig, n_layers: int, dtype) -> Dict:
+    de = cfg.d_expert or cfg.d_ff
+    d = cfg.d_model
+    e = cfg.n_experts
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": common.dense_init(ks[0], (n_layers, d, e), dtype),
+        "w_gate": common.dense_init(ks[1], (n_layers, e, d, de), dtype),
+        "w_up": common.dense_init(ks[2], (n_layers, e, d, de), dtype),
+        "w_down": common.dense_init(ks[3], (n_layers, e, de, d), dtype),
+    }
+    if cfg.n_shared_experts:
+        ds = de * cfg.n_shared_experts
+        p["shared_gate"] = common.dense_init(ks[4], (n_layers, d, ds), dtype)
+        p["shared_up"] = common.dense_init(ks[5], (n_layers, d, ds), dtype)
+        p["shared_down"] = common.dense_init(ks[6], (n_layers, ds, d), dtype)
+    return p
+
+
+def capacity(cfg: ModelConfig, tokens: int) -> int:
+    c = int(np.ceil(tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
+    return max(c, 1)
+
+
+def moe_apply(lp: Dict, x: jax.Array, cfg: ModelConfig, spec: QuantizeSpec = common.NOQUANT
+              ) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D). lp holds one layer's (un-stacked) params.
+
+    Routing is *grouped per sequence* (the GShard group concept): every
+    argsort/gather/scatter carries an explicit leading B axis, so under
+    pjit with batch-sharded activations the index ops stay shard-local -
+    a globally-flattened dispatch would make GSPMD all-gather the entire
+    (B*S, D) token tensor per layer (measured: 108 GiB peak on
+    deepseek-moe prefill; see EXPERIMENTS.md §Perf).  The only cross-shard
+    movement left is the activation-sized expert all-to-all implied by
+    the (B, E, cap, D) <-> expert-sharded einsums.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+
+    # Sequence-chunked dispatch: the (B, E, cap, D) buffer is ~k*cf x the
+    # activation volume (top-6 tokens visit 6 experts), so long prefills
+    # process the MoE in 4k-token chunks under lax.scan - same routing,
+    # 1/nc the live dispatch memory (EXPERIMENTS.md §Perf cell B).
+    chunk = 4096
+    if s > chunk and s % chunk == 0:
+        nc = s // chunk
+        xs = x.reshape(b, nc, chunk, d).swapaxes(0, 1)  # (nc, B, c, D)
+
+        def chunk_fn(_, xc):
+            return None, moe_apply(lp, xc, cfg, spec)
+
+        _, ys = jax.lax.scan(chunk_fn, None, xs)
+        return ys.swapaxes(0, 1).reshape(b, s, d)
+
+    cap = capacity(cfg, s)  # per-sequence capacity (k <= cap by construction)
+    xq = act_q(x, spec)  # (B, S, D)
+
+    # --- routing (per sequence) ---
+    logits = xq.astype(jnp.float32) @ lp["router"].astype(jnp.float32)  # (B,S,E)
+    if cfg.top_k == 1:  # llama4-style sigmoid gate
+        gates_all = jax.nn.sigmoid(logits)
+    else:
+        gates_all = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(gates_all, k)  # (B, S, k)
+    if cfg.top_k > 1:  # deepseek: renormalise over selected experts
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # --- sort token-assignments by expert, within each sequence ---
+    sk = s * k
+    eid = idx.reshape(b, sk)
+    tid = jnp.broadcast_to(jnp.repeat(jnp.arange(s), k)[None], (b, sk))
+    order = jnp.argsort(eid, axis=1)  # stable per row
+    take = lambda a: jnp.take_along_axis(a, order, axis=1)
+    es, ts, gs = take(eid), take(tid), take(gates.reshape(b, sk))
+    # segment starts via searchsorted on the sorted expert ids
+    seg_start = jax.vmap(lambda row: jnp.searchsorted(row, jnp.arange(e)))(es)
+    rank = jnp.arange(sk)[None, :] - jnp.take_along_axis(seg_start, es, axis=1)
+    keep = rank < cap
+    slot = jnp.where(keep, es * cap + rank, e * cap)  # overflow -> waste row
+
+    # --- dispatch (scatter into per-sequence expert-major buffer) ---
+    x_sel = jnp.take_along_axis(xq, ts[..., None], axis=1)  # (B, S*k, D)
+
+    def scatter_row(slots, vals):
+        return jnp.zeros((e * cap + 1, d), vals.dtype).at[slots].set(vals)
+
+    xe = jax.vmap(scatter_row)(slot, x_sel)[:, : e * cap].reshape(b, e, cap, d)
+    xe = _pin(xe, "data", "model", None, None)  # the expert all-to-all
+
+    # --- expert computation (batched over B and E; MXU einsums) ---
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, lp["w_gate"])) * jnp.einsum(
+        "becd,edf->becf", xe, lp["w_up"]
+    )
+    h = apply_r4(h, spec)
+    h = act_q(h, spec)
+    ye = jnp.einsum("becf,efd->becd", h, lp["w_down"])  # (B, E, cap, D)
+    ye = _pin(ye, "data", "model", None, None)
+
+    # --- combine (gather back, weight, unsort-scatter-add per sequence) ---
+    ybuf = jnp.concatenate(
+        [ye.reshape(b, e * cap, d), jnp.zeros((b, 1, d), ye.dtype)], axis=1
+    )
+    y_assign = jnp.take_along_axis(ybuf, slot[..., None], axis=1)
+    y_assign = y_assign * (gs * keep)[..., None]
+
+    def combine_row(t_idx, vals):
+        return jnp.zeros((s, d), vals.dtype).at[t_idx].add(vals)
+
+    y = jax.vmap(combine_row)(ts, y_assign)  # (B, S, D)
+
+    # --- shared experts (always-on dense path) ---
+    if cfg.n_shared_experts:
+        hs = jax.nn.silu(xq @ lp["shared_gate"]) * (xq @ lp["shared_up"])
+        hs = apply_r4(hs, spec)
+        hs = act_q(hs, spec)
+        y = y + hs @ lp["shared_down"]
+    return y.reshape(b, s, d).astype(x.dtype)
+
+
+def moe_aux_loss(logits_mean_prob: jax.Array, counts_frac: jax.Array) -> jax.Array:
+    """Standard load-balancing auxiliary loss (Switch): E * <f, p>."""
+    e = logits_mean_prob.shape[-1]
+    return e * jnp.sum(logits_mean_prob * counts_frac)

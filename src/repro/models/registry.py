@@ -1,0 +1,147 @@
+"""Architecture registry: uniform API over all model families.
+
+``get_arch(name)`` -> :class:`Arch` bundling config + init/forward/prefill/
+decode + ShapeDtypeStruct input specs for the dry-run.  The ``--arch``
+flag of every launcher resolves through here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.common import NOQUANT, QuantizeSpec
+
+ARCH_IDS = [
+    "deepseek-moe-16b",
+    "llama4-maverick-400b-a17b",
+    "internvl2-2b",
+    "minicpm3-4b",
+    "qwen1.5-4b",
+    "smollm-135m",
+    "deepseek-7b",
+    "xlstm-1.3b",
+    "zamba2-1.2b",
+    "musicgen-medium",
+    # the paper's own evaluation model
+    "llama2-7b",
+]
+
+_MODULE_FOR_ID = {i: i.replace("-", "_").replace(".", "_") for i in ARCH_IDS}
+
+
+@dataclasses.dataclass
+class Arch:
+    config: ModelConfig
+    init: Callable  # (key, dtype) -> params
+    forward: Callable  # (params, batch, spec, remat=) -> logits
+    prefill: Callable  # (params, batch, cache, spec) -> (logits, cache)
+    decode: Callable  # (params, tokens, cache, spec) -> (logits, cache)
+    init_cache: Callable  # (batch, max_seq, spec, dtype) -> cache pytree
+
+    # ------------------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig, *, per_device_batch: Optional[int] = None
+                    ) -> Dict:
+        """ShapeDtypeStruct stand-ins for the step inputs (no allocation).
+
+        For train/prefill: the token batch.  For decode: one new token per
+        sequence (the KV/state cache spec comes from ``cache_specs``).
+        Modality frontends are stubs: vlm supplies precomputed patch
+        embeddings, audio supplies EnCodec token ids (K codebooks).
+        """
+        cfg = self.config
+        b = per_device_batch or shape.global_batch
+        tok = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+        if shape.kind == "decode":
+            if cfg.modality == "audio":
+                return {"tokens": tok(b, cfg.n_codebooks)}
+            return {"tokens": tok(b)}
+        s = shape.seq_len
+        if cfg.modality == "audio":
+            batch = {"tokens": tok(b, s, cfg.n_codebooks)}
+        else:
+            batch = {"tokens": tok(b, s)}
+        if cfg.modality == "vlm":
+            batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_patches, cfg.d_model), jnp.bfloat16
+            )
+        return batch
+
+    def param_specs(self, dtype=jnp.bfloat16):
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        return jax.eval_shape(lambda k: self.init(k, dtype), key)
+
+    def cache_specs(self, batch: int, max_seq: int, spec: QuantizeSpec = NOQUANT,
+                    dtype=jnp.bfloat16):
+        return jax.eval_shape(lambda: self.init_cache(batch, max_seq, spec, dtype))
+
+
+def _build_transformer(cfg: ModelConfig) -> Arch:
+    from repro.models import transformer as t
+
+    return Arch(
+        config=cfg,
+        init=lambda key, dtype=jnp.float32: t.init_params(cfg, key, dtype),
+        forward=lambda p, b, spec=NOQUANT, **kw: t.forward(cfg, p, b, spec, **kw),
+        prefill=lambda p, b, c, spec=NOQUANT: t.prefill(cfg, p, b, c, spec),
+        decode=lambda p, tok, c, spec=NOQUANT: t.decode(cfg, p, tok, c, spec),
+        init_cache=lambda batch, max_seq, spec=NOQUANT, dtype=jnp.bfloat16: t.init_cache(
+            cfg, batch, max_seq, spec, dtype
+        ),
+    )
+
+
+def _build_xlstm(cfg: ModelConfig) -> Arch:
+    from repro.models import xlstm as x
+
+    return Arch(
+        config=cfg,
+        init=lambda key, dtype=jnp.float32: x.init_params(cfg, key, dtype),
+        forward=lambda p, b, spec=NOQUANT, **kw: x.forward(cfg, p, b, spec, **kw),
+        prefill=lambda p, b, c, spec=NOQUANT: x.prefill(cfg, p, b, c, spec),
+        decode=lambda p, tok, c, spec=NOQUANT: x.decode(cfg, p, tok, c, spec),
+        init_cache=lambda batch, max_seq, spec=NOQUANT, dtype=jnp.bfloat16: x.init_state(
+            cfg, batch
+        ),
+    )
+
+
+def _build_zamba(cfg: ModelConfig) -> Arch:
+    from repro.models import zamba as z
+
+    return Arch(
+        config=cfg,
+        init=lambda key, dtype=jnp.float32: z.init_params(cfg, key, dtype),
+        forward=lambda p, b, spec=NOQUANT, **kw: z.forward(cfg, p, b, spec, **kw),
+        prefill=lambda p, b, c, spec=NOQUANT: z.prefill(cfg, p, b, c, spec),
+        decode=lambda p, tok, c, spec=NOQUANT: z.decode(cfg, p, tok, c, spec),
+        init_cache=lambda batch, max_seq, spec=NOQUANT, dtype=jnp.bfloat16: z.init_state(
+            cfg, batch, max_seq, dtype
+        ),
+    )
+
+
+def build_arch(cfg: ModelConfig) -> Arch:
+    if cfg.family == "ssm":
+        return _build_xlstm(cfg)
+    if cfg.family == "hybrid":
+        return _build_zamba(cfg)
+    return _build_transformer(cfg)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULE_FOR_ID:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULE_FOR_ID[name]}")
+    return mod.CONFIG
+
+
+def get_arch(name: str, *, reduced: bool = False) -> Arch:
+    cfg = get_config(name)
+    if reduced:
+        cfg = cfg.reduced()
+    return build_arch(cfg)

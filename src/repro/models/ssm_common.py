@@ -1,0 +1,159 @@
+"""Chunkwise-parallel linear attention with per-step scalar decay.
+
+One engine serves both recurrent families:
+
+  * mLSTM (xLSTM): matrix memory C += i_t * v_t k_t^T with forget decay,
+    normalizer n, output C q / max(|n.q|, 1).
+  * Mamba2 (SSD): state S = a_t S + (dt_t x_t) B_t^T, output C_t . S,
+    no normalizer (decay/input magnitudes live in a_t and v_t).
+
+Within a chunk of P steps everything is a masked (P, P) matmul against a
+decay matrix (MXU-shaped); across chunks a small (dk, dv) state is carried
+by ``lax.scan``.  This is the standard chunkwise scan used by production
+linear-attention kernels, in pure JAX; wall-clock-critical deployments
+would move the intra-chunk matmuls into a Pallas kernel, but the HLO here
+is already matmul-dominated.
+
+Numerics: decays are handled in log space; log_f <= 0 (sigmoid-derived)
+keeps every exp() argument non-positive, so no running-max stabilizer is
+needed (see DESIGN.md on the omitted xLSTM m-stabilizer).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_linear_attention(
+    q: jax.Array,  # (B, S, H, dk)
+    k: jax.Array,  # (B, S, H, dk)
+    v: jax.Array,  # (B, S, H, dv)
+    log_f: jax.Array,  # (B, S, H) per-step log forget decay (<= 0)
+    log_i: jax.Array,  # (B, S, H) per-step log input gate (<= 0 for stability)
+    *,
+    chunk: int = 128,
+    normalize: bool = False,
+    state: Optional[Tuple[jax.Array, jax.Array]] = None,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Returns (y (B,S,H,dv), (state (B,H,dk,dv), norm (B,H,dk)))."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    p = min(chunk, s)
+    pad = (-s) % p
+    if pad:
+        zf = lambda x: jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+        q, k, v, log_f = zf(q), zf(k), zf(v), zf(log_f)
+        # padded steps: forget 0 (keep state), input -inf (no contribution)
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+    sp = q.shape[1]
+    nc = sp // p
+
+    def to_chunks(x):
+        return x.reshape(b, nc, p, *x.shape[2:]).swapaxes(0, 1)  # (nc, B, P, ...)
+
+    qs, ks, vs, lfs, lis = map(to_chunks, (q, k, v, log_f, log_i))
+
+    if state is None:
+        s0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+        n0 = jnp.zeros((b, h, dk), jnp.float32)
+    else:
+        s0, n0 = state
+
+    idx = jnp.arange(p)
+    causal = idx[:, None] >= idx[None, :]
+
+    def chunk_step(carry, xs):
+        st, nt = carry
+        qc, kc, vc, lf, li = xs  # (B,P,H,*) / (B,P,H)
+        qc = qc.astype(jnp.float32)
+        kc = kc.astype(jnp.float32)
+        vc = vc.astype(jnp.float32)
+        a = jnp.cumsum(lf, axis=1)  # (B,P,H) inclusive log-decay prefix
+        # intra-chunk decay matrix: exp(a_i - a_j + li_j), j <= i
+        expo = a[:, :, None, :] - a[:, None, :, :] + li[:, None, :, :]
+        dmat = jnp.where(causal[None, :, :, None], jnp.exp(jnp.minimum(expo, 0.0)), 0.0)
+        scores = jnp.einsum("bihd,bjhd->bijh", qc, kc) * dmat  # (B,P,P,H)
+        y_intra = jnp.einsum("bijh,bjhe->bihe", scores, vc)
+        # inter-chunk from carried state
+        qdec = qc * jnp.exp(a)[..., None]
+        y_inter = jnp.einsum("bihd,bhde->bihe", qdec, st)
+        y = y_intra + y_inter
+        if normalize:
+            denom_intra = scores.sum(axis=2)  # (B,P,H): sum_j D_ij q_i.k_j
+            denom_inter = jnp.einsum("bihd,bhd->bih", qdec, nt)
+            denom = jnp.abs(denom_intra + denom_inter)
+            y = y / jnp.maximum(denom, 1.0)[..., None]
+        # state update
+        a_last = a[:, -1, :]  # (B,H)
+        wk = jnp.exp(jnp.minimum(a_last[:, None, :] - a + li, 0.0))  # (B,P,H)
+        st_new = st * jnp.exp(a_last)[:, :, None, None] + jnp.einsum(
+            "bjhd,bjh,bjhe->bhde", kc, wk, vc
+        )
+        nt_new = nt * jnp.exp(a_last)[:, :, None] + jnp.einsum("bjhd,bjh->bhd", kc, wk)
+        return (st_new, nt_new), y
+
+    (sf, nf), ys = jax.lax.scan(chunk_step, (s0, n0), (qs, ks, vs, lfs, lis))
+    y = ys.swapaxes(0, 1).reshape(b, sp, h, dv)[:, :s]
+    return y.astype(q.dtype), (sf, nf)
+
+
+def linear_attention_step(
+    q: jax.Array,  # (B, H, dk)
+    k: jax.Array,
+    v: jax.Array,  # (B, H, dv)
+    log_f: jax.Array,  # (B, H)
+    log_i: jax.Array,
+    state: Tuple[jax.Array, jax.Array],
+    *,
+    normalize: bool = False,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Single recurrent step (decode path); same numerics as chunked form."""
+    st, nt = state
+    f = jnp.exp(log_f.astype(jnp.float32))[..., None]
+    i = jnp.exp(jnp.minimum(log_i.astype(jnp.float32), 0.0))[..., None]
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    st_new = st * f[..., None] + (kf * i)[..., :, None] * vf[..., None, :]
+    nt_new = nt * f + kf * i
+    qf = q.astype(jnp.float32)
+    y = jnp.einsum("bhd,bhde->bhe", qf, st_new)
+    if normalize:
+        denom = jnp.abs(jnp.einsum("bhd,bhd->bh", qf, nt_new))
+        y = y / jnp.maximum(denom, 1.0)[..., None]
+    return y.astype(q.dtype), (st_new, nt_new)
+
+
+def linear_attention_sequential(q, k, v, log_f, log_i, *, normalize=False, state=None):
+    """Step-by-step oracle for testing the chunked form."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    if state is None:
+        state = (
+            jnp.zeros((b, h, dk, dv), jnp.float32),
+            jnp.zeros((b, h, dk), jnp.float32),
+        )
+
+    def step(carry, xs):
+        qt, kt, vt, lft, lit = xs
+        y, carry = linear_attention_step(qt, kt, vt, lft, lit, carry, normalize=normalize)
+        return carry, y
+
+    xs = tuple(x.swapaxes(0, 1) for x in (q, k, v, log_f, log_i))
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.swapaxes(0, 1), state
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, *, state: Optional[jax.Array] = None):
+    """Depthwise causal conv along S. x: (B, S, C); w: (W, C).
+
+    Returns (y, new_state) where state holds the last W-1 inputs (decode).
+    """
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(width))
+    new_state = xp[:, -(width - 1) :, :] if width > 1 else state
+    return jax.nn.silu(y), new_state

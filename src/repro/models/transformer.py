@@ -1,0 +1,541 @@
+"""Unified decoder for the dense / MoE / MLA transformer families.
+
+Covers 8 of the 10 assigned archs (all but xLSTM and Zamba2):
+dense (smollm, deepseek-7b, qwen1.5), MoE (deepseek-moe, llama4-maverick),
+MLA (minicpm3), VLM backbone (internvl2, patch-embed prefix stub), audio
+(musicgen, K-codebook token stub).
+
+Layers are stacked on a leading L axis and run under ``lax.scan``
+(compile-time O(1) in depth).  Three entry points:
+
+  * ``forward``  - full-sequence training forward (flash attention).
+  * ``prefill``  - forward + populate a KV cache.
+  * ``decode``   - one token against the cache (quantized KV supported).
+
+Every GEMM input runs through the QuantizeSpec activation hook, and the
+R4 online rotation sits before each down projection, so the same code
+serves fp, W2A16, and W2A4 evaluation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import common, mla as mla_mod, moe as moe_mod
+from repro.models.common import NOQUANT, QuantizeSpec, act_q, apply_r3, apply_rope, rmsnorm
+from repro.quant.qtypes import QuantConfig
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> Dict:
+    l, d, v = cfg.n_layers, cfg.d_model, cfg.vocab
+    hd = cfg.hd
+    keys = jax.random.split(key, 16)
+    if cfg.modality == "audio":
+        embed = common.embed_init(keys[0], (cfg.n_codebooks, v, d), dtype)
+        lm_head = common.dense_init(keys[1], (cfg.n_codebooks, d, v), dtype)
+    else:
+        embed = common.embed_init(keys[0], (v, d), dtype)
+        lm_head = common.dense_init(keys[1], (d, v), dtype)
+    layers: Dict = {
+        "attn_norm": jnp.ones((l, d), dtype),
+        "mlp_norm": jnp.ones((l, d), dtype),
+    }
+    if cfg.family == "mla":
+        layers.update(mla_mod.init_mla_params(keys[2], cfg, l, dtype))
+    else:
+        layers.update(
+            {
+                "wq": common.dense_init(keys[2], (l, d, cfg.n_heads * hd), dtype),
+                "wk": common.dense_init(keys[3], (l, d, cfg.n_kv_heads * hd), dtype),
+                "wv": common.dense_init(keys[4], (l, d, cfg.n_kv_heads * hd), dtype),
+                "wo": common.dense_init(keys[5], (l, cfg.n_heads * hd, d), dtype),
+            }
+        )
+        if cfg.qkv_bias:
+            layers["bq"] = jnp.zeros((l, cfg.n_heads * hd), dtype)
+            layers["bk"] = jnp.zeros((l, cfg.n_kv_heads * hd), dtype)
+            layers["bv"] = jnp.zeros((l, cfg.n_kv_heads * hd), dtype)
+    if cfg.family == "moe" and cfg.moe_every == 1:
+        layers.update(moe_mod.init_moe_params(keys[6], cfg, l, dtype))
+    elif cfg.family == "moe":
+        # Interleaved (llama4-style): groups of (moe_every-1 dense + 1 MoE).
+        every = cfg.moe_every
+        assert l % every == 0, f"n_layers {l} % moe_every {every} != 0"
+        g = l // every
+        layers = jax.tree.map(lambda a: a.reshape(g, every, *a.shape[1:]), layers)
+        layers["dense_mlp"] = {
+            "w_gate": common.dense_init(keys[7], (g, every - 1, d, cfg.d_ff), dtype),
+            "w_up": common.dense_init(keys[8], (g, every - 1, d, cfg.d_ff), dtype),
+            "w_down": common.dense_init(keys[9], (g, every - 1, cfg.d_ff, d), dtype),
+        }
+        layers["moe_mlp"] = moe_mod.init_moe_params(keys[6], cfg, g, dtype)
+    else:
+        layers.update(
+            {
+                "w_gate": common.dense_init(keys[7], (l, d, cfg.d_ff), dtype),
+                "w_up": common.dense_init(keys[8], (l, d, cfg.d_ff), dtype),
+                "w_down": common.dense_init(keys[9], (l, cfg.d_ff, d), dtype),
+            }
+        )
+    params = {
+        "embed": embed,
+        "layers": layers,
+        "final_norm": jnp.ones((d,), dtype),
+        "lm_head": lm_head,
+    }
+    if cfg.modality == "vlm":
+        # Identity projection for the (precomputed) patch embeddings; exists
+        # so R1 rotation has a weight to fuse into on the vision prefix.
+        params["patch_proj"] = jnp.eye(d, dtype=dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(cfg: ModelConfig, params: Dict, batch: Dict) -> jax.Array:
+    """-> h (B, S_total, D)."""
+    if cfg.modality == "audio":
+        toks = batch["tokens"]  # (B, S, K)
+        parts = [jnp.take(params["embed"][k], toks[..., k], axis=0)
+                 for k in range(cfg.n_codebooks)]
+        h = sum(parts)
+    else:
+        h = jnp.take(params["embed"], batch["tokens"], axis=0)  # (B, S, D)
+    if cfg.modality == "vlm" and "patch_embeds" in batch:
+        # Vision prefix (absent on decode steps, which extend the text).
+        pe = batch["patch_embeds"] @ params["patch_proj"]
+        h = jnp.concatenate([pe.astype(h.dtype), h], axis=1)
+    return h
+
+
+def lm_logits(cfg: ModelConfig, params: Dict, h: jax.Array, spec: QuantizeSpec) -> jax.Array:
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    h = act_q(h, spec)
+    if cfg.modality == "audio":
+        return jnp.einsum("bsd,kdv->bskv", h, params["lm_head"])
+    return h @ params["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _qkv(cfg: ModelConfig, lp: Dict, x: jax.Array, positions, spec: QuantizeSpec):
+    b, s, _ = x.shape
+    hd = cfg.hd
+    xq = act_q(x, spec)
+    q = xq @ lp["wq"]
+    k = xq @ lp["wk"]
+    v = xq @ lp["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q, k = apply_r3(q, k, spec)
+    return q, k, v
+
+
+def attn_block_train(cfg, lp, h, positions, spec) -> jax.Array:
+    x = rmsnorm(h, lp["attn_norm"], cfg.norm_eps)
+    if cfg.family == "mla":
+        out, _, _ = mla_mod.mla_prefill_attention(lp, x, cfg, positions, spec)
+        return h + out
+    q, k, v = _qkv(cfg, lp, x, positions, spec)
+    attn = common.flash_attention(q, k, v, causal=True, window=cfg.sliding_window)
+    b, s = x.shape[:2]
+    attn = act_q(attn.reshape(b, s, cfg.n_heads * cfg.hd), spec)
+    return h + attn @ lp["wo"]
+
+
+def mlp_block(cfg, lp, h, spec, kind: Optional[str] = None) -> jax.Array:
+    kind = kind or ("moe" if cfg.family == "moe" else "dense")
+    x = rmsnorm(h, lp["mlp_norm"], cfg.norm_eps)
+    if kind == "moe":
+        return h + moe_mod.moe_apply(lp, x, cfg, spec)
+    return h + common.swiglu(x, lp["w_gate"], lp["w_up"], lp["w_down"], spec)
+
+
+def _interleaved(cfg) -> bool:
+    return cfg.family == "moe" and cfg.moe_every > 1
+
+
+def _group_slices(cfg, layers_grp):
+    """Per-group param dicts: [(lp, kind), ...] of length moe_every.
+
+    layers_grp: one group's slice - attn keys (every, ...), dense_mlp
+    (every-1, ...), moe_mlp (flat).  Static python unroll (moe_every <= 4).
+    """
+    every = cfg.moe_every
+    attn_keys = [k for k in layers_grp if k not in ("dense_mlp", "moe_mlp")]
+    out = []
+    for j in range(every - 1):
+        lp = {k: layers_grp[k][j] for k in attn_keys}
+        lp.update({k: v[j] for k, v in layers_grp["dense_mlp"].items()})
+        out.append((lp, "dense"))
+    lp = {k: layers_grp[k][every - 1] for k in attn_keys}
+    lp.update(layers_grp["moe_mlp"])
+    out.append((lp, "moe"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Training forward
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Dict,
+    batch: Dict,
+    spec: QuantizeSpec = NOQUANT,
+    *,
+    remat: bool = True,
+    capture: bool = False,
+    return_hidden: bool = False,
+) -> jax.Array | Tuple[jax.Array, Dict]:
+    """Full-sequence logits. With capture=True also returns per-layer
+    post-norm activations (calibration inputs for GPTQ Hessians).
+    return_hidden=True returns the final-norm hidden states instead of
+    logits (the chunked-loss path never materialises full f32 logits)."""
+    h = embed_inputs(cfg, params, batch)
+    b, s, _ = h.shape
+    positions = jnp.arange(s)[None, :]
+
+    if _interleaved(cfg):
+        assert not capture, "calibration capture unsupported for interleaved MoE"
+
+        def group_fn(h, grp):
+            for lp, kind in _group_slices(cfg, grp):
+                h = attn_block_train(cfg, lp, h, positions, spec)
+                h = mlp_block(cfg, lp, h, spec, kind=kind)
+            return h, None
+
+        f = group_fn
+        if remat:
+            f = jax.checkpoint(group_fn, policy=jax.checkpoint_policies.nothing_saveable)
+        h, caps = jax.lax.scan(f, h, params["layers"])
+        if return_hidden:
+            return act_q(rmsnorm(h, params["final_norm"], cfg.norm_eps), spec)
+        return lm_logits(cfg, params, h, spec)
+
+    def layer_fn(h, lp):
+        h = attn_block_train(cfg, lp, h, positions, spec)
+        h = mlp_block(cfg, lp, h, spec)
+        caps = None
+        if capture:
+            caps = {
+                "attn_in": rmsnorm(h, lp["attn_norm"], cfg.norm_eps),
+                "mlp_in": rmsnorm(h, lp["mlp_norm"], cfg.norm_eps),
+            }
+        return h, caps
+
+    f = layer_fn
+    if remat and not capture:
+        f = jax.checkpoint(layer_fn, policy=jax.checkpoint_policies.nothing_saveable)
+    h, caps = jax.lax.scan(f, h, params["layers"])
+    if return_hidden:
+        return act_q(rmsnorm(h, params["final_norm"], cfg.norm_eps), spec)
+    logits = lm_logits(cfg, params, h, spec)
+    if capture:
+        return logits, caps
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# KV cache (stacked over layers; quantized storage supported)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, spec: QuantizeSpec,
+               dtype=jnp.bfloat16) -> Dict:
+    l = cfg.n_layers
+    kvq = spec.kv_bits < 16
+    code_dtype = jnp.uint8 if kvq else dtype
+    if cfg.family == "mla":
+        rank, rope = cfg.kv_lora_rank, cfg.qk_rope_dim
+        cache = {
+            "ckv": jnp.zeros((l, batch, max_seq, rank), code_dtype),
+            "krope": jnp.zeros((l, batch, max_seq, rope), dtype),  # rope kept hi-prec
+        }
+        if kvq:
+            cache["ckv_scale"] = jnp.zeros((l, batch, max_seq), jnp.float32)
+            cache["ckv_zero"] = jnp.zeros((l, batch, max_seq), jnp.float32)
+    else:
+        kv, hd = cfg.n_kv_heads, cfg.hd
+        cache = {
+            "k": jnp.zeros((l, batch, max_seq, kv, hd), code_dtype),
+            "v": jnp.zeros((l, batch, max_seq, kv, hd), code_dtype),
+        }
+        if kvq:
+            cache.update(
+                k_scale=jnp.zeros((l, batch, max_seq, kv), jnp.float32),
+                k_zero=jnp.zeros((l, batch, max_seq, kv), jnp.float32),
+                v_scale=jnp.zeros((l, batch, max_seq, kv), jnp.float32),
+                v_zero=jnp.zeros((l, batch, max_seq, kv), jnp.float32),
+            )
+    cache["length"] = jnp.zeros((), jnp.int32)
+    return cache
+
+
+def _kv_cfg(spec: QuantizeSpec) -> QuantConfig:
+    return QuantConfig(bits=spec.kv_bits, group=10**9, symmetric=False)
+
+
+def _quant_tokens(x: jax.Array, spec: QuantizeSpec):
+    """x (..., D_group) -> codes, scale, zero (one group per vector)."""
+    from repro.quant import rtn
+
+    cfg = _kv_cfg(spec)
+    xf = x.astype(jnp.float32)
+    scale, zero = rtn.compute_qparams(xf, cfg)
+    codes = rtn.quantize(xf, scale[..., None], zero[..., None], cfg).astype(jnp.uint8)
+    return codes, scale, zero
+
+
+def _dequant_tokens(codes, scale, zero, dtype):
+    return ((codes.astype(jnp.float32) - zero[..., None]) * scale[..., None]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _prefill_std_layer(cfg, lp, lc, h, positions, spec, kvq, b, s):
+    """Standard-attention prefill layer body (shared by both layouts)."""
+    x = rmsnorm(h, lp["attn_norm"], cfg.norm_eps)
+    q, k, v = _qkv(cfg, lp, x, positions, spec)
+    attn = common.flash_attention(q, k, v, causal=True, window=cfg.sliding_window)
+    attn = act_q(attn.reshape(b, s, cfg.n_heads * cfg.hd), spec)
+    h = h + attn @ lp["wo"]
+    if kvq:
+        kc, ks_, kz = _quant_tokens(k, spec)
+        vc, vs_, vz = _quant_tokens(v, spec)
+        lc = dict(lc, k=_store(lc["k"], kc, s), v=_store(lc["v"], vc, s),
+                  k_scale=_store(lc["k_scale"], ks_, s), k_zero=_store(lc["k_zero"], kz, s),
+                  v_scale=_store(lc["v_scale"], vs_, s), v_zero=_store(lc["v_zero"], vz, s))
+    else:
+        lc = dict(lc, k=_store(lc["k"], k.astype(lc["k"].dtype), s),
+                  v=_store(lc["v"], v.astype(lc["v"].dtype), s))
+    return h, lc
+
+
+def prefill(cfg: ModelConfig, params: Dict, batch: Dict, cache: Dict,
+            spec: QuantizeSpec = NOQUANT) -> Tuple[jax.Array, Dict]:
+    """Run the full prompt, returning last-position logits + filled cache."""
+    h = embed_inputs(cfg, params, batch)
+    b, s, _ = h.shape
+    positions = jnp.arange(s)[None, :]
+    kvq = spec.kv_bits < 16
+    layer_caches = {k: v for k, v in cache.items() if k != "length"}
+
+    if _interleaved(cfg):
+        every = cfg.moe_every
+        g = cfg.n_layers // every
+        grp_caches = jax.tree.map(
+            lambda a: a.reshape(g, every, *a.shape[1:]), layer_caches
+        )
+
+        def group_fn(h, xs):
+            grp, gc = xs
+            new_slices = []
+            for j, (lp, kind) in enumerate(_group_slices(cfg, grp)):
+                lc = jax.tree.map(lambda a: a[j], gc)
+                h, lc = _prefill_std_layer(cfg, lp, lc, h, positions, spec, kvq, b, s)
+                h = mlp_block(cfg, lp, h, spec, kind=kind)
+                new_slices.append(lc)
+            gc2 = jax.tree.map(lambda *xs2: jnp.stack(xs2), *new_slices)
+            return h, gc2
+
+        h, new_grp = jax.lax.scan(group_fn, h, (params["layers"], grp_caches))
+        new_caches = jax.tree.map(lambda a: a.reshape(-1, *a.shape[2:]), new_grp)
+        logits = lm_logits(cfg, params, h[:, -1:], spec)
+        new_caches["length"] = jnp.asarray(s, jnp.int32)
+        return logits, new_caches
+
+    def layer_fn(h, xs):
+        lp, lc = xs
+        x = rmsnorm(h, lp["attn_norm"], cfg.norm_eps)
+        if cfg.family == "mla":
+            out, ckv, krope = mla_mod.mla_prefill_attention(lp, x, cfg, positions, spec)
+            h = h + out
+            if kvq:
+                codes, scale, zero = _quant_tokens(ckv, spec)
+                lc = dict(lc, ckv=_store(lc["ckv"], codes, s), ckv_scale=_store(lc["ckv_scale"], scale, s),
+                          ckv_zero=_store(lc["ckv_zero"], zero, s), krope=_store(lc["krope"], krope.astype(lc["krope"].dtype), s))
+            else:
+                lc = dict(lc, ckv=_store(lc["ckv"], ckv.astype(lc["ckv"].dtype), s),
+                          krope=_store(lc["krope"], krope.astype(lc["krope"].dtype), s))
+        else:
+            q, k, v = _qkv(cfg, lp, x, positions, spec)
+            attn = common.flash_attention(q, k, v, causal=True, window=cfg.sliding_window)
+            attn = act_q(attn.reshape(b, s, cfg.n_heads * cfg.hd), spec)
+            h = h + attn @ lp["wo"]
+            if kvq:
+                kc, ks_, kz = _quant_tokens(k, spec)
+                vc, vs_, vz = _quant_tokens(v, spec)
+                lc = dict(lc, k=_store(lc["k"], kc, s), v=_store(lc["v"], vc, s),
+                          k_scale=_store(lc["k_scale"], ks_, s), k_zero=_store(lc["k_zero"], kz, s),
+                          v_scale=_store(lc["v_scale"], vs_, s), v_zero=_store(lc["v_zero"], vz, s))
+            else:
+                lc = dict(lc, k=_store(lc["k"], k.astype(lc["k"].dtype), s),
+                          v=_store(lc["v"], v.astype(lc["v"].dtype), s))
+        h = mlp_block(cfg, lp, h, spec)
+        return h, lc
+
+    h, new_caches = jax.lax.scan(layer_fn, h, (params["layers"], layer_caches))
+    logits = lm_logits(cfg, params, h[:, -1:], spec)
+    new_caches["length"] = jnp.asarray(s, jnp.int32)
+    return logits, new_caches
+
+
+def _store(buf, val, s):
+    """Write the first s positions of the sequence axis (axis 1 of 4D/3D)."""
+    idx = (0,) * buf.ndim
+    return jax.lax.dynamic_update_slice(buf, val, idx)
+
+
+def decode(cfg: ModelConfig, params: Dict, tokens: jax.Array, cache: Dict,
+           spec: QuantizeSpec = NOQUANT, extra: Optional[Dict] = None
+           ) -> Tuple[jax.Array, Dict]:
+    """One decode step. tokens: (B,) int32 (audio: (B, K)). Returns
+    (logits, cache) with the new token's KV appended.
+
+    The stacked cache rides the scan *carry* and is updated with one
+    (layer, position)-indexed dynamic_update_slice per layer - the
+    in-place pattern XLA aliases, so decode holds exactly one cache copy
+    (scan xs/ys caches would double-buffer the whole thing).
+    """
+    length = cache["length"]
+    if cfg.modality == "audio":
+        batch = {"tokens": tokens[:, None, :]}
+    else:
+        batch = {"tokens": tokens[:, None]}
+    h = embed_inputs(cfg, params, batch)  # (B, 1, D)
+    b = h.shape[0]
+    position = length
+    kvq = spec.kv_bits < 16
+    caches0 = {k: v for k, v in cache.items() if k != "length"}
+
+    def _write(buf, val, i, *trail):
+        idx = (i,) + trail + (0,) * (buf.ndim - 1 - len(trail))
+        return jax.lax.dynamic_update_slice(buf, val[None], idx)
+
+    def _layer(caches, i):
+        return jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False), caches
+        )
+
+    def _std_layer(lp, caches, i, h):
+        x = rmsnorm(h, lp["attn_norm"], cfg.norm_eps)
+        positions = jnp.broadcast_to(position, (b, 1))
+        q, k, v = _qkv(cfg, lp, x, positions, spec)
+        if kvq:
+            kc, ks_, kz = _quant_tokens(k, spec)
+            vc, vs_, vz = _quant_tokens(v, spec)
+            caches = dict(
+                caches,
+                k=jax.lax.dynamic_update_slice(caches["k"], kc[None], (i, 0, position, 0, 0)),
+                v=jax.lax.dynamic_update_slice(caches["v"], vc[None], (i, 0, position, 0, 0)),
+                k_scale=jax.lax.dynamic_update_slice(caches["k_scale"], ks_[None], (i, 0, position, 0)),
+                k_zero=jax.lax.dynamic_update_slice(caches["k_zero"], kz[None], (i, 0, position, 0)),
+                v_scale=jax.lax.dynamic_update_slice(caches["v_scale"], vs_[None], (i, 0, position, 0)),
+                v_zero=jax.lax.dynamic_update_slice(caches["v_zero"], vz[None], (i, 0, position, 0)),
+            )
+            lc = _layer(caches, i)
+            k_all = _dequant_tokens(lc["k"], lc["k_scale"], lc["k_zero"], h.dtype)
+            v_all = _dequant_tokens(lc["v"], lc["v_scale"], lc["v_zero"], h.dtype)
+        else:
+            caches = dict(
+                caches,
+                k=jax.lax.dynamic_update_slice(
+                    caches["k"], k.astype(caches["k"].dtype)[None], (i, 0, position, 0, 0)),
+                v=jax.lax.dynamic_update_slice(
+                    caches["v"], v.astype(caches["v"].dtype)[None], (i, 0, position, 0, 0)),
+            )
+            lc = _layer(caches, i)
+            k_all, v_all = lc["k"], lc["v"]
+        attn = common.decode_attention(q, k_all, v_all, length + 1, window=cfg.sliding_window)
+        attn = act_q(attn.reshape(b, 1, cfg.n_heads * cfg.hd), spec)
+        return h + attn @ lp["wo"], caches
+
+    def _mla_layer(lp, caches, i, h):
+        x = rmsnorm(h, lp["attn_norm"], cfg.norm_eps)
+        ckv_new, krope_new = mla_mod._project_latent(
+            lp, x, cfg, jnp.broadcast_to(position, (b, 1)), spec
+        )
+        if kvq:
+            codes, scale, zero = _quant_tokens(ckv_new, spec)
+            caches = dict(
+                caches,
+                ckv=jax.lax.dynamic_update_slice(caches["ckv"], codes[None], (i, 0, position, 0)),
+                ckv_scale=jax.lax.dynamic_update_slice(caches["ckv_scale"], scale[None], (i, 0, position)),
+                ckv_zero=jax.lax.dynamic_update_slice(caches["ckv_zero"], zero[None], (i, 0, position)),
+                krope=jax.lax.dynamic_update_slice(
+                    caches["krope"], krope_new.astype(caches["krope"].dtype)[None], (i, 0, position, 0)),
+            )
+            lc = _layer(caches, i)
+            ckv_all = _dequant_tokens(lc["ckv"], lc["ckv_scale"], lc["ckv_zero"], h.dtype)
+            krope_all = lc["krope"]
+        else:
+            caches = dict(
+                caches,
+                ckv=jax.lax.dynamic_update_slice(
+                    caches["ckv"], ckv_new.astype(caches["ckv"].dtype)[None], (i, 0, position, 0)),
+                krope=jax.lax.dynamic_update_slice(
+                    caches["krope"], krope_new.astype(caches["krope"].dtype)[None], (i, 0, position, 0)),
+            )
+            lc = _layer(caches, i)
+            ckv_all, krope_all = lc["ckv"], lc["krope"]
+        out = mla_mod.mla_decode_attention(
+            lp, x, cfg, position, ckv_all, krope_all, length + 1, spec
+        )
+        return h + out, caches
+
+    if _interleaved(cfg):
+        every = cfg.moe_every
+
+        def group_fn(carry, grp):
+            h, caches, g = carry
+            for j, (lp, kind) in enumerate(_group_slices(cfg, grp)):
+                i = g * every + j
+                h, caches = _std_layer(lp, caches, i, h)
+                h = mlp_block(cfg, lp, h, spec, kind=kind)
+            return (h, caches, g + 1), None
+
+        (h, caches, _), _ = jax.lax.scan(
+            group_fn, (h, caches0, jnp.asarray(0, jnp.int32)), params["layers"]
+        )
+    else:
+        def layer_fn(carry, lp):
+            h, caches, i = carry
+            if cfg.family == "mla":
+                h, caches = _mla_layer(lp, caches, i, h)
+            else:
+                h, caches = _std_layer(lp, caches, i, h)
+            h = mlp_block(cfg, lp, h, spec)
+            return (h, caches, i + 1), None
+
+        (h, caches, _), _ = jax.lax.scan(
+            layer_fn, (h, caches0, jnp.asarray(0, jnp.int32)), params["layers"]
+        )
+    logits = lm_logits(cfg, params, h, spec)
+    caches["length"] = length + 1
+    return logits[:, 0], caches

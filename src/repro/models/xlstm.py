@@ -1,0 +1,276 @@
+"""xLSTM decoder (assigned arch ``xlstm-1.3b``): mLSTM + sLSTM blocks.
+
+Layer pattern: one sLSTM block every ``cfg.slstm_every`` layers, the rest
+mLSTM - structured as scan-over-groups of (slstm_every-1 mLSTM + 1 sLSTM)
+so compile time stays O(1) in depth.
+
+mLSTM: multi-head matrix memory via the shared chunkwise linear-attention
+engine (``ssm_common``), with sigmoid forget/input gates in log space
+(DESIGN.md documents the omitted max-stabilizer).  sLSTM: per-head
+recurrent cell run with ``lax.scan`` over time (inherently sequential -
+the paper's sLSTM has no parallel form).
+
+No FFN (d_ff = 0): each block carries its own in/out projections, matching
+the xLSTM paper's block design.  R1 rotation applies to the residual
+stream (in_proj front side, out_proj rear side); the paper's attention-
+specific R2/R3 have no analogue here (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import NOQUANT, QuantizeSpec, act_q, rmsnorm
+from repro.models.ssm_common import (
+    chunked_linear_attention,
+    linear_attention_step,
+)
+
+
+def _layout(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(n_groups, mlstm_per_group, n_slstm)."""
+    every = cfg.slstm_every or cfg.n_layers + 1
+    if cfg.n_layers % every == 0:
+        groups = cfg.n_layers // every
+        return groups, every - 1, groups
+    return 0, 0, 0
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> Dict:
+    d, v = cfg.d_model, cfg.vocab
+    h = cfg.n_heads
+    dh = d // h
+    groups, m_per, _ = _layout(cfg)
+    assert groups > 0, f"n_layers {cfg.n_layers} % slstm_every {cfg.slstm_every} != 0"
+    nm = groups * m_per
+    ks = jax.random.split(key, 12)
+
+    def mstack(k, shape):
+        return common.dense_init(k, (nm,) + shape, dtype)
+
+    def sstack(k, shape):
+        return common.dense_init(k, (groups,) + shape, dtype)
+
+    return {
+        "embed": common.embed_init(ks[0], (v, d), dtype),
+        "mlstm": {
+            "norm": jnp.ones((nm, d), dtype),
+            "wq": mstack(ks[1], (d, d)),
+            "wk": mstack(ks[2], (d, d)),
+            "wv": mstack(ks[3], (d, d)),
+            "wi": mstack(ks[4], (d, h)),  # input gate (per head)
+            "wf": mstack(ks[5], (d, h)),  # forget gate (per head)
+            "wo_gate": mstack(ks[6], (d, d)),  # output gate (per channel)
+            "out_proj": mstack(ks[7], (d, d)),
+        },
+        "slstm": {
+            "norm": jnp.ones((groups, d), dtype),
+            "wx": sstack(ks[8], (d, 4 * d)),  # z, i, f, o from input
+            "rh": sstack(ks[9], (h, dh, 4 * dh)),  # per-head recurrence
+            "out_proj": sstack(ks[10], (d, d)),
+        },
+        "final_norm": jnp.ones((d,), dtype),
+        "lm_head": common.dense_init(ks[11], (d, v), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _mlstm_qkvg(cfg, lp, x, spec):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    xq = act_q(x, spec)
+    q = (xq @ lp["wq"]).reshape(b, s, h, dh)
+    k = (xq @ lp["wk"]).reshape(b, s, h, dh) / np.sqrt(dh)
+    v = (xq @ lp["wv"]).reshape(b, s, h, dh)
+    log_i = jax.nn.log_sigmoid(xq @ lp["wi"]).astype(jnp.float32)  # (B,S,H)
+    log_f = jax.nn.log_sigmoid(xq @ lp["wf"]).astype(jnp.float32)
+    ogate = jax.nn.sigmoid(xq @ lp["wo_gate"])  # (B,S,D)
+    return q, k, v, log_i, log_f, ogate
+
+
+def mlstm_block(cfg, lp, hres, spec, state=None, *, chunk=128):
+    """Returns (h, final_state)."""
+    x = rmsnorm(hres, lp["norm"], cfg.norm_eps)
+    q, k, v, log_i, log_f, ogate = _mlstm_qkvg(cfg, lp, x, spec)
+    y, new_state = chunked_linear_attention(
+        q, k, v, log_f, log_i, chunk=chunk, normalize=True, state=state
+    )
+    b, s, d = x.shape
+    y = y.reshape(b, s, d) * ogate
+    y = act_q(y, spec)
+    return hres + y @ lp["out_proj"], new_state
+
+
+def mlstm_block_step(cfg, lp, hres, spec, state):
+    """Single-token decode step. hres: (B, 1, D)."""
+    x = rmsnorm(hres, lp["norm"], cfg.norm_eps)
+    q, k, v, log_i, log_f, ogate = _mlstm_qkvg(cfg, lp, x, spec)
+    sq = lambda a: a[:, 0]
+    y, new_state = linear_attention_step(
+        sq(q), sq(k), sq(v), sq(log_f), sq(log_i), state, normalize=True
+    )
+    b, _, d = x.shape
+    y = y.reshape(b, 1, d) * ogate
+    y = act_q(y, spec)
+    return hres + y @ lp["out_proj"], new_state
+
+
+def _slstm_cell(cfg, lp, gx, state):
+    """gx: (B, 4D) pre-activations from input; state: (c, n, h) each (B,H,dh)."""
+    b = gx.shape[0]
+    h_heads, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    c, n, hprev = state
+    rec = jnp.einsum("bhd,hde->bhe", hprev, lp["rh"])  # (B,H,4dh)
+    g = gx.reshape(b, h_heads, 4 * dh) + rec
+    z, i, f, o = jnp.split(g, 4, axis=-1)
+    z = jnp.tanh(z)
+    i = jax.nn.sigmoid(i)
+    f = jax.nn.sigmoid(f)
+    o = jax.nn.sigmoid(o)
+    c_new = f * c + i * z
+    n_new = f * n + i
+    h_new = o * (c_new / jnp.maximum(n_new, 1.0))
+    return h_new, (c_new, n_new, h_new)
+
+
+def slstm_block(cfg, lp, hres, spec, state=None):
+    """Sequential scan over time. Returns (h, final_state)."""
+    b, s, d = hres.shape
+    h_heads = cfg.n_heads
+    dh = d // h_heads
+    x = rmsnorm(hres, lp["norm"], cfg.norm_eps)
+    gx = act_q(x, spec) @ lp["wx"]  # (B,S,4D)
+    if state is None:
+        z = jnp.zeros((b, h_heads, dh), jnp.float32)
+        state = (z, z, z)
+
+    def step(carry, gxt):
+        h_new, carry = _slstm_cell(cfg, lp, gxt, carry)
+        return carry, h_new
+
+    state, ys = jax.lax.scan(step, state, gx.astype(jnp.float32).swapaxes(0, 1))
+    y = ys.swapaxes(0, 1).reshape(b, s, d).astype(hres.dtype)
+    y = act_q(y, spec)
+    return hres + y @ lp["out_proj"], state
+
+
+def slstm_block_step(cfg, lp, hres, spec, state):
+    b, _, d = hres.shape
+    x = rmsnorm(hres, lp["norm"], cfg.norm_eps)
+    gx = (act_q(x, spec) @ lp["wx"])[:, 0].astype(jnp.float32)
+    h_new, state = _slstm_cell(cfg, lp, gx, state)
+    y = h_new.reshape(b, 1, d).astype(hres.dtype)
+    y = act_q(y, spec)
+    return hres + y @ lp["out_proj"], state
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+
+def _group_scan(cfg, params, h, spec, m_state=None, s_state=None, *, chunk=128,
+                emit_state=True):
+    """Scan over (m_per mLSTM + 1 sLSTM) groups. States stacked per layer.
+
+    ``emit_state=False`` (training) drops the state scan-outputs so the
+    per-layer final states are never materialised across layers.
+    """
+    groups, m_per, _ = _layout(cfg)
+    ml = jax.tree.map(lambda a: a.reshape(groups, m_per, *a.shape[1:]), params["mlstm"])
+
+    def group_fn(h, xs):
+        mlp_g, slp_g, mst_g, sst_g = xs
+
+        def mstep(h, xs2):
+            lp, st = xs2
+            h, st2 = mlstm_block(cfg, lp, h, spec, st, chunk=chunk)
+            return h, st2 if emit_state else None
+
+        h, mst2 = jax.lax.scan(mstep, h, (mlp_g, mst_g))
+        h, sst2 = slstm_block(cfg, slp_g, h, spec, sst_g)
+        if not emit_state:
+            sst2 = None
+        return h, (mst2, sst2)
+
+    h, (m_state2, s_state2) = jax.lax.scan(
+        group_fn, h, (ml, params["slstm"], m_state, s_state)
+    )
+    return h, m_state2, s_state2
+
+
+def init_state(cfg: ModelConfig, batch: int) -> Dict:
+    groups, m_per, _ = _layout(cfg)
+    h, d = cfg.n_heads, cfg.d_model
+    dh = d // h
+    return {
+        "m": (
+            jnp.zeros((groups, m_per, batch, h, dh, dh), jnp.float32),
+            jnp.zeros((groups, m_per, batch, h, dh), jnp.float32),
+        ),
+        "s": (
+            jnp.zeros((groups, batch, h, dh), jnp.float32),
+            jnp.zeros((groups, batch, h, dh), jnp.float32),
+            jnp.zeros((groups, batch, h, dh), jnp.float32),
+        ),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def forward(cfg: ModelConfig, params: Dict, batch: Dict, spec: QuantizeSpec = NOQUANT,
+            *, remat: bool = True, chunk: int = 128,
+            return_hidden: bool = False) -> jax.Array:
+    h = jnp.take(params["embed"], batch["tokens"], axis=0)
+    b = h.shape[0]
+    st = init_state(cfg, b)
+    h, _, _ = _group_scan(cfg, params, h, spec, st["m"], st["s"], chunk=chunk,
+                          emit_state=False)
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    h = act_q(h, spec)
+    if return_hidden:
+        return h
+    return h @ params["lm_head"]
+
+
+def prefill(cfg: ModelConfig, params: Dict, batch: Dict, cache: Dict,
+            spec: QuantizeSpec = NOQUANT, *, chunk: int = 128):
+    h = jnp.take(params["embed"], batch["tokens"], axis=0)
+    h, m2, s2 = _group_scan(cfg, params, h, spec, cache["m"], cache["s"], chunk=chunk)
+    hn = rmsnorm(h[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = act_q(hn, spec) @ params["lm_head"]
+    return logits, {"m": m2, "s": s2, "length": jnp.asarray(h.shape[1], jnp.int32)}
+
+
+def decode(cfg: ModelConfig, params: Dict, tokens: jax.Array, cache: Dict,
+           spec: QuantizeSpec = NOQUANT):
+    """tokens: (B,). One step; state-based, O(1) in context length."""
+    groups, m_per, _ = _layout(cfg)
+    h = jnp.take(params["embed"], tokens, axis=0)[:, None, :]
+    ml = jax.tree.map(lambda a: a.reshape(groups, m_per, *a.shape[1:]), params["mlstm"])
+
+    def group_fn(h, xs):
+        mlp_g, slp_g, mst_g, sst_g = xs
+
+        def mstep(h, xs2):
+            lp, st = xs2
+            h, st2 = mlstm_block_step(cfg, lp, h, spec, st)
+            return h, st2
+
+        h, mst2 = jax.lax.scan(mstep, h, (mlp_g, mst_g))
+        h, sst2 = slstm_block_step(cfg, slp_g, h, spec, sst_g)
+        return h, (mst2, sst2)
+
+    h, (m2, s2) = jax.lax.scan(group_fn, h, (ml, params["slstm"], cache["m"], cache["s"]))
+    hn = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = act_q(hn, spec) @ params["lm_head"]
+    return logits[:, 0], {"m": m2, "s": s2, "length": cache["length"] + 1}

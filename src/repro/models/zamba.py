@@ -1,0 +1,361 @@
+"""Zamba2-style hybrid decoder (assigned arch ``zamba2-1.2b``).
+
+Backbone: Mamba2 (SSD) layers; one *shared* full-attention transformer
+block (single weight copy) applied after every ``cfg.attn_every`` Mamba
+layers, as in the Zamba papers.  Decode state = per-layer SSD state +
+conv tail + one KV cache per shared-block application site, so 500k-token
+decode is O(1) in memory for the backbone and tiny for the shared sites.
+
+Structured as scan-over-groups of (attn_every Mamba + shared block) with
+a trailing scan for the remainder layers; the shared block's weights are
+closed over (same copy every application - that is the point of Zamba).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import NOQUANT, QuantizeSpec, act_q, apply_rope, rmsnorm
+from repro.models.ssm_common import (
+    causal_conv1d,
+    chunked_linear_attention,
+    linear_attention_step,
+)
+
+
+def _layout(cfg: ModelConfig) -> Tuple[int, int]:
+    """(n_groups, n_trailing)."""
+    every = cfg.attn_every or (cfg.n_layers + 1)
+    return cfg.n_layers // every, cfg.n_layers % every
+
+
+def _di(cfg: ModelConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> Dict:
+    d, v = cfg.d_model, cfg.vocab
+    di = _di(cfg)
+    nh = cfg.ssm_heads
+    st = cfg.ssm_state
+    l = cfg.n_layers
+    ks = jax.random.split(key, 14)
+    conv_ch = di + 2 * st
+    mamba = {
+        "norm": jnp.ones((l, d), dtype),
+        "in_proj": common.dense_init(ks[0], (l, d, 2 * di + 2 * st + nh), dtype),
+        "conv_w": common.dense_init(ks[1], (l, cfg.conv_width, conv_ch), dtype, scale=0.5),
+        "A_log": jnp.zeros((l, nh), dtype),
+        "D_skip": jnp.ones((l, nh), dtype),
+        "dt_bias": jnp.zeros((l, nh), dtype),
+        "out_proj": common.dense_init(ks[2], (l, di, d), dtype),
+    }
+    hd = cfg.hd
+    shared = {
+        "attn_norm": jnp.ones((d,), dtype),
+        "wq": common.dense_init(ks[3], (d, cfg.n_heads * hd), dtype),
+        "wk": common.dense_init(ks[4], (d, cfg.n_kv_heads * hd), dtype),
+        "wv": common.dense_init(ks[5], (d, cfg.n_kv_heads * hd), dtype),
+        "wo": common.dense_init(ks[6], (cfg.n_heads * hd, d), dtype),
+        "mlp_norm": jnp.ones((d,), dtype),
+        "w_gate": common.dense_init(ks[7], (d, cfg.d_ff), dtype),
+        "w_up": common.dense_init(ks[8], (d, cfg.d_ff), dtype),
+        "w_down": common.dense_init(ks[9], (cfg.d_ff, d), dtype),
+    }
+    return {
+        "embed": common.embed_init(ks[10], (v, d), dtype),
+        "mamba": mamba,
+        "shared": shared,
+        "final_norm": jnp.ones((d,), dtype),
+        "lm_head": common.dense_init(ks[11], (d, v), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD) block
+# ---------------------------------------------------------------------------
+
+
+def _ssd_inputs(cfg, lp, x, spec, conv_state=None):
+    """Project + conv; returns (z, q, k, v, log_f, new_conv_state)."""
+    b, s, d = x.shape
+    di = _di(cfg)
+    nh, st = cfg.ssm_heads, cfg.ssm_state
+    dh = di // nh
+    xq = act_q(x, spec)
+    proj = xq @ lp["in_proj"]  # (B,S,2di+2st+nh)
+    z, xin, bmat, cmat, dt_raw = jnp.split(
+        proj, [di, 2 * di, 2 * di + st, 2 * di + 2 * st], axis=-1
+    )
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)
+    conv_out, conv_state = causal_conv1d(conv_in, lp["conv_w"], state=conv_state)
+    xin, bmat, cmat = jnp.split(conv_out, [di, di + st], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + lp["dt_bias"].astype(jnp.float32))
+    log_f = -dt * jnp.exp(lp["A_log"].astype(jnp.float32))  # (B,S,nh) <= 0
+    xh = xin.reshape(b, s, nh, dh)
+    v = xh * dt[..., None].astype(xh.dtype)  # discretized input
+    q = jnp.broadcast_to(cmat[:, :, None, :], (b, s, nh, st))  # C (shared grp)
+    k = jnp.broadcast_to(bmat[:, :, None, :], (b, s, nh, st))  # B
+    return z, xh, q, k, v, log_f, conv_state
+
+
+def mamba_block(cfg, lp, hres, spec, ssm_state=None, conv_state=None, *, chunk=128):
+    x = rmsnorm(hres, lp["norm"], cfg.norm_eps)
+    b, s, d = x.shape
+    di = _di(cfg)
+    z, xh, q, k, v, log_f, conv_state = _ssd_inputs(cfg, lp, x, spec, conv_state)
+    log_i = jnp.zeros_like(log_f)
+    y, (ssm_s, ssm_n) = chunked_linear_attention(
+        q, k, v, log_f, log_i, chunk=chunk, normalize=False,
+        state=ssm_state,
+    )
+    y = y + lp["D_skip"].astype(jnp.float32)[None, None, :, None] * xh
+    y = (y.reshape(b, s, di) * jax.nn.silu(z)).astype(hres.dtype)
+    y = act_q(y, spec)
+    return hres + y @ lp["out_proj"], (ssm_s, ssm_n), conv_state
+
+
+def mamba_block_step(cfg, lp, hres, spec, ssm_state, conv_state):
+    x = rmsnorm(hres, lp["norm"], cfg.norm_eps)
+    b, _, d = x.shape
+    di = _di(cfg)
+    z, xh, q, k, v, log_f, conv_state = _ssd_inputs(cfg, lp, x, spec, conv_state)
+    sq = lambda a: a[:, 0]
+    y, ssm_state = linear_attention_step(
+        sq(q), sq(k), sq(v), sq(log_f), jnp.zeros_like(sq(log_f)), ssm_state,
+        normalize=False,
+    )
+    y = y + lp["D_skip"].astype(jnp.float32)[None, :, None] * sq(xh)
+    y = (y.reshape(b, 1, di) * jax.nn.silu(z)).astype(hres.dtype)
+    y = act_q(y, spec)
+    return hres + y @ lp["out_proj"], ssm_state, conv_state
+
+
+# ---------------------------------------------------------------------------
+# Shared attention block
+# ---------------------------------------------------------------------------
+
+
+def _shared_qkv(cfg, sp, x, positions, spec):
+    b, s, _ = x.shape
+    hd = cfg.hd
+    xq = act_q(x, spec)
+    q = (xq @ sp["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = (xq @ sp["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (xq @ sp["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def shared_block(cfg, sp, hres, positions, spec, kv=None, length=None):
+    """Train/prefill form. If kv is given, returns the new (k, v) to cache."""
+    b, s, _ = hres.shape
+    x = rmsnorm(hres, sp["attn_norm"], cfg.norm_eps)
+    q, k, v = _shared_qkv(cfg, sp, x, positions, spec)
+    attn = common.flash_attention(q, k, v, causal=True)
+    attn = act_q(attn.reshape(b, s, cfg.n_heads * cfg.hd), spec)
+    h = hres + attn @ sp["wo"]
+    x2 = rmsnorm(h, sp["mlp_norm"], cfg.norm_eps)
+    h = h + common.swiglu(x2, sp["w_gate"], sp["w_up"], sp["w_down"], spec)
+    return h, (k, v)
+
+
+def shared_block_step(cfg, sp, hres, position, spec, k_cache, v_cache, length):
+    """Decode form against this application-site's KV cache."""
+    b = hres.shape[0]
+    x = rmsnorm(hres, sp["attn_norm"], cfg.norm_eps)
+    positions = jnp.broadcast_to(position, (b, 1))
+    q, k, v = _shared_qkv(cfg, sp, x, positions, spec)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype), (0, position, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype), (0, position, 0, 0))
+    attn = common.decode_attention(q, k_cache, v_cache, length + 1)
+    attn = act_q(attn.reshape(b, 1, cfg.n_heads * cfg.hd), spec)
+    h = hres + attn @ sp["wo"]
+    x2 = rmsnorm(h, sp["mlp_norm"], cfg.norm_eps)
+    h = h + common.swiglu(x2, sp["w_gate"], sp["w_up"], sp["w_down"], spec)
+    return h, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+
+def init_state(cfg: ModelConfig, batch: int, max_attn_seq: int, dtype=jnp.bfloat16) -> Dict:
+    groups, trailing = _layout(cfg)
+    di = _di(cfg)
+    nh, st = cfg.ssm_heads, cfg.ssm_state
+    dh = di // nh
+    conv_ch = di + 2 * st
+    l = cfg.n_layers
+    return {
+        "ssm_s": jnp.zeros((l, batch, nh, st, dh), jnp.float32),
+        "ssm_n": jnp.zeros((l, batch, nh, st), jnp.float32),
+        "conv": jnp.zeros((l, batch, cfg.conv_width - 1, conv_ch), dtype),
+        "k": jnp.zeros((groups, batch, max_attn_seq, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((groups, batch, max_attn_seq, cfg.n_kv_heads, cfg.hd), dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def _split_layers(cfg, mamba_params):
+    groups, trailing = _layout(cfg)
+    every = cfg.attn_every
+    head = jax.tree.map(lambda a: a[: groups * every].reshape(groups, every, *a.shape[1:]),
+                        mamba_params)
+    tail = jax.tree.map(lambda a: a[groups * every :], mamba_params)
+    return head, tail, groups, trailing
+
+
+def _run(cfg, params, h, positions, spec, state, *, chunk, collect_kv=True):
+    """Shared full-sequence runner for forward/prefill."""
+    head, tail, groups, trailing = _split_layers(cfg, params["mamba"])
+    sp = params["shared"]
+    every = cfg.attn_every
+    ge = groups * every
+    rs = lambda a: a[:ge].reshape(groups, every, *a.shape[1:])
+    s_ssm = rs(state["ssm_s"]) if groups else None
+    n_ssm = rs(state["ssm_n"]) if groups else None
+    c_ssm = rs(state["conv"]) if groups else None
+
+    def group_fn(h, xs):
+        mlp_g, ss_g, nn_g, cv_g = xs
+
+        def mstep(h, xs2):
+            lp, ss, nn, cv = xs2
+            h, (ss2, nn2), cv2 = mamba_block(cfg, lp, h, spec, (ss, nn), cv, chunk=chunk)
+            return h, ((ss2, nn2, cv2) if collect_kv else None)
+
+        h, sts = jax.lax.scan(mstep, h, (mlp_g, ss_g, nn_g, cv_g))
+        h, kv = shared_block(cfg, sp, h, positions, spec)
+        if collect_kv:
+            ss2, nn2, cv2 = sts
+            return h, (ss2, nn2, cv2, kv)
+        return h, None
+
+    kvs = None
+    ss2 = nn2 = cv2 = None
+    if groups:
+        h, outs = jax.lax.scan(group_fn, h, (head, s_ssm, n_ssm, c_ssm))
+        if collect_kv:
+            ss2, nn2, cv2, kvs = outs
+    # trailing mamba layers (no shared block after)
+    if trailing:
+        t_ss = state["ssm_s"][groups * every :]
+        t_nn = state["ssm_n"][groups * every :]
+        t_cv = state["conv"][groups * every :]
+
+        def tstep(h, xs2):
+            lp, ss, nn, cv = xs2
+            h, (ss2, nn2), cv2 = mamba_block(cfg, lp, h, spec, (ss, nn), cv, chunk=chunk)
+            return h, ((ss2, nn2, cv2) if collect_kv else None)
+
+        h, touts = jax.lax.scan(tstep, h, (tail, t_ss, t_nn, t_cv))
+        if collect_kv:
+            tss2, tnn2, tcv2 = touts
+            if groups:
+                ss2 = jnp.concatenate([ss2.reshape(-1, *ss2.shape[2:]), tss2])
+                nn2 = jnp.concatenate([nn2.reshape(-1, *nn2.shape[2:]), tnn2])
+                cv2 = jnp.concatenate([cv2.reshape(-1, *cv2.shape[2:]), tcv2])
+            else:
+                ss2, nn2, cv2 = tss2, tnn2, tcv2
+    elif collect_kv and groups:
+        ss2 = ss2.reshape(-1, *ss2.shape[2:])
+        nn2 = nn2.reshape(-1, *nn2.shape[2:])
+        cv2 = cv2.reshape(-1, *cv2.shape[2:])
+    return h, ss2, nn2, cv2, kvs
+
+
+def forward(cfg: ModelConfig, params: Dict, batch: Dict, spec: QuantizeSpec = NOQUANT,
+            *, remat: bool = True, chunk: int = 128,
+            return_hidden: bool = False) -> jax.Array:
+    h = jnp.take(params["embed"], batch["tokens"], axis=0)
+    b, s, _ = h.shape
+    positions = jnp.arange(s)[None, :]
+    state = init_state(cfg, b, max_attn_seq=1, dtype=h.dtype)
+    h, *_ = _run(cfg, params, h, positions, spec, state, chunk=chunk, collect_kv=False)
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    h = act_q(h, spec)
+    if return_hidden:
+        return h
+    return h @ params["lm_head"]
+
+
+def prefill(cfg: ModelConfig, params: Dict, batch: Dict, cache: Dict,
+            spec: QuantizeSpec = NOQUANT, *, chunk: int = 128):
+    h = jnp.take(params["embed"], batch["tokens"], axis=0)
+    b, s, _ = h.shape
+    positions = jnp.arange(s)[None, :]
+    h, ss2, nn2, cv2, kvs = _run(cfg, params, h, positions, spec, cache,
+                                 chunk=chunk, collect_kv=True)
+    if kvs is not None:
+        k_new, v_new = kvs  # (groups, B, S, kv, hd)
+        cache = dict(cache,
+                     k=jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                                    (0, 0, 0, 0, 0)),
+                     v=jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                                    (0, 0, 0, 0, 0)))
+    cache = dict(cache, ssm_s=ss2, ssm_n=nn2, conv=cv2,
+                 length=jnp.asarray(s, jnp.int32))
+    hn = rmsnorm(h[:, -1:], params["final_norm"], cfg.norm_eps)
+    return act_q(hn, spec) @ params["lm_head"], cache
+
+
+def decode(cfg: ModelConfig, params: Dict, tokens: jax.Array, cache: Dict,
+           spec: QuantizeSpec = NOQUANT):
+    groups, trailing = _layout(cfg)
+    every = cfg.attn_every
+    h = jnp.take(params["embed"], tokens, axis=0)[:, None, :]
+    length = cache["length"]
+    sp = params["shared"]
+    head, tail, _, _ = _split_layers(cfg, params["mamba"])
+    rs = lambda a: a[: groups * every].reshape(groups, every, *a.shape[1:])
+
+    def group_fn(h, xs):
+        mlp_g, ss_g, nn_g, cv_g, kc, vc = xs
+
+        def mstep(h, xs2):
+            lp, ss, nn, cv = xs2
+            h, ssm2, cv2 = mamba_block_step(cfg, lp, h, spec, (ss, nn), cv)
+            return h, (*ssm2, cv2)
+
+        h, (ss2, nn2, cv2) = jax.lax.scan(mstep, h, (mlp_g, ss_g, nn_g, cv_g))
+        h, kc2, vc2 = shared_block_step(cfg, sp, h, length, spec, kc, vc, length)
+        return h, (ss2, nn2, cv2, kc2, vc2)
+
+    if groups:
+        h, (ss2, nn2, cv2, k2, v2) = jax.lax.scan(
+            group_fn, h,
+            (head, rs(cache["ssm_s"]), rs(cache["ssm_n"]), rs(cache["conv"]),
+             cache["k"], cache["v"]),
+        )
+        ss2 = ss2.reshape(-1, *ss2.shape[2:])
+        nn2 = nn2.reshape(-1, *nn2.shape[2:])
+        cv2 = cv2.reshape(-1, *cv2.shape[2:])
+    else:
+        ss2 = nn2 = cv2 = None
+        k2, v2 = cache["k"], cache["v"]
+    if trailing:
+        def tstep(h, xs2):
+            lp, ss, nn, cv = xs2
+            h, ssm2, cv2_ = mamba_block_step(cfg, lp, h, spec, (ss, nn), cv)
+            return h, (*ssm2, cv2_)
+
+        off = groups * every
+        h, (tss2, tnn2, tcv2) = jax.lax.scan(
+            tstep, h,
+            (tail, cache["ssm_s"][off:], cache["ssm_n"][off:], cache["conv"][off:]),
+        )
+        ss2 = jnp.concatenate([ss2, tss2]) if ss2 is not None else tss2
+        nn2 = jnp.concatenate([nn2, tnn2]) if nn2 is not None else tnn2
+        cv2 = jnp.concatenate([cv2, tcv2]) if cv2 is not None else tcv2
+    hn = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = act_q(hn, spec) @ params["lm_head"]
+    return logits[:, 0], dict(cache, ssm_s=ss2, ssm_n=nn2, conv=cv2, k=k2, v=v2,
+                              length=length + 1)

@@ -1,0 +1,9 @@
+from repro.quant.qtypes import QuantConfig, QuantizedTensor, WAKVConfig  # noqa: F401
+from repro.quant.rtn import (  # noqa: F401
+    compute_qparams,
+    quantize,
+    dequantize,
+    fake_quant,
+    quantize_weight_grouped,
+    fake_quant_act_grouped,
+)

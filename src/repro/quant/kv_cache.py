@@ -1,0 +1,99 @@
+"""Quantized KV cache (KVz in WxAyKVz).
+
+Per-(token, head) asymmetric quantization over ``head_dim`` - one group per
+head vector (head_dim <= 128 in all assigned archs), so scales/zeros are
+``(B, S, n_kv)`` fp32 alongside int8 codes ``(B, S, n_kv, head_dim)``.
+
+R3 (the post-RoPE query/key rotation) makes K quantization-friendly; the
+cache quantizer here is rotation-agnostic and simply stores what it is
+given.  Decode-path dequantization happens on the fly per KV block.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant import rtn
+from repro.quant.qtypes import QuantConfig
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantKVCache:
+    """int8-coded KV cache with per-(token, head) scale/zero.
+
+    When ``bits == 16`` the codes arrays hold the raw bf16 values and
+    scale/zero are dummies (kept so the pytree structure is static).
+    """
+
+    k_codes: jax.Array  # (B, S, n_kv, hd) int8 or bf16
+    v_codes: jax.Array
+    k_scale: jax.Array  # (B, S, n_kv)
+    k_zero: jax.Array
+    v_scale: jax.Array
+    v_zero: jax.Array
+    length: jax.Array  # () int32 current fill
+    bits: int = 16
+
+    def tree_flatten(self):
+        return (
+            (self.k_codes, self.v_codes, self.k_scale, self.k_zero, self.v_scale, self.v_zero, self.length),
+            (self.bits,),
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, ch):
+        return cls(*ch, bits=aux[0])
+
+    @classmethod
+    def create(cls, batch: int, max_seq: int, n_kv: int, head_dim: int, cfg: QuantConfig,
+               dtype=jnp.bfloat16) -> "QuantKVCache":
+        code_dtype = jnp.uint8 if cfg.enabled else dtype
+        z = lambda: jnp.zeros((batch, max_seq, n_kv, head_dim), code_dtype)
+        s = lambda: jnp.zeros((batch, max_seq, n_kv), jnp.float32)
+        return cls(z(), z(), s(), s(), s(), s(), jnp.zeros((), jnp.int32),
+                   bits=cfg.bits if cfg.enabled else 16)
+
+    @property
+    def max_seq(self) -> int:
+        return self.k_codes.shape[1]
+
+
+def _quant_kv(x: jax.Array, cfg: QuantConfig) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B, T, n_kv, hd) -> codes, scale, zero (one group per head vec)."""
+    scale, zero = rtn.compute_qparams(x, cfg)  # reduce over hd
+    # uint8 holds asymmetric codes up to 8 bits (kv quant is asymmetric).
+    codes = rtn.quantize(x, scale[..., None], zero[..., None], cfg).astype(jnp.uint8)
+    return codes, scale, zero
+
+
+def cache_update(cache: QuantKVCache, k: jax.Array, v: jax.Array, cfg: QuantConfig,
+                 start: jax.Array) -> QuantKVCache:
+    """Write T new tokens of K/V at position ``start``."""
+    if cfg.enabled:
+        kc, ks, kz = _quant_kv(k.astype(jnp.float32), cfg)
+        vc, vs, vz = _quant_kv(v.astype(jnp.float32), cfg)
+    else:
+        kc, vc = k.astype(cache.k_codes.dtype), v.astype(cache.v_codes.dtype)
+        b, t, n = k.shape[:3]
+        ks = kz = vs = vz = jnp.zeros((b, t, n), jnp.float32)
+    upd = lambda buf, val: jax.lax.dynamic_update_slice(buf, val, (0, start, 0, 0))
+    upd3 = lambda buf, val: jax.lax.dynamic_update_slice(buf, val, (0, start, 0))
+    return QuantKVCache(
+        k_codes=upd(cache.k_codes, kc), v_codes=upd(cache.v_codes, vc),
+        k_scale=upd3(cache.k_scale, ks), k_zero=upd3(cache.k_zero, kz),
+        v_scale=upd3(cache.v_scale, vs), v_zero=upd3(cache.v_zero, vz),
+        length=start + k.shape[1], bits=cache.bits,
+    )
+
+
+def cache_kv(cache: QuantKVCache, dtype=jnp.bfloat16) -> Tuple[jax.Array, jax.Array]:
+    """Dequantize the whole cache (decode attention reads it blockwise)."""
+    if cache.bits >= 16:
+        return cache.k_codes.astype(dtype), cache.v_codes.astype(dtype)
+    k = (cache.k_codes.astype(jnp.float32) - cache.k_zero[..., None]) * cache.k_scale[..., None]
+    v = (cache.v_codes.astype(jnp.float32) - cache.v_zero[..., None]) * cache.v_scale[..., None]
+    return k.astype(dtype), v.astype(dtype)

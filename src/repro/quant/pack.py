@@ -1,0 +1,62 @@
+"""Bit-packing of low-bit integer codes.
+
+Codes are packed along the *input-channel* axis (axis 0 of a (C, H) weight)
+so a dequant-matmul kernel can stream contiguous packed K-tiles from HBM:
+4-bit -> 2 codes/byte, 2-bit -> 4 codes/byte, 8-bit -> identity.
+
+The packed representation is what the serving path stores in HBM; the
+roofline memory term of quantized decode is computed from these packed
+byte counts.  Asymmetric codes are stored biased to unsigned (0..2^b-1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.qtypes import QuantizedTensor
+
+_PER_BYTE = {2: 4, 4: 2, 8: 1}
+
+
+def codes_per_byte(bits: int) -> int:
+    if bits not in _PER_BYTE:
+        raise ValueError(f"unsupported pack width {bits}")
+    return _PER_BYTE[bits]
+
+
+def pack(qt: QuantizedTensor) -> QuantizedTensor:
+    """Pack int8 codes (C, H) -> uint8 (C // per_byte, H)."""
+    if qt.packed:
+        return qt
+    n = codes_per_byte(qt.bits)
+    c, h = qt.codes.shape
+    if c % n != 0:
+        raise ValueError(f"C={c} not divisible by codes/byte={n}")
+    # Bias symmetric codes to unsigned.
+    offset = 0 if qt.zero is not None else (1 << (qt.bits - 1))
+    u = jnp.clip(qt.codes.astype(jnp.int32) + offset, 0, (1 << qt.bits) - 1).astype(jnp.uint8)
+    u = u.reshape(c // n, n, h)
+    out = jnp.zeros((c // n, h), jnp.uint8)
+    for i in range(n):
+        out = out | (u[:, i, :] << (qt.bits * i))
+    return QuantizedTensor(
+        codes=out, scale=qt.scale, zero=qt.zero, bits=qt.bits, group=qt.group, packed=True
+    )
+
+
+def unpack(qt: QuantizedTensor) -> QuantizedTensor:
+    """Inverse of :func:`pack`."""
+    if not qt.packed:
+        return qt
+    n = codes_per_byte(qt.bits)
+    cp, h = qt.codes.shape
+    mask = (1 << qt.bits) - 1
+    parts = [
+        ((qt.codes >> (qt.bits * i)) & mask).astype(jnp.int32) for i in range(n)
+    ]  # each (C//n, H)
+    u = jnp.stack(parts, axis=1).reshape(cp * n, h)
+    offset = 0 if qt.zero is not None else (1 << (qt.bits - 1))
+    codes = (u - offset).astype(jnp.int32)
+    return QuantizedTensor(
+        codes=codes, scale=qt.scale, zero=qt.zero, bits=qt.bits, group=qt.group, packed=False
+    )

@@ -1,0 +1,50 @@
+"""Quantized linear application.
+
+Two execution paths:
+  * ``dequant_matmul_ref``: pure-jnp (dequantize then matmul) - the oracle
+    and the path used inside jit for simulated-quant evaluation.
+  * ``dequant_matmul``: routes to the Pallas fused dequant-matmul kernel
+    (``repro.kernels``) when available/appropriate; on TPU this streams the
+    *packed* codes from HBM, which is what makes W2/W4 decode ~4-8x less
+    memory-bound (the roofline hillclimb lever).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant import pack as packmod
+from repro.quant import rtn
+from repro.quant.qtypes import QuantConfig, QuantizedTensor
+
+
+def quantize_for_serving(w: jax.Array, cfg: QuantConfig) -> QuantizedTensor:
+    """RTN-quantize + pack a weight for the serving path."""
+    qt = rtn.quantize_weight_grouped(w, cfg)
+    return packmod.pack(qt)
+
+
+def dequant_weight(qt: QuantizedTensor, dtype=jnp.bfloat16) -> jax.Array:
+    if qt.packed:
+        qt = packmod.unpack(qt)
+    return rtn.dequantize_weight(qt).astype(dtype)
+
+
+def dequant_matmul_ref(x: jax.Array, qt: QuantizedTensor) -> jax.Array:
+    """y = x @ dequant(W); grouped dequant fused at the jnp level.
+
+    XLA fuses the dequant into the matmul producer on TPU; the Pallas
+    kernel variant makes the packed-byte streaming explicit.
+    """
+    w = dequant_weight(qt, dtype=jnp.float32)
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)
+
+
+def dequant_matmul(x: jax.Array, qt: QuantizedTensor, *, use_kernel: bool = False) -> jax.Array:
+    if use_kernel:
+        from repro.kernels import ops  # local import: kernels are optional
+
+        return ops.dequant_matmul(x, qt)
+    return dequant_matmul_ref(x, qt)

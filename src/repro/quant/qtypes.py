@@ -1,0 +1,133 @@
+"""Quantization config + container types.
+
+Bit-width notation follows the paper: WxAyKVz, e.g. W2A4KV16 = 2-bit
+weights, 4-bit activations, bf16 KV cache.  Group quantization everywhere
+("Since 2-bit per-channel quantization can easily fail to converge, we
+assume group quantization in all cases" - paper footnote 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """One tensor-class quantizer config (weights OR activations OR kv).
+
+    Attributes:
+      bits: bit width (2, 3, 4, 8); 16 means "not quantized".
+      group: group size along the quantized (channel/reduction) axis.
+      symmetric: symmetric (zero_point == 0) vs asymmetric.
+      clip_ratio: static clip of the max (act quant; QuaRot uses 0.9).
+      mse_clip: grid-search the clip ratio minimising quant MSE (weights).
+      mse_grid: number of grid points for the MSE search.
+    """
+
+    bits: int = 16
+    group: int = 128
+    symmetric: bool = True
+    clip_ratio: float = 1.0
+    mse_clip: bool = False
+    mse_grid: int = 20
+
+    @property
+    def enabled(self) -> bool:
+        return self.bits < 16
+
+    @property
+    def qmin(self) -> int:
+        return -(2 ** (self.bits - 1)) if self.symmetric else 0
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1 if self.symmetric else 2**self.bits - 1
+
+    def replace(self, **kw) -> "QuantConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# Paper settings (Appendix A.1): asymmetric W with MSE clip, group 128;
+# symmetric RTN A with clip 0.9, group 128.
+def paper_weight_cfg(bits: int = 2, group: int = 128) -> QuantConfig:
+    return QuantConfig(bits=bits, group=group, symmetric=False, mse_clip=True)
+
+
+def paper_act_cfg(bits: int = 4, group: int = 128) -> QuantConfig:
+    return QuantConfig(bits=bits, group=group, symmetric=True, clip_ratio=0.9)
+
+
+@dataclasses.dataclass(frozen=True)
+class WAKVConfig:
+    """Full WxAyKVz setting."""
+
+    weight: QuantConfig = QuantConfig()
+    act: QuantConfig = QuantConfig()
+    kv: QuantConfig = QuantConfig()
+
+    @classmethod
+    def parse(cls, spec: str, group: int = 128) -> "WAKVConfig":
+        """Parse 'W2A4KV16' / 'W2A16' / 'W16A16' into a config."""
+        import re
+
+        m = re.fullmatch(r"W(\d+)A(\d+)(?:KV(\d+))?", spec.upper())
+        if not m:
+            raise ValueError(f"bad quant spec {spec!r}")
+        w, a = int(m.group(1)), int(m.group(2))
+        kv = int(m.group(3)) if m.group(3) else 16
+        return cls(
+            weight=paper_weight_cfg(w, group) if w < 16 else QuantConfig(),
+            act=paper_act_cfg(a, group) if a < 16 else QuantConfig(),
+            kv=QuantConfig(bits=kv, group=group, symmetric=False) if kv < 16 else QuantConfig(),
+        )
+
+    def tag(self) -> str:
+        return f"W{self.weight.bits}A{self.act.bits}KV{self.kv.bits}"
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    """Grouped-quantized tensor: integer codes + per-group scale/zero.
+
+    For a weight ``(C, H)`` with group G along C: codes ``(C, H)`` int8
+    (or packed - see :mod:`repro.quant.pack`), scale/zero ``(C//G, H)``.
+    Dequant: ``(codes - zero) * scale`` broadcast over groups.
+    """
+
+    codes: jax.Array  # int8 (unpacked) or packed uint8/int32
+    scale: jax.Array
+    zero: Optional[jax.Array]
+    bits: int
+    group: int
+    packed: bool = False
+
+    def tree_flatten(self):
+        children = (self.codes, self.scale, self.zero)
+        aux = (self.bits, self.group, self.packed)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        codes, scale, zero = children
+        bits, group, packed = aux
+        return cls(codes=codes, scale=scale, zero=zero, bits=bits, group=group, packed=packed)
+
+    @property
+    def out_features(self) -> int:
+        return self.codes.shape[-1]
+
+    def nbytes_ideal(self) -> int:
+        """Ideal storage (bits-true packing + fp16 scales)."""
+        n_codes = 1
+        for s in self.codes.shape:
+            n_codes *= s
+        if self.packed:
+            code_bytes = n_codes * self.codes.dtype.itemsize
+        else:
+            code_bytes = n_codes * self.bits / 8
+        meta = self.scale.size * 2 + (self.zero.size * 2 if self.zero is not None else 0)
+        return int(code_bytes + meta)

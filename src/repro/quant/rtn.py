@@ -1,0 +1,177 @@
+"""Round-to-nearest group quantization (weights + activations).
+
+Layout conventions (used across the whole framework):
+  * weights are ``(in_features C, out_features H)`` so ``y = x @ W``;
+    quantization groups run along the *input* (reduction) axis C, i.e.
+    scale/zero have shape ``(C // G, H)`` - matching GPTQ / QuaRot.
+  * activations are ``(..., C)``; groups along the channel axis, scales
+    ``(..., C // G)``.
+
+All quantizers are implemented as pure jax functions so they can sit inside
+jit / grad (straight-through estimator for fake-quant) and inside the GPTQ
+solver loop.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.qtypes import QuantConfig, QuantizedTensor
+
+
+def _grouped(x: jax.Array, group: int, axis: int = -1) -> jax.Array:
+    """Reshape axis into (num_groups, group)."""
+    axis = axis % x.ndim
+    if x.shape[axis] % group != 0:
+        raise ValueError(f"axis size {x.shape[axis]} not divisible by group {group}")
+    new_shape = x.shape[:axis] + (x.shape[axis] // group, group) + x.shape[axis + 1 :]
+    return x.reshape(new_shape)
+
+
+def compute_qparams(
+    xg: jax.Array, cfg: QuantConfig, *, clip: Optional[jax.Array] = None
+) -> Tuple[jax.Array, jax.Array]:
+    """Scale/zero from a grouped view; reduction over the group axis.
+
+    Args:
+      xg: (..., num_groups, group, ...) with the group axis explicit - the
+        caller reduces over `axis`; here we assume the group axis is the one
+        directly after the num_groups axis, so we reduce over it via the
+        convention that xg is (..., G) i.e. LAST axis is the group.
+      clip: optional per-group multiplicative clip ratio in (0, 1].
+    Returns: (scale, zero) with the group axis reduced.
+    """
+    if cfg.symmetric:
+        amax = jnp.max(jnp.abs(xg), axis=-1)
+        if clip is not None:
+            amax = amax * clip
+        amax = amax * cfg.clip_ratio
+        scale = amax / cfg.qmax
+        scale = jnp.where(scale <= 0, 1.0, scale)
+        zero = jnp.zeros_like(scale)
+    else:
+        xmax = jnp.max(xg, axis=-1)
+        xmin = jnp.min(xg, axis=-1)
+        if clip is not None:
+            xmax = xmax * clip
+            xmin = xmin * clip
+        xmax = jnp.maximum(xmax, 0.0) * cfg.clip_ratio
+        xmin = jnp.minimum(xmin, 0.0) * cfg.clip_ratio
+        scale = (xmax - xmin) / (cfg.qmax - cfg.qmin)
+        scale = jnp.where(scale <= 0, 1.0, scale)
+        zero = jnp.round(-xmin / scale)
+    return scale, zero
+
+
+def quantize(x: jax.Array, scale: jax.Array, zero: jax.Array, cfg: QuantConfig) -> jax.Array:
+    """x -> integer codes, given broadcastable scale/zero."""
+    q = jnp.round(x / scale + zero)
+    return jnp.clip(q, cfg.qmin, cfg.qmax)
+
+
+def dequantize(q: jax.Array, scale: jax.Array, zero: jax.Array) -> jax.Array:
+    return (q - zero) * scale
+
+
+def fake_quant(x: jax.Array, scale: jax.Array, zero: jax.Array, cfg: QuantConfig) -> jax.Array:
+    """Quantize-dequantize with a straight-through estimator gradient."""
+    dq = dequantize(quantize(x, scale, zero, cfg), scale, zero)
+    return x + jax.lax.stop_gradient(dq - x)
+
+
+# ---------------------------------------------------------------------------
+# Weights: (C, H), groups along C
+# ---------------------------------------------------------------------------
+
+
+def _mse_clip_search(
+    wg: jax.Array, cfg: QuantConfig
+) -> Tuple[jax.Array, jax.Array]:
+    """Grid-search a per-group clip ratio minimising quant MSE.
+
+    wg: (num_groups, G, H) grouped weight view (group axis = 1). The scale
+    reduction in compute_qparams is over the LAST axis, so we transpose to
+    (num_groups, H, G).
+    Returns per-(group, H) scale/zero of shape (num_groups, H).
+    """
+    wt = jnp.swapaxes(wg, -1, -2)  # (N, H, G)
+    ratios = jnp.linspace(1.0, 0.3, cfg.mse_grid, dtype=wt.dtype)
+
+    def eval_ratio(r):
+        cfgr = cfg.replace(clip_ratio=float(1.0))  # ratio folded via clip arg
+        scale, zero = compute_qparams(wt, cfgr, clip=jnp.full(wt.shape[:-1], r, wt.dtype))
+        dq = dequantize(
+            quantize(wt, scale[..., None], zero[..., None], cfg), scale[..., None], zero[..., None]
+        )
+        err = jnp.sum((dq - wt) ** 2, axis=-1)  # (N, H)
+        return err, scale, zero
+
+    errs, scales, zeros = jax.vmap(eval_ratio)(ratios)  # (R, N, H)
+    best = jnp.argmin(errs, axis=0)  # (N, H)
+    scale = jnp.take_along_axis(scales, best[None], axis=0)[0]
+    zero = jnp.take_along_axis(zeros, best[None], axis=0)[0]
+    return scale, zero
+
+
+def weight_qparams(w: jax.Array, cfg: QuantConfig) -> Tuple[jax.Array, jax.Array]:
+    """Per-group scale/zero for a (C, H) weight; shapes (C//G, H)."""
+    wg = _grouped(w, cfg.group, axis=0)  # (N, G, H)
+    if cfg.mse_clip:
+        return _mse_clip_search(wg, cfg)
+    wt = jnp.swapaxes(wg, -1, -2)  # (N, H, G)
+    scale, zero = compute_qparams(wt, cfg)  # (N, H)
+    return scale, zero
+
+
+def quantize_weight_grouped(w: jax.Array, cfg: QuantConfig) -> QuantizedTensor:
+    """RTN-quantize a (C, H) weight into codes + grouped scales."""
+    scale, zero = weight_qparams(w, cfg)
+    wg = _grouped(w, cfg.group, axis=0)  # (N, G, H)
+    codes = quantize(wg, scale[:, None, :], zero[:, None, :], cfg)
+    codes = codes.reshape(w.shape).astype(jnp.int32)
+    return QuantizedTensor(codes=codes, scale=scale, zero=zero, bits=cfg.bits, group=cfg.group)
+
+
+def dequantize_weight(qt: QuantizedTensor) -> jax.Array:
+    assert not qt.packed, "unpack first (repro.quant.pack.unpack)"
+    c, h = qt.codes.shape
+    g = qt.group
+    codes = qt.codes.reshape(c // g, g, h).astype(qt.scale.dtype)
+    zero = qt.zero if qt.zero is not None else 0.0
+    w = (codes - (zero[:, None, :] if qt.zero is not None else 0.0)) * qt.scale[:, None, :]
+    return w.reshape(c, h)
+
+
+def fake_quant_weight(w: jax.Array, cfg: QuantConfig) -> jax.Array:
+    if not cfg.enabled:
+        return w
+    return dequantize_weight(quantize_weight_grouped(w, cfg)).astype(w.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations: (..., C), groups along last axis
+# ---------------------------------------------------------------------------
+
+
+def fake_quant_act_grouped(x: jax.Array, cfg: QuantConfig) -> jax.Array:
+    """Symmetric RTN act fake-quant (paper: sym, clip 0.9, group 128).
+
+    Quant math runs in f32 regardless of input dtype (matches the TPU VPU
+    and the Pallas kernel numerics), result cast back to x.dtype.
+    """
+    if not cfg.enabled:
+        return x
+    xg = _grouped(x.astype(jnp.float32), cfg.group, axis=-1)  # (..., N, G)
+    scale, zero = compute_qparams(xg, cfg)
+    out = fake_quant(xg, scale[..., None], zero[..., None], cfg)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+def quantize_act_grouped(x: jax.Array, cfg: QuantConfig) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Real act quantization for the serving path: codes + scale + zero."""
+    xg = _grouped(x, cfg.group, axis=-1)
+    scale, zero = compute_qparams(xg, cfg)
+    codes = quantize(xg, scale[..., None], zero[..., None], cfg).astype(jnp.int32)
+    return codes.reshape(x.shape), scale, zero

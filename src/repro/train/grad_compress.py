@@ -1,0 +1,93 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 per-tensor-group quantization of gradients before the data-parallel
+all-reduce, with local error-feedback accumulators so the quantization
+error is re-injected next step (EF-SGD); convergence is unaffected while
+the DP all-reduce volume drops 4x vs f32 / 2x vs bf16.
+
+Two execution modes:
+  * ``compress_for_allreduce`` - pjit-friendly simulation: gradients are
+    quantize-dequantized *before* the (XLA-inserted) all-reduce, so the
+    reduction semantics and convergence behaviour match the explicit path
+    while remaining fully auto-sharded.
+  * ``shard_map`` explicit path (``int8_psum``) - the deployment schedule:
+    codes are summed in int32 across the data axis (exact for <= 2^23
+    participants) and rescaled; used by the optimized §Perf variant.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+GROUP = 1024  # quantization group along the flattened gradient
+
+
+def _quant_ef(g: jax.Array, err: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (codes int8, scale per group, new_error)."""
+    gf = g.astype(jnp.float32) + err
+    flat = gf.reshape(-1)
+    pad = (-flat.size) % GROUP
+    flat = jnp.pad(flat, (0, pad))
+    grp = flat.reshape(-1, GROUP)
+    amax = jnp.max(jnp.abs(grp), axis=1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    codes = jnp.clip(jnp.round(grp / scale), -127, 127)
+    dq = (codes * scale).reshape(-1)[: gf.size].reshape(g.shape)
+    new_err = gf - dq
+    return codes.astype(jnp.int8), scale[:, 0], new_err
+
+
+def _dequant(codes: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    dq = codes.astype(jnp.float32) * scale[:, None]
+    size = 1
+    for s in shape:
+        size *= s
+    return dq.reshape(-1)[:size].reshape(shape)
+
+
+def init_error_state(grads: Dict) -> Dict:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress_for_allreduce(grads: Dict, err_state: Dict) -> Tuple[Dict, Dict]:
+    """Quantize-dequantize each gradient leaf with error feedback.
+
+    Under pjit the subsequent (automatic) all-reduce then carries values
+    with int8 information content; the explicit int8 collective lives in
+    :func:`int8_psum`.
+    """
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(err_state)
+    out_g, out_e = [], []
+    for g, e in zip(flat_g, flat_e):
+        codes, scale, new_e = _quant_ef(g, e)
+        out_g.append(_dequant(codes, scale, g.shape).astype(g.dtype))
+        out_e.append(new_e)
+    return treedef.unflatten(out_g), treedef.unflatten(out_e)
+
+
+def int8_psum(g: jax.Array, err: jax.Array, axis_name: str):
+    """Explicit compressed all-reduce for use inside shard_map.
+
+    All shards agree on a per-group scale (pmax of local maxima) so the
+    int32 code sum is an exact reduction of the quantized values; error
+    feedback captures each shard's local quantization residual.
+    """
+    gf = g.astype(jnp.float32) + err
+    flat = gf.reshape(-1)
+    pad = (-flat.size) % GROUP
+    flat = jnp.pad(flat, (0, pad))
+    grp = flat.reshape(-1, GROUP)
+    amax = jnp.max(jnp.abs(grp), axis=1, keepdims=True)
+    amax = jax.lax.pmax(amax, axis_name)  # shared scale across the axis
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    codes = jnp.clip(jnp.round(grp / scale), -127, 127)
+    local_dq = (codes * scale).reshape(-1)[: gf.size].reshape(g.shape)
+    new_err = gf - local_dq
+    total = jax.lax.psum(codes.astype(jnp.int32), axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    mean = (total.astype(jnp.float32) * scale / n).reshape(-1)[: gf.size].reshape(g.shape)
+    return mean.astype(g.dtype), new_err

@@ -1,0 +1,161 @@
+"""Training step: loss, microbatched grad accumulation, NaN-safe update.
+
+The returned step function is pure (params, opt_state, err_state, batch) ->
+(params, opt_state, err_state, metrics) and jit/pjit-compatible; the
+launcher binds shardings.  Fault-tolerance hooks live here:
+
+  * non-finite gradient norms skip the update (the step still returns, so
+    a poisoned batch or a flaky host cannot corrupt the weights);
+  * optional int8 error-feedback gradient compression before the DP
+    all-reduce (``repro.train.grad_compress``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import NOQUANT, QuantizeSpec, cross_entropy
+from repro.train import grad_compress
+from repro.train.optimizer import OptConfig, OptState, adamw_update, global_norm
+
+
+def chunked_lm_loss(h: jax.Array, lm_head: jax.Array, labels: jax.Array,
+                    *, chunk: int = 1024) -> jax.Array:
+    """Mean token NLL without materialising full f32 logits.
+
+    h: (B, S, D) final hidden; lm_head (D, V) or (K, D, V) (audio, with
+    labels (B, S, K)).  Sequence chunks are processed under
+    ``jax.checkpoint``: forward keeps one chunk of logits live; backward
+    recomputes per chunk and accumulates the lm_head gradient through the
+    scan - the memory saving that lets 150k-vocab 4k-seq training fit.
+    """
+    b, s, d = h.shape
+    c = min(chunk, s)
+    nc = -(-s // c)
+    pad = nc * c - s
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)) + ((0, 0),) * (labels.ndim - 2))
+    valid = (jnp.arange(nc * c) < s).astype(jnp.float32)  # (S',)
+    hs = h.reshape(b, nc, c, d).swapaxes(0, 1)  # (nc, B, c, D)
+    ls = labels.reshape(b, nc, c, *labels.shape[2:]).swapaxes(0, 1)
+    ms = valid.reshape(nc, c)
+    audio = lm_head.ndim == 3
+
+    @jax.checkpoint
+    def body(carry, xs):
+        hc, lc, mc = xs
+        hc = hc.astype(jnp.float32)
+        if audio:
+            logits = jnp.einsum("bcd,kdv->bckv", hc, lm_head.astype(jnp.float32))
+            gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            nll = (logz - gold).mean(-1)  # mean over codebooks
+        else:
+            logits = hc @ lm_head.astype(jnp.float32)
+            gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            nll = logz - gold
+        w = mc[None, :]
+        tot, cnt = carry
+        return (tot + (nll * w).sum(), cnt + mc.sum() * b), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), (hs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def make_loss_fn(arch, spec: QuantizeSpec = NOQUANT, *, remat: bool = True,
+                 chunked: bool = True) -> Callable:
+    cfg = arch.config
+
+    def loss_fn(params, batch):
+        toks = batch["tokens"]
+        if chunked:
+            h = arch.forward(params, batch, spec, remat=remat, return_hidden=True)
+            if cfg.modality == "vlm":
+                h = h[:, cfg.n_patches :]
+            return chunked_lm_loss(h[:, :-1], params["lm_head"], toks[:, 1:])
+        logits = arch.forward(params, batch, spec, remat=remat)
+        if cfg.modality == "vlm":
+            logits = logits[:, cfg.n_patches :]
+        return cross_entropy(logits[:, :-1], toks[:, 1:])
+
+    return loss_fn
+
+
+def make_train_step(
+    arch,
+    opt_cfg: OptConfig,
+    spec: QuantizeSpec = NOQUANT,
+    *,
+    microbatches: int = 1,
+    compress_grads: bool = False,
+    remat: bool = True,
+) -> Callable:
+    loss_fn = make_loss_fn(arch, spec, remat=remat)
+
+    def train_step(params, opt_state: OptState, err_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            # Grad accumulation via scan over a reshaped leading microbatch
+            # axis: scan's static slicing keeps the batch-axis sharding
+            # intact (a dynamic_slice on a sharded axis would force an
+            # all-gather and replicated compute).
+            def mb(carry, sub):
+                acc_loss, acc_g = carry
+                l, g = jax.value_and_grad(loss_fn)(params, sub)
+                return (acc_loss + l, jax.tree.map(jnp.add, acc_g, g)), None
+
+            # strided split: (B,) -> (B/mb, mb) -> (mb, B/mb) keeps the
+            # sharded batch axis inner, so every microbatch slice is fully
+            # local to its data shard (no cross-device resharding).
+            sub_batches = jax.tree.map(
+                lambda x: x.reshape(x.shape[0] // microbatches, microbatches,
+                                    *x.shape[1:]).swapaxes(0, 1),
+                batch,
+            )
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(mb, (0.0, zero), sub_batches)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+
+        if compress_grads:
+            grads, err_state = grad_compress.compress_for_allreduce(grads, err_state)
+
+        new_params, new_opt, metrics = adamw_update(params, grads, opt_state, opt_cfg)
+        # NaN/Inf guard: skip the update, keep the old state
+        ok = jnp.isfinite(metrics["grad_norm"]) & jnp.isfinite(loss)
+        pick = lambda new, old: jax.tree.map(
+            lambda a, b: jnp.where(ok, a, b), new, old
+        )
+        params = pick(new_params, params)
+        opt_state = OptState(
+            step=jnp.where(ok, new_opt.step, opt_state.step),
+            mu=pick(new_opt.mu, opt_state.mu),
+            nu=pick(new_opt.nu, opt_state.nu),
+        )
+        metrics = dict(metrics, loss=loss, skipped=(~ok).astype(jnp.int32))
+        return params, opt_state, err_state, metrics
+
+    return train_step
+
+
+def make_eval_step(arch, spec: QuantizeSpec = NOQUANT) -> Callable:
+    """Returns mean token NLL (PPL = exp) and top-1 next-token accuracy."""
+    cfg = arch.config
+
+    def eval_step(params, batch):
+        logits = arch.forward(params, batch, spec, remat=False)
+        toks = batch["tokens"]
+        if cfg.modality == "vlm":
+            logits = logits[:, cfg.n_patches :]
+        nll = cross_entropy(logits[:, :-1], toks[:, 1:])
+        pred = jnp.argmax(logits[:, :-1], axis=-1)
+        acc = jnp.mean((pred == toks[:, 1:]).astype(jnp.float32))
+        return {"nll": nll, "top1": acc}
+
+    return eval_step

@@ -1,0 +1,123 @@
+"""Distribution-layer tests: sharding rules, sanitizer, elastic planning,
+HLO collective parsing.  (The full-mesh lower/compile itself is exercised
+by launch/dryrun.py with 512 placeholder devices - not under pytest, which
+must keep seeing 1 CPU device.)"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.elastic import plan_remesh
+from repro.dist.sharding import batch_pspecs, cache_pspecs, param_pspecs, sanitize_pspecs
+from repro.launch.hlo_stats import collective_stats, total_wire_bytes
+from repro.models.common import QuantizeSpec
+from repro.models.registry import ARCH_IDS, get_arch
+
+
+class FakeMesh:
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.zeros(shape)
+        self.shape = dict(zip(names, shape))
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_param_pspecs_cover_every_leaf(name):
+    arch = get_arch(name)
+    sds = arch.param_specs()
+    specs = param_pspecs(arch.config, sds, fsdp_axes=("data",))
+    n_leaves = len(jax.tree.leaves(sds))
+    n_specs = len(jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)))
+    assert n_specs == n_leaves
+    # every spec rank <= leaf rank
+    for spec, leaf in zip(
+        jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)),
+        jax.tree.leaves(sds),
+    ):
+        assert len(spec) <= leaf.ndim, (spec, leaf.shape)
+
+
+@pytest.mark.parametrize("name", ["smollm-135m", "deepseek-moe-16b", "minicpm3-4b",
+                                  "xlstm-1.3b", "zamba2-1.2b"])
+def test_cache_pspecs_cover_every_leaf(name):
+    arch = get_arch(name)
+    sds = arch.cache_specs(8, 64, QuantizeSpec(kv_bits=4))
+    specs = cache_pspecs(arch.config, sds, ("data",), model_size=16)
+    assert len(jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))) == len(
+        jax.tree.leaves(sds)
+    )
+
+
+def test_sanitizer_drops_nondivisible():
+    mesh = FakeMesh((4, 2), ("data", "model"))
+    sds = {"a": jax.ShapeDtypeStruct((3, 8), jnp.float32),
+           "b": jax.ShapeDtypeStruct((8, 6), jnp.float32)}
+    specs = {"a": P("data", "model"), "b": P(("data", "model"), None)}
+    out = sanitize_pspecs(mesh, specs, sds)
+    assert out["a"] == P(None, "model")  # 3 % 4 != 0 dropped, 8 % 2 kept
+    assert out["b"] == P(("data", "model"), None)  # 8 % 8 ok
+
+
+def test_batch_pspecs_shard_seq():
+    arch = get_arch("smollm-135m")
+    sds = arch.input_specs(__import__("repro.configs.base", fromlist=["SHAPES"]).SHAPES["train_4k"])
+    sp = batch_pspecs(arch.config, sds, ("pod", "data"), shard_seq=True)
+    assert jax.tree.leaves(sp, is_leaf=lambda x: isinstance(x, P))[0][1] == ("pod", "data")
+
+
+class TestElastic:
+    def test_plan_remesh_preserves_global_batch(self):
+        for n in (512, 480, 384, 256, 96):
+            plan = plan_remesh(n, global_batch=256)
+            data, model = plan.mesh_shape
+            assert data * model == n or data * model <= n
+            assert plan.per_device_batch * data * plan.grad_accum >= 256
+
+    def test_plan_remesh_keeps_model_axis_when_divisible(self):
+        plan = plan_remesh(480, global_batch=256)
+        assert plan.mesh_shape[1] == 16  # 480 = 30 x 16
+
+    def test_plan_remesh_shrinks_model_axis_when_needed(self):
+        plan = plan_remesh(24, global_batch=256)
+        assert plan.mesh_shape[1] in (8, 4, 2, 1)
+        assert 24 % plan.mesh_shape[1] == 0
+
+
+class TestHLOStats:
+    HLO = """
+HloModule test
+
+%region_body (x: f32[128,256]) -> f32[128,256] {
+  %ar = f32[128,256]{1,0} all-reduce(%x), replica_groups={}
+  ROOT %r = f32[128,256]{1,0} add(%ar, %ar)
+}
+
+ENTRY %main (a: bf16[512,512]) -> bf16[512,512] {
+  %ag = bf16[512,512]{1,0} all-gather(%a), dimensions={0}
+  %rs = bf16[256,512]{1,0} reduce-scatter(%ag), dimensions={0}
+  %cp = bf16[256,512]{1,0} collective-permute(%rs), source_target_pairs={{0,1}}
+  ROOT %out = bf16[512,512]{1,0} all-gather(%cp), dimensions={0}
+}
+"""
+
+    def test_counts_and_bytes(self):
+        st = collective_stats(self.HLO, body_multiplier=10)
+        assert st["all-gather"]["count"] == 2
+        assert st["all-gather"]["bytes"] == 2 * 512 * 512 * 2
+        assert st["reduce-scatter"]["count"] == 1
+        # body all-reduce multiplied by 10
+        assert st["all-reduce"]["count"] == 10
+        assert st["all-reduce"]["bytes"] == 10 * 128 * 256 * 4
+        # wire factor: AR 2x
+        assert st["all-reduce"]["wire_bytes"] == 2 * st["all-reduce"]["bytes"]
+        assert total_wire_bytes(st) > 0
+
+    def test_done_ops_not_double_counted(self):
+        hlo = """ENTRY %e (a: f32[4]) -> f32[4] {
+  %s = f32[4]{0} all-gather-start(%a), dimensions={0}
+  ROOT %d = f32[4]{0} all-gather-done(%s)
+}"""
+        st = collective_stats(hlo)
+        assert st["all-gather"]["count"] == 1

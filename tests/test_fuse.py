@@ -1,0 +1,124 @@
+"""Rotation-fusion invariance: the foundation of the whole PTQ scheme.
+
+For every architecture family and every rotation kind, fusing R1 (and R2 /
+the R4 pre-rotation) into the weights must leave fp32 outputs unchanged.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hadamard as hd
+from repro.core.fuse import fuse_rotations
+from repro.core.rotation import make_rotation
+from repro.models.common import QuantizeSpec
+from repro.models.registry import ARCH_IDS, get_arch
+
+B, S = 2, 12
+
+FUSE_ARCHS = [
+    "smollm-135m",        # dense GQA
+    "qwen1.5-4b",         # dense + qkv bias
+    "internvl2-2b",       # vlm prefix
+    "musicgen-medium",    # audio K codebooks
+    "deepseek-moe-16b",   # uniform MoE + shared experts
+    "llama4-maverick-400b-a17b",  # interleaved MoE
+    "minicpm3-4b",        # MLA
+    "xlstm-1.3b",         # ssm
+    "zamba2-1.2b",        # hybrid
+]
+
+
+def make_batch(cfg, key, s=S):
+    ks = jax.random.split(key, 2)
+    if cfg.modality == "audio":
+        batch = {"tokens": jax.random.randint(ks[0], (B, s, cfg.n_codebooks), 0, cfg.vocab)}
+    else:
+        batch = {"tokens": jax.random.randint(ks[0], (B, s), 0, cfg.vocab)}
+    if cfg.modality == "vlm":
+        batch["patch_embeds"] = jax.random.normal(ks[1], (B, cfg.n_patches, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("name", FUSE_ARCHS)
+@pytest.mark.parametrize("kind", ["GH", "GW", "LH", "GSR"])
+def test_r1_fusion_invariance(name, kind):
+    arch = get_arch(name, reduced=True)
+    cfg = arch.config
+    params = arch.init(jax.random.PRNGKey(0), jnp.float32)
+    # make the norm scales non-trivial so folding is actually exercised
+    params = jax.tree.map(
+        lambda a: a * 1.3 if a.ndim >= 1 and np.all(np.asarray(a) == 1.0) else a, params
+    )
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+    base = np.asarray(arch.forward(params, batch), np.float32)
+
+    r1 = make_rotation(kind, cfg.d_model, group=32, seed=3)
+    fused = fuse_rotations(cfg, params, r1)
+    got = np.asarray(arch.forward(fused, batch), np.float32)
+    np.testing.assert_allclose(got, base, rtol=2e-3, atol=2e-3)
+
+
+def test_r2_fusion_invariance_dense():
+    arch = get_arch("smollm-135m", reduced=True)
+    cfg = arch.config
+    params = arch.init(jax.random.PRNGKey(0), jnp.float32)
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+    base = np.asarray(arch.forward(params, batch), np.float32)
+    r1 = make_rotation("GSR", cfg.d_model, group=32, seed=0)
+    r2 = make_rotation("GH", cfg.hd, seed=5)
+    fused = fuse_rotations(cfg, params, r1, r2=r2)
+    got = np.asarray(arch.forward(fused, batch), np.float32)
+    np.testing.assert_allclose(got, base, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("r4", ["GH", "GW", "LH", "GSR"])
+def test_r4_online_cancels_fused_prerotation(r4):
+    """Online apply_r4(x) @ (R4^T W_down) == x @ W_down in fp."""
+    arch = get_arch("smollm-135m", reduced=True)
+    cfg = arch.config
+    params = arch.init(jax.random.PRNGKey(0), jnp.float32)
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+    base = np.asarray(arch.forward(params, batch), np.float32)
+    spec = QuantizeSpec(r4_kind=r4, r4_group=32)
+    r1 = make_rotation("I", cfg.d_model)
+    fused = fuse_rotations(cfg, params, r1, spec=spec)
+    got = np.asarray(arch.forward(fused, batch, spec), np.float32)
+    np.testing.assert_allclose(got, base, rtol=2e-3, atol=2e-3)
+
+
+def test_prefill_decode_invariance_after_fusion():
+    """Fused serving path stays consistent with fused training forward."""
+    arch = get_arch("smollm-135m", reduced=True)
+    cfg = arch.config
+    params = arch.init(jax.random.PRNGKey(0), jnp.float32)
+    r1 = make_rotation("GSR", cfg.d_model, group=32, seed=0)
+    fused = fuse_rotations(cfg, params, r1)
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+    full = np.asarray(arch.forward(fused, batch), np.float32)
+    cache = arch.init_cache(B, S + 4, QuantizeSpec(), jnp.float32)
+    pre = {"tokens": batch["tokens"][:, : S - 1]}
+    logits, cache = arch.prefill(fused, pre, cache, QuantizeSpec())
+    np.testing.assert_allclose(
+        np.asarray(logits, np.float32).squeeze(), full[:, S - 2].squeeze(),
+        rtol=2e-3, atol=2e-3,
+    )
+
+
+class TestNonPow2Hadamard:
+    @pytest.mark.parametrize("n", [12, 20, 28, 36, 576, 1536, 2560, 5120])
+    def test_orthogonal(self, n):
+        h = hd.hadamard_auto(n)
+        np.testing.assert_allclose(h @ h.T, np.eye(n), atol=1e-8)
+        assert set(np.unique(np.round(h * np.sqrt(n)))) <= {-1.0, 1.0}
+
+    @pytest.mark.parametrize("n", [12, 576, 1536])
+    def test_walsh_auto_sequency_sorted(self, n):
+        w = hd.walsh_auto(n)
+        seq = hd.sequency_of_rows(w)
+        assert np.all(np.diff(seq) >= 0)
+        np.testing.assert_allclose(w @ w.T, np.eye(n), atol=1e-8)
+
+    def test_pow2_walsh_auto_matches_walsh(self):
+        np.testing.assert_allclose(hd.walsh_auto(64), hd.walsh(64), atol=0)

@@ -1,0 +1,159 @@
+"""Per-kernel shape/dtype sweeps: pallas_call (interpret) vs pure-jnp oracle."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.quant import pack, rtn
+from repro.quant.qtypes import QuantConfig
+
+
+def rand(shape, seed=0, dtype=np.float32):
+    return np.random.default_rng(seed).normal(size=shape).astype(dtype)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+class TestFWHTKernel:
+    @pytest.mark.parametrize("m,d", [(1, 8), (7, 64), (16, 256), (33, 512), (4, 1024)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, m, d, dtype):
+        x = jnp.asarray(rand((m, d), seed=m + d), dtype)
+        got = ops.fwht(x)
+        want = ref.fwht_ref(x)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32), **tol(dtype)
+        )
+
+    def test_batched_dims(self):
+        x = jnp.asarray(rand((2, 3, 128), seed=1))
+        got = ops.fwht(x)
+        want = ref.fwht_ref(x.reshape(-1, 128)).reshape(2, 3, 128)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+class TestGroupedRotateKernel:
+    @pytest.mark.parametrize("m,g,n", [(5, 8, 4), (16, 32, 2), (9, 64, 3), (128, 128, 2)])
+    @pytest.mark.parametrize("shared", [True, False])
+    @pytest.mark.parametrize("inverse", [True, False])
+    def test_matches_ref(self, m, g, n, shared, inverse):
+        from repro.core.hadamard import walsh
+
+        c = g * n
+        x = jnp.asarray(rand((m, c), seed=g))
+        if shared:
+            blocks = jnp.asarray(walsh(g), jnp.float32)[None]
+        else:
+            blocks = jnp.stack(
+                [jnp.asarray(walsh(g), jnp.float32) * ((-1.0) ** i) for i in range(n)]
+            )
+        got = ops.grouped_rotate(x, blocks, inverse=inverse)
+        want = ref.grouped_rotate_ref(x, blocks, inverse=inverse)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+    def test_equals_core_apply_rotation(self):
+        from repro.core.rotation import apply_rotation, make_rotation
+
+        rot = make_rotation("GSR", 256, group=64)
+        x = jnp.asarray(rand((4, 256), seed=2))
+        got = ops.grouped_rotate(x, jnp.asarray(rot.matrix, jnp.float32)[None])
+        want = apply_rotation(x, rot)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+class TestDequantMatmulKernel:
+    @pytest.mark.parametrize("bits", [2, 4, 8])
+    @pytest.mark.parametrize("m,c,h,g", [(4, 64, 32, 16), (17, 128, 48, 32), (3, 256, 128, 128)])
+    @pytest.mark.parametrize("symmetric", [False, True])
+    def test_matches_ref(self, bits, m, c, h, g, symmetric):
+        cfg = QuantConfig(bits=bits, group=g, symmetric=symmetric)
+        w = rand((c, h), seed=bits * 7 + g)
+        x = jnp.asarray(rand((m, c), seed=m))
+        qt = rtn.quantize_weight_grouped(jnp.asarray(w), cfg)
+        if symmetric:
+            qt = type(qt)(codes=qt.codes, scale=qt.scale, zero=None, bits=bits, group=g)
+        packed = pack.pack(qt)
+        got = ops.dequant_matmul(x, packed)
+        want = ref.dequant_matmul_ref(x, packed)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+    def test_block_tiling_edges(self):
+        # force multi-tile grid in every dimension incl. padding remainder
+        cfg = QuantConfig(bits=4, group=32, symmetric=False)
+        w, x = rand((128, 96), 1), jnp.asarray(rand((70, 128), 2))
+        packed = pack.pack(rtn.quantize_weight_grouped(jnp.asarray(w), cfg))
+        got = np.asarray(
+            __import__("repro.kernels.dequant_matmul", fromlist=["d"]).dequant_matmul_pallas(
+                x, packed, block_m=32, block_n=32, interpret=True
+            )
+        )
+        want = np.asarray(ref.dequant_matmul_ref(x, packed))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+class TestRTNQuantKernel:
+    @pytest.mark.parametrize("m,c,g", [(4, 64, 16), (33, 128, 128), (16, 512, 64)])
+    @pytest.mark.parametrize("bits", [4, 8])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, m, c, g, bits, dtype):
+        x = jnp.asarray(rand((m, c), seed=c + bits), dtype)
+        got = np.asarray(ops.rtn_fake_quant(x, bits=bits, group=g), np.float32)
+        want = np.asarray(ref.rtn_fake_quant_ref(x, bits=bits, group=g), np.float32)
+        if dtype == jnp.bfloat16:
+            # bf16-grid inputs can land x/scale on exact .5 boundaries where
+            # a 1-ulp quotient difference legitimately flips round(): allow
+            # <=1 LSB on a small fraction of elements.
+            xf = np.asarray(x, np.float32).reshape(m, c // g, g)
+            lsb = np.abs(xf).max(-1, keepdims=True) * 0.9 / (2 ** (bits - 1) - 1)
+            diff = np.abs(got - want).reshape(m, c // g, g)
+            # 1 LSB flip + bf16 output-cast rounding (2^-8 relative)
+            bound = lsb * 1.02 + np.abs(want).reshape(m, c // g, g) * 2**-7
+            assert np.all(diff <= bound)
+            assert (diff > 1e-6).mean() < 0.05
+        else:
+            np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_idempotent(self):
+        x = jnp.asarray(rand((8, 128), seed=5))
+        once = ops.rtn_fake_quant(x, bits=4, group=32)
+        twice = ops.rtn_fake_quant(once, bits=4, group=32)
+        # quantizing an already-quantized tensor with clip<1 can re-clip;
+        # check with clip 1.0 for strict idempotence
+        once1 = ops.rtn_fake_quant(x, bits=4, group=32, clip_ratio=1.0)
+        twice1 = ops.rtn_fake_quant(once1, bits=4, group=32, clip_ratio=1.0)
+        np.testing.assert_allclose(np.asarray(once1), np.asarray(twice1), rtol=1e-5, atol=1e-6)
+
+
+class TestGSRQuantFusedKernel:
+    @pytest.mark.parametrize("m,g,n", [(5, 16, 4), (33, 32, 2), (64, 64, 2)])
+    @pytest.mark.parametrize("bits", [4, 8])
+    @pytest.mark.parametrize("shared", [True, False])
+    def test_matches_two_step_ref(self, m, g, n, bits, shared):
+        from repro.core.hadamard import walsh
+
+        c = g * n
+        x = jnp.asarray(rand((m, c), seed=g + bits))
+        if shared:
+            blocks = jnp.asarray(walsh(g), jnp.float32)[None]
+        else:
+            blocks = jnp.stack(
+                [jnp.asarray(walsh(g), jnp.float32) * ((-1.0) ** i) for i in range(n)]
+            )
+        got = np.asarray(ops.gsr_rotate_quant(x, blocks, bits=bits))
+        want = np.asarray(ref.gsr_rotate_quant_ref(x, blocks, bits=bits))
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_fused_equals_unfused_pipeline(self):
+        from repro.core.hadamard import walsh
+
+        x = jnp.asarray(rand((16, 128), seed=3))
+        blocks = jnp.asarray(walsh(32), jnp.float32)[None]
+        fused = np.asarray(ops.gsr_rotate_quant(x, blocks, bits=4))
+        twostep = np.asarray(
+            ops.rtn_fake_quant(ops.grouped_rotate(x, blocks), bits=4, group=32)
+        )
+        np.testing.assert_allclose(fused, twostep, rtol=2e-5, atol=2e-5)

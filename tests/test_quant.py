@@ -1,0 +1,182 @@
+"""Tests for RTN quantizers, packing, GPTQ, and learned-rotation baselines."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant import gptq, pack, qlinear, rtn, spinquant
+from repro.quant.qtypes import QuantConfig, WAKVConfig, paper_act_cfg, paper_weight_cfg
+
+
+def rand(shape, seed=0, scale=1.0):
+    return (np.random.default_rng(seed).normal(size=shape) * scale).astype(np.float32)
+
+
+class TestRTN:
+    @pytest.mark.parametrize("bits", [2, 4, 8])
+    @pytest.mark.parametrize("symmetric", [True, False])
+    def test_roundtrip_error_bounded(self, bits, symmetric):
+        cfg = QuantConfig(bits=bits, group=16, symmetric=symmetric)
+        w = rand((64, 32), seed=bits)
+        dq = rtn.fake_quant_weight(jnp.asarray(w), cfg)
+        # max error is half an LSB of the per-group scale
+        wg = w.reshape(4, 16, 32)
+        if symmetric:
+            lsb = np.abs(wg).max(1) / (2 ** (bits - 1) - 1)
+        else:
+            lsb = (wg.max(1) - wg.min(1)) / (2**bits - 1)
+        err = np.abs(np.asarray(dq).reshape(4, 16, 32) - wg)
+        assert np.all(err <= lsb[:, None, :] * 0.5 + 1e-6)
+
+    def test_8bit_near_lossless(self):
+        cfg = QuantConfig(bits=8, group=32, symmetric=False)
+        w = rand((128, 16))
+        dq = np.asarray(rtn.fake_quant_weight(jnp.asarray(w), cfg))
+        assert np.abs(dq - w).max() < 0.02
+
+    def test_mse_clip_never_worse(self):
+        cfg_plain = QuantConfig(bits=2, group=32, symmetric=False)
+        cfg_mse = cfg_plain.replace(mse_clip=True)
+        # heavy-tailed weights where clipping helps
+        w = rand((64, 32), seed=7)
+        w[5, :] *= 20.0
+        e_plain = np.mean((np.asarray(rtn.fake_quant_weight(jnp.asarray(w), cfg_plain)) - w) ** 2)
+        e_mse = np.mean((np.asarray(rtn.fake_quant_weight(jnp.asarray(w), cfg_mse)) - w) ** 2)
+        assert e_mse <= e_plain + 1e-9
+
+    def test_act_quant_shapes_and_sym(self):
+        cfg = paper_act_cfg(4, group=32)
+        x = rand((2, 5, 64))
+        dq = np.asarray(rtn.fake_quant_act_grouped(jnp.asarray(x), cfg))
+        assert dq.shape == x.shape
+        # symmetric: zero maps to zero
+        x0 = np.zeros((1, 64), np.float32)
+        assert np.all(np.asarray(rtn.fake_quant_act_grouped(jnp.asarray(x0), cfg)) == 0)
+
+    def test_wakv_parse(self):
+        c = WAKVConfig.parse("W2A4KV4")
+        assert (c.weight.bits, c.act.bits, c.kv.bits) == (2, 4, 4)
+        assert not c.weight.symmetric and c.weight.mse_clip  # paper A.1
+        assert c.act.symmetric and c.act.clip_ratio == 0.9
+        assert WAKVConfig.parse("W16A16").tag() == "W16A16KV16"
+
+
+class TestPack:
+    @pytest.mark.parametrize("bits", [2, 4, 8])
+    @pytest.mark.parametrize("symmetric", [True, False])
+    def test_pack_roundtrip(self, bits, symmetric):
+        cfg = QuantConfig(bits=bits, group=16, symmetric=symmetric)
+        w = rand((64, 24), seed=bits + 10)
+        qt = rtn.quantize_weight_grouped(jnp.asarray(w), cfg)
+        if symmetric:
+            qt = type(qt)(codes=qt.codes, scale=qt.scale, zero=None, bits=bits, group=16)
+        packed = pack.pack(qt)
+        assert packed.codes.shape[0] == 64 // pack.codes_per_byte(bits)
+        unpacked = pack.unpack(packed)
+        np.testing.assert_array_equal(np.asarray(unpacked.codes), np.asarray(qt.codes))
+
+    def test_packed_bytes(self):
+        cfg = QuantConfig(bits=2, group=16, symmetric=False)
+        qt = pack.pack(rtn.quantize_weight_grouped(jnp.asarray(rand((64, 32))), cfg))
+        assert qt.codes.dtype == jnp.uint8 and qt.codes.shape == (16, 32)
+
+
+class TestQLinear:
+    def test_dequant_matmul_matches_fp(self):
+        cfg = QuantConfig(bits=8, group=32, symmetric=False)
+        w = rand((64, 48))
+        x = rand((5, 64), seed=3)
+        qt = qlinear.quantize_for_serving(jnp.asarray(w), cfg)
+        y = np.asarray(qlinear.dequant_matmul(jnp.asarray(x), qt))
+        np.testing.assert_allclose(y, x @ w, rtol=0.05, atol=0.05)
+
+
+class TestGPTQ:
+    def _setup(self, c=64, h=32, n=512, seed=0):
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=(n, c)).astype(np.float32)
+        # correlated activations (realistic: GPTQ's advantage needs them)
+        mix = rng.normal(size=(c, c)).astype(np.float32) * 0.3 + np.eye(c, dtype=np.float32)
+        x = x @ mix
+        w = rng.normal(size=(c, h)).astype(np.float32)
+        hmat = gptq.collect_hessian(jnp.asarray(x))
+        return jnp.asarray(x), jnp.asarray(w), hmat
+
+    @pytest.mark.parametrize("bits", [2, 4])
+    def test_gptq_beats_rtn_on_proxy(self, bits):
+        x, w, hmat = self._setup()
+        cfg = QuantConfig(bits=bits, group=16, symmetric=False)
+        _, wq_gptq = gptq.gptq_quantize(w, hmat, cfg)
+        wq_rtn = rtn.fake_quant_weight(w, cfg)
+        l_gptq = float(gptq.gptq_proxy_loss(w, wq_gptq, hmat))
+        l_rtn = float(gptq.gptq_proxy_loss(w, wq_rtn, hmat))
+        assert l_gptq < l_rtn
+
+    def test_gptq_output_mse(self):
+        x, w, hmat = self._setup(seed=4)
+        cfg = QuantConfig(bits=4, group=16, symmetric=False)
+        _, wq = gptq.gptq_quantize(w, hmat, cfg)
+        y, yq = np.asarray(x @ w), np.asarray(x @ wq)
+        rel = np.linalg.norm(y - yq) / np.linalg.norm(y)
+        assert rel < 0.15
+
+    def test_gptq_identity_hessian_reduces_to_rtn(self):
+        _, w, _ = self._setup(seed=5)
+        cfg = QuantConfig(bits=4, group=16, symmetric=False)
+        eye = jnp.eye(w.shape[0], dtype=jnp.float32)
+        _, wq = gptq.gptq_quantize(w, eye, cfg, percdamp=1e-8)
+        np.testing.assert_allclose(
+            np.asarray(wq), np.asarray(rtn.fake_quant_weight(w, cfg)), atol=1e-4
+        )
+
+
+class TestSpinQuantLite:
+    def test_cayley_orthogonal(self):
+        a = jnp.asarray(rand((32, 32), seed=9))
+        r = np.asarray(spinquant.cayley(a))
+        np.testing.assert_allclose(r @ r.T, np.eye(32), atol=1e-4)
+
+    def test_learning_improves_proxy(self):
+        from repro.core.rotation import make_rotation
+
+        rng = np.random.default_rng(0)
+        w = [jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32) * (1 + 3 * (rng.random((32, 1)) > 0.9)))]
+        cfg = QuantConfig(bits=2, group=8, symmetric=False)
+        r0 = make_rotation("GH", 32, seed=0).dense()
+        res = spinquant.optimize_rotation(r0, w, [], cfg, steps=40, lr=3e-3)
+        assert res.losses[-1] < res.losses[0]
+        r = res.rotation
+        np.testing.assert_allclose(r @ r.T, np.eye(32), atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    bits=st.sampled_from([2, 3, 4, 8]),
+    seed=st.integers(0, 1000),
+    sym=st.booleans(),
+)
+def test_property_quant_codes_in_range(bits, seed, sym):
+    cfg = QuantConfig(bits=bits, group=8, symmetric=sym)
+    w = jnp.asarray(rand((32, 8), seed=seed, scale=5.0))
+    qt = rtn.quantize_weight_grouped(w, cfg)
+    codes = np.asarray(qt.codes)
+    assert codes.min() >= cfg.qmin and codes.max() <= cfg.qmax
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_property_rotation_invariance_of_fp_matmul(seed):
+    """Rotating W front+rear and counter-rotating inputs is exact in fp:
+    the whole PTQ scheme rests on this equivalence."""
+    from repro.core.rotation import make_rotation
+
+    rng = np.random.default_rng(seed)
+    c, h = 32, 16
+    w = rng.normal(size=(c, h))
+    x = rng.normal(size=(4, c))
+    r = make_rotation("GSR", c, group=8).dense()
+    y = x @ w
+    y_rot = (x @ r) @ (r.T @ w)
+    np.testing.assert_allclose(y, y_rot, atol=1e-10)

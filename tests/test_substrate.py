@@ -1,0 +1,223 @@
+"""Training loop, checkpoint/restart, grad compression, PTQ pipeline, serving."""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager, restore_checkpoint, save_checkpoint
+from repro.data import SyntheticLM
+from repro.data.synthetic import make_batch_for
+from repro.models.common import QuantizeSpec
+from repro.models.registry import get_arch
+from repro.quant.pipeline import PTQConfig, quantize_model
+from repro.train import grad_compress
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.train_step import make_eval_step, make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def _batches(cfg, batch_size=4, seq=32, start=0):
+    data = SyntheticLM(cfg.vocab, seq, seed=1)
+    step = start
+    while True:
+        yield make_batch_for(cfg, data, step, shard=0, batch_size=batch_size)
+        step += 1
+
+
+class TestTraining:
+    def test_loss_decreases(self):
+        arch = get_arch("smollm-135m", reduced=True)
+        opt = OptConfig(lr=1e-2, warmup_steps=5, total_steps=100)
+        step = jax.jit(make_train_step(arch, opt))
+        params = arch.init(jax.random.PRNGKey(0), jnp.float32)
+        state = init_opt_state(params, opt)
+        gen = _batches(arch.config)
+        losses = []
+        for i in range(100):
+            params, state, _, m = step(params, state, {}, {k: jnp.asarray(v) for k, v in next(gen).items()})
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0] - 0.5, losses[::20]
+
+    def test_microbatch_equivalence(self):
+        """Grad accumulation over microbatches ~= full-batch step."""
+        arch = get_arch("smollm-135m", reduced=True)
+        opt = OptConfig(lr=1e-3, warmup_steps=0, grad_clip=0.0, weight_decay=0.0)
+        params = arch.init(jax.random.PRNGKey(0), jnp.float32)
+        batch = {k: jnp.asarray(v) for k, v in next(_batches(arch.config, batch_size=4)).items()}
+        s1 = jax.jit(make_train_step(arch, opt, microbatches=1))
+        s2 = jax.jit(make_train_step(arch, opt, microbatches=2))
+        p1, *_ , m1 = s1(params, init_opt_state(params, opt), {}, batch)
+        p2, *_ , m2 = s2(params, init_opt_state(params, opt), {}, batch)
+        np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-5)
+        d = max(
+            float(jnp.abs(a - b).max())
+            for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2))
+        )
+        assert d < 5e-5, d
+
+    def test_nan_step_skipped(self):
+        arch = get_arch("smollm-135m", reduced=True)
+        opt = OptConfig(lr=1e-3)
+        step = jax.jit(make_train_step(arch, opt))
+        params = arch.init(jax.random.PRNGKey(0), jnp.float32)
+        state = init_opt_state(params, opt)
+        batch = {k: jnp.asarray(v) for k, v in next(_batches(arch.config)).items()}
+        bad = dict(params)
+        bad["final_norm"] = params["final_norm"].at[0].set(jnp.nan)  # always used
+        p2, s2, _, m = step(bad, state, {}, batch)
+        assert int(m["skipped"]) == 1
+        np.testing.assert_array_equal(
+            np.asarray(p2["final_norm"]), np.asarray(bad["final_norm"])
+        )
+        assert int(s2.step) == 0  # optimizer untouched
+
+
+class TestCheckpoint:
+    def test_save_restore_roundtrip(self, tmp_path):
+        tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                "b": {"c": jnp.ones((4,), jnp.bfloat16)}, "s": jnp.asarray(3, jnp.int32)}
+        save_checkpoint(str(tmp_path), 7, tree)
+        out, step = restore_checkpoint(str(tmp_path), tree)
+        assert step == 7
+        for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            assert x.dtype == y.dtype
+            np.testing.assert_array_equal(np.asarray(x, np.float32), np.asarray(y, np.float32))
+
+    def test_retention_and_latest(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep_last=2)
+        tree = {"x": jnp.zeros((2,))}
+        for s in (1, 2, 3, 4):
+            mgr.save(s, tree)
+        names = sorted(os.listdir(tmp_path))
+        assert names == ["step_00000003", "step_00000004"]
+
+    def test_crash_restart_resumes(self, tmp_path):
+        arch = get_arch("smollm-135m", reduced=True)
+        opt = OptConfig(lr=1e-3, total_steps=30)
+        tcfg = TrainerConfig(total_steps=30, ckpt_interval=10, log_interval=100,
+                             ckpt_dir=str(tmp_path), fail_at_step=25)
+        tr = Trainer(arch, opt, tcfg)
+        with pytest.raises(RuntimeError, match="injected failure"):
+            tr.run(_batches(arch.config))
+        # restart: resumes from step 20, finishes
+        tcfg2 = TrainerConfig(total_steps=30, ckpt_interval=10, log_interval=100,
+                              ckpt_dir=str(tmp_path))
+        tr2 = Trainer(arch, opt, tcfg2)
+        assert tr2.step == 20
+        out = tr2.run(_batches(arch.config, start=tr2.step))
+        assert out["step"] == 30
+
+
+class TestGradCompression:
+    def test_error_feedback_reduces_bias(self):
+        rng = np.random.default_rng(0)
+        g = jnp.asarray(rng.normal(size=(2048,)).astype(np.float32) * 1e-3)
+        err = jnp.zeros_like(g)
+        total = jnp.zeros_like(g)
+        for _ in range(50):
+            dq, err = grad_compress._quant_ef(g, err)[0:1][0], None  # placeholder
+            break
+        # use public API: accumulated compressed grads converge to the truth
+        err_state = {"g": jnp.zeros_like(g)}
+        acc = jnp.zeros_like(g)
+        for _ in range(50):
+            out, err_state = grad_compress.compress_for_allreduce({"g": g}, err_state)
+            acc = acc + out["g"]
+        rel = float(jnp.linalg.norm(acc / 50 - g) / jnp.linalg.norm(g))
+        assert rel < 0.02, rel
+
+    def test_int8_psum_shard_map(self):
+        import os
+        devs = jax.devices()
+        if len(devs) < 2:
+            pytest.skip("single device container: exercised via dryrun configs")
+
+    def test_training_with_compression_converges(self):
+        arch = get_arch("smollm-135m", reduced=True)
+        opt = OptConfig(lr=1e-2, warmup_steps=5)
+        step = jax.jit(make_train_step(arch, opt, compress_grads=True))
+        params = arch.init(jax.random.PRNGKey(0), jnp.float32)
+        state = init_opt_state(params, opt)
+        err = grad_compress.init_error_state(params)
+        gen = _batches(arch.config)
+        losses = []
+        for i in range(60):
+            params, state, err, m = step(params, state, err,
+                                         {k: jnp.asarray(v) for k, v in next(gen).items()})
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0] - 0.3, losses[::15]
+
+
+class TestPTQPipeline:
+    @pytest.mark.parametrize("kind", ["GH", "GW", "LH", "GSR"])
+    def test_rtn_pipeline_runs_all_kinds(self, kind):
+        arch = get_arch("smollm-135m", reduced=True)
+        params = arch.init(jax.random.PRNGKey(0), jnp.float32)
+        ptq = PTQConfig(r1_kind=kind, wakv="W4A16", method="rtn", group=32)
+        qp, spec = quantize_model(arch, params, ptq)
+        batch = next(_batches(arch.config))
+        logits = arch.forward(qp, {k: jnp.asarray(v) for k, v in batch.items()}, spec)
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_gptq_pipeline_better_than_rtn_w2(self):
+        """The central paper mechanic: on a *trained* model, rotated GPTQ-W2
+        degrades PPL less than rotated RTN-W2."""
+        arch = get_arch("smollm-135m", reduced=True)
+        opt = OptConfig(lr=3e-3, warmup_steps=5)
+        step = jax.jit(make_train_step(arch, opt))
+        params = arch.init(jax.random.PRNGKey(0), jnp.float32)
+        state = init_opt_state(params, opt)
+        gen = _batches(arch.config)
+        for _ in range(80):
+            params, state, _, _ = step(params, state, {},
+                                       {k: jnp.asarray(v) for k, v in next(gen).items()})
+        eval_batch = {k: jnp.asarray(v) for k, v in next(gen).items()}
+        ev = jax.jit(make_eval_step(arch))
+        base = float(ev(params, eval_batch)["nll"])
+
+        nlls = {}
+        for method in ("rtn", "gptq"):
+            ptq = PTQConfig(r1_kind="GSR", wakv="W2A16", method=method, group=16,
+                            n_calib=4, calib_seq=32)
+            qp, spec = quantize_model(arch, params, ptq)
+            evq = jax.jit(make_eval_step(arch, spec))
+            nlls[method] = float(evq(qp, eval_batch)["nll"])
+        assert nlls["gptq"] >= base - 0.05  # quantization can't beat fp
+        assert nlls["gptq"] < nlls["rtn"], nlls
+
+    def test_learned_pipeline_runs(self):
+        arch = get_arch("smollm-135m", reduced=True)
+        params = arch.init(jax.random.PRNGKey(0), jnp.float32)
+        ptq = PTQConfig(r1_kind="GSR", wakv="W4A16", method="rtn", group=32,
+                        learned="rotation+scale", learn_steps=10)
+        qp, spec = quantize_model(arch, params, ptq)
+        batch = next(_batches(arch.config))
+        logits = arch.forward(qp, {k: jnp.asarray(v) for k, v in batch.items()}, spec)
+        assert np.isfinite(np.asarray(logits)).all()
+
+
+class TestServing:
+    def test_generate_greedy(self):
+        from repro.serve.engine import ServeConfig, ServeEngine
+
+        arch = get_arch("smollm-135m", reduced=True)
+        params = arch.init(jax.random.PRNGKey(0), jnp.float32)
+        eng = ServeEngine(arch, params, ServeConfig(max_seq=64, batch_slots=4))
+        prompts = np.random.default_rng(0).integers(0, arch.config.vocab, size=(3, 8)).astype(np.int32)
+        out = eng.generate(prompts, max_new_tokens=5)
+        assert out["tokens"].shape == (3, 5)
+        assert out["final_length"] == 13
+
+    def test_generate_with_quantized_kv(self):
+        from repro.serve.engine import ServeConfig, ServeEngine
+
+        arch = get_arch("smollm-135m", reduced=True)
+        params = arch.init(jax.random.PRNGKey(0), jnp.float32)
+        spec = QuantizeSpec(kv_bits=4)
+        eng = ServeEngine(arch, params, ServeConfig(max_seq=64, batch_slots=2), spec)
+        prompts = np.random.default_rng(1).integers(0, arch.config.vocab, size=(2, 8)).astype(np.int32)
+        out = eng.generate(prompts, max_new_tokens=4)
+        assert out["tokens"].shape == (2, 4)
