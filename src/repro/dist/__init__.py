@@ -1,0 +1,35 @@
+"""Distribution layer: sharding rules, elastic re-mesh, explicit collectives.
+
+Design note
+-----------
+Everything the mesh-scale launchers need to place a model lives here, in
+three deliberately separate concerns:
+
+* :mod:`repro.dist.sharding` derives ``PartitionSpec`` pytrees *from
+  shapes, not arrays* — every rule consumes the ``ShapeDtypeStruct``
+  trees produced by ``Arch.param_specs`` / ``cache_specs`` /
+  ``input_specs``, so specs for a 400B model are computed without
+  allocating a byte.  Rules are name+rank keyed per model family
+  (dense / MoE / MLA / xLSTM / Zamba hybrid): column-parallel
+  up-projections, row-parallel down-projections, expert-parallel MoE
+  stacks, and packed quantized leaves (codes + per-group scales) that
+  co-shard with their source weight's output axis.  A single
+  ``sanitize_pspecs`` pass reconciles the *intent* specs against a
+  concrete mesh by dropping any axis placement that does not divide the
+  dimension — the one place divisibility is decided, shared by the
+  launchers and by ``models.moe``'s in-graph sharding hints.
+* :mod:`repro.dist.elastic` plans mesh shape + per-device batch +
+  gradient accumulation for an arbitrary surviving device count, so an
+  elastic resize preserves the global batch (and therefore the training
+  trajectory) instead of silently changing it.
+* :mod:`repro.dist.collectives` holds the explicit ``shard_map``
+  all-to-all expert dispatch schedule — the optimized alternative to
+  letting GSPMD infer collectives from the MoE einsums.
+
+The dry-run (``launch/dryrun.py``) lowers every (arch x shape x mesh)
+cell against 512 placeholder host devices using exactly these specs; the
+serving engine and trainer accept an optional mesh and reuse the same
+rules, so the tested single-device path and the production path diverge
+only in placement, never in math.
+"""
+from repro.dist import collectives, elastic, sharding  # noqa: F401

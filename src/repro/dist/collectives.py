@@ -1,0 +1,152 @@
+"""Explicit shard_map collectives: the MoE expert-dispatch schedule.
+
+Under plain pjit, ``models.moe.moe_apply`` pins the dispatch buffer to
+``P(dp, "model", None, None)`` and lets GSPMD infer the resharding
+collectives around the expert einsums.  That is correct but leaves the
+schedule to the partitioner: the (B, E, cap, D) buffer is replicated
+across the model axis before the slice, so every model rank materialises
+the full dispatch volume.
+
+The optimized variant here makes the schedule explicit with ``shard_map``:
+
+1. the dispatch buffer enters *fully batch-sharded* — batch over the data
+   axes **and** the model axis, experts unsharded — so no rank ever holds
+   a replicated copy;
+2. :func:`all_to_all_dispatch` rotates it over the model axis (split the
+   expert axis, concatenate the batch axis): afterwards each model rank
+   holds **all** tokens for its ``E / ep`` local experts;
+3. the expert FFN runs as purely local einsums (no inferred collectives
+   possible — shard_map guarantees it);
+4. :func:`all_to_all_combine` rotates the outputs back to the
+   batch-sharded layout for the token-side combine in ``moe_apply``.
+
+Wire volume is one activation-sized all-to-all each way — the minimum any
+EP schedule can do — versus GSPMD's replicate+slice on dispatch and
+expert-axis all-gather on combine.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+def all_to_all_dispatch(xe: jax.Array, axis_name: str = "model") -> jax.Array:
+    """(B_loc, E, cap, D) batch-sharded -> (B_loc*ep, E/ep, cap, D) expert-sharded.
+
+    Must run inside ``shard_map`` (or any SPMD context binding
+    ``axis_name``).  With ep == 1 this is the identity.
+    """
+    if jax.lax.psum(1, axis_name) == 1:
+        return xe
+    return jax.lax.all_to_all(xe, axis_name, split_axis=1, concat_axis=0,
+                              tiled=True)
+
+
+def all_to_all_combine(ye: jax.Array, axis_name: str = "model") -> jax.Array:
+    """Inverse of :func:`all_to_all_dispatch` for the expert outputs."""
+    if jax.lax.psum(1, axis_name) == 1:
+        return ye
+    return jax.lax.all_to_all(ye, axis_name, split_axis=0, concat_axis=1,
+                              tiled=True)
+
+
+def _batch_entry(data_axes: Sequence[str], expert_axis: str):
+    return tuple(data_axes) + (expert_axis,)
+
+
+def expert_ffn_ep(
+    xe: jax.Array,
+    w_gate: jax.Array,
+    w_up: jax.Array,
+    w_down: jax.Array,
+    mesh,
+    *,
+    data_axes: Sequence[str] = ("data",),
+    expert_axis: str = "model",
+    spec=None,
+) -> jax.Array:
+    """Explicit-EP expert FFN over a (B, E, cap, D) dispatch buffer.
+
+    ``xe`` is consumed batch-sharded over ``data_axes + (expert_axis,)``
+    and returned in the same layout; expert weights ``(E, D, de)`` /
+    ``(E, de, D)`` are sharded over ``expert_axis``.  The batch axis must
+    divide the full mesh size and E must divide the ``expert_axis`` size
+    (use ``dist.sharding.sanitize_pspecs`` upstream to guarantee it).
+
+    ``spec`` is the model QuantizeSpec: the W4A4 activation hooks (act
+    quant + R4 online rotation before the down projection) are applied
+    inside the local compute, exactly mirroring ``moe_apply``.
+    """
+    from repro.models.common import NOQUANT, act_q, apply_r4
+
+    spec = spec or NOQUANT
+    batch = _batch_entry(data_axes, expert_axis)
+    xe_spec = P(batch, None, None, None)
+    w_spec = P(expert_axis, None, None)
+
+    def local(xl, wg, wu, wd):
+        xl = all_to_all_dispatch(xl, expert_axis)
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", xl, wg)) * jnp.einsum(
+            "becd,edf->becf", xl, wu
+        )
+        h = apply_r4(h, spec)
+        h = act_q(h, spec)
+        yl = jnp.einsum("becf,efd->becd", h, wd)
+        return all_to_all_combine(yl, expert_axis)
+
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(xe_spec, w_spec, w_spec, w_spec),
+        out_specs=xe_spec,
+        check_rep=False,
+    )
+    return fn(xe, w_gate, w_up, w_down)
+
+
+def psum_partial_combine(y_partials: jax.Array, mesh,
+                         expert_axis: str = "model") -> jax.Array:
+    """Sum stacked per-rank partials ``(ep, ...)`` over the expert axis.
+
+    The row-parallel alternative to all-gathering expert outputs: each
+    rank combines only its local experts into a (B, S, D) partial, the
+    partials are stacked on a leading axis sharded over ``expert_axis``
+    (so slice ``i`` lives on rank ``i`` — never replicated), and the
+    activation-sized psum finishes the reduction.  Returns the summed
+    ``(...)`` array (leading axis removed).
+    """
+    if y_partials.shape[0] != ep_degree(mesh, expert_axis):
+        raise ValueError(
+            f"need one partial per {expert_axis!r} rank: "
+            f"{y_partials.shape[0]} != {ep_degree(mesh, expert_axis)}"
+        )
+    in_spec = P(expert_axis, *([None] * (y_partials.ndim - 1)))
+    out_spec = P(*([None] * (y_partials.ndim - 1)))
+
+    def local(y):
+        return jax.lax.psum(y[0], expert_axis)
+
+    fn = shard_map(local, mesh=mesh, in_specs=(in_spec,), out_specs=out_spec,
+                   check_rep=False)
+    return fn(y_partials)
+
+
+def ep_degree(mesh, expert_axis: str = "model") -> int:
+    """Expert-parallel degree of a mesh (1 when the axis is absent)."""
+    try:
+        sizes = dict(mesh.shape.items()) if hasattr(mesh.shape, "items") else {
+            name: size for name, size in mesh.shape_tuple
+        }
+    except AttributeError:
+        return 1
+    return int(sizes.get(expert_axis, 1))
+
+
+def dispatch_layout(n_tokens_local: int, n_experts: int, ep: int
+                    ) -> Tuple[int, int]:
+    """(tokens_after_dispatch, local_experts) for capacity planning."""
+    assert n_experts % ep == 0, (n_experts, ep)
+    return n_tokens_local * ep, n_experts // ep

@@ -1,0 +1,98 @@
+"""Elastic re-mesh planning: survive device-count changes without changing
+the training trajectory.
+
+Synchronous SPMD has no per-step straggler story — a slow or lost host is
+a collective-latency event — so elasticity happens *between* steps: the
+launcher observes the surviving device count, asks :func:`plan_remesh`
+for a new (data, model) mesh plus a per-device batch / gradient-
+accumulation split that preserves the global batch, rebuilds the mesh,
+and reshards the checkpointed state with :func:`reshard`.  Keeping the
+global batch fixed keeps the optimizer schedule and loss curve
+comparable across resizes; the model axis shrinks only when the new
+device count stops dividing by the preferred tensor-parallel degree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+PREFERRED_MODEL_PARALLEL = 16  # one v5e ICI torus row
+MAX_PER_DEVICE_BATCH = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    mesh_shape: Tuple[int, int]  # (data, model)
+    per_device_batch: int
+    grad_accum: int
+    global_batch: int
+    axis_names: Tuple[str, str] = ("data", "model")
+
+    @property
+    def n_devices(self) -> int:
+        return self.mesh_shape[0] * self.mesh_shape[1]
+
+    @property
+    def effective_batch(self) -> int:
+        """Tokens-batch actually stepped; >= global_batch, == when exact."""
+        return self.per_device_batch * self.mesh_shape[0] * self.grad_accum
+
+
+def plan_remesh(n_devices: int, global_batch: int, *,
+                model_parallel: int = PREFERRED_MODEL_PARALLEL,
+                max_per_device_batch: int = MAX_PER_DEVICE_BATCH) -> RemeshPlan:
+    """Plan a (data, model) mesh for ``n_devices`` preserving ``global_batch``.
+
+    The model axis keeps the preferred tensor-parallel degree whenever it
+    divides the device count, and otherwise halves until it does (1 always
+    divides).  When the data degree divides the global batch the split is
+    exact — ``per_device_batch * data * grad_accum == global_batch`` —
+    with grad-accum absorbing an exact divisor so the live microbatch
+    stays under ``max_per_device_batch``; otherwise the per-device batch
+    rounds up, never down (a too-large batch changes the trajectory less
+    than a silently shrunken one), split the same way under the cap.
+    """
+    if n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    if global_batch < 1:
+        raise ValueError(f"global_batch must be >= 1, got {global_batch}")
+    model = max(1, model_parallel)
+    while model > 1 and n_devices % model:
+        model //= 2
+    data = n_devices // model
+
+    if global_batch % data == 0:
+        per = global_batch // data
+        # smallest accum that keeps the split exact AND under the live
+        # microbatch cap (accum == per, i.e. microbatch 1, always works)
+        accum = next(
+            a for a in range(1, per + 1)
+            if per % a == 0 and per // a <= max_per_device_batch
+        )
+        per //= accum
+    else:
+        per = -(-global_batch // data)  # ceil: round up, never shrink
+        accum = -(-per // max_per_device_batch)
+        per = -(-per // accum)
+    return RemeshPlan((data, model), per, accum, global_batch)
+
+
+def make_mesh(plan: RemeshPlan):
+    """Concrete mesh for a plan (uses all planned devices)."""
+    return jax.make_mesh(plan.mesh_shape, plan.axis_names)
+
+
+def reshard(mesh, specs, tree):
+    """Place ``tree`` (restored checkpoint state) onto ``mesh`` per ``specs``.
+
+    Used after an elastic resize: the sanitized spec tree from
+    ``dist.sharding`` is valid for any mesh it was sanitized against, so
+    re-placement is one ``device_put`` per leaf.
+    """
+    return jax.tree.map(
+        lambda spec, x: jax.device_put(x, NamedSharding(mesh, spec)),
+        specs, tree, is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,273 @@
+"""PartitionSpec derivation for every registered architecture.
+
+Rules are *intent* specs computed from ``ShapeDtypeStruct`` trees (never
+concrete arrays) and are keyed on leaf name + rank, so the same rule set
+covers a stacked ``(L, C, H)`` transformer weight, an interleaved-MoE
+``(G, every, C, H)`` stack, and an unstacked Zamba shared-block ``(C, H)``
+matrix.  Layout conventions (trailing-axis relative, mesh axes
+``data``/``pod`` = data parallel, ``model`` = tensor/expert parallel):
+
+* column-parallel (up-projections, qkv, router, lm_head): ``model`` on
+  the output (last) axis, FSDP axes on the contraction axis.
+* row-parallel (down/out-projections): ``model`` on the contraction
+  (second-to-last) axis, FSDP axes on the output axis.
+* expert-parallel (MoE expert stacks): ``model`` on the expert axis
+  (third-from-last), FSDP on the ``d_model`` axis.
+* embeddings: ``model`` on the vocab axis; norms/gates/small recurrences
+  replicated.
+
+Quantized (packed) leaves inherit their source weight's spec verbatim in
+``launch.quant_serve.quant_param_pspecs``: codes ``(..., C/pb, H)`` and
+grouped scales ``(..., C/g, H)`` keep ``model`` on the output axis H, so
+codes and scales always co-shard with the weight they dequantize into.
+
+Every intent spec must pass :func:`sanitize_pspecs` against a concrete
+mesh before use — that is the single place axis divisibility is decided
+(a placement whose mesh-axis product does not divide the dimension is
+dropped, i.e. replicated).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+# Leaf-name role sets (union over all families; rank rules disambiguate).
+_COL = {
+    "wq", "wk", "wv", "w_gate", "w_up", "shared_gate", "shared_up",
+    "wq_a", "wq_b", "wkv_a", "wx", "wo_gate", "wi", "wf", "in_proj",
+    "router", "lm_head", "conv_w", "patch_proj",
+}
+_ROW = {"wo", "w_down", "shared_down", "out_proj"}
+_BIAS = {"bq", "bk", "bv", "A_log", "D_skip", "dt_bias"}
+_REPLICATED = {
+    "attn_norm", "mlp_norm", "norm", "q_norm", "kv_norm", "final_norm",
+    "rh",
+}
+
+
+def _dp_entry(axes: Sequence[str]):
+    axes = tuple(axes)
+    return axes[0] if len(axes) == 1 else axes
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        key = getattr(p, "key", None)
+        if key is not None:
+            out.append(str(key))
+    return tuple(out)
+
+
+def _axis_sizes(mesh) -> Dict[str, int]:
+    """Axis-name -> size for concrete Mesh, AbstractMesh, or test doubles."""
+    shape = getattr(mesh, "shape", None)
+    if shape is not None and hasattr(shape, "items"):
+        return dict(shape.items())
+    if hasattr(mesh, "shape_tuple"):
+        return {name: size for name, size in mesh.shape_tuple}
+    return dict(zip(mesh.axis_names, np.shape(mesh.devices)))
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def param_pspecs(cfg, params_sds, *, fsdp_axes: Optional[Sequence[str]] = None,
+                 fsdp_size: int = 16):
+    """One PartitionSpec per leaf of ``params_sds`` (rank-matched).
+
+    ``fsdp_axes`` (e.g. ``("data",)`` or ``("pod", "data")``) shard the
+    designated storage axis of each large matrix; placement is skipped up
+    front when the axis is not divisible by ``fsdp_size`` (the product of
+    the FSDP mesh axes) so intent specs stay close to what survives
+    :func:`sanitize_pspecs`.
+    """
+    fsdp = _dp_entry(fsdp_axes) if fsdp_axes else None
+
+    def fsdp_ok(dim: int) -> bool:
+        return fsdp is not None and fsdp_size > 0 and dim % fsdp_size == 0
+
+    def visit(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        shape = leaf.shape
+        nd = len(shape)
+        parts = [None] * nd
+
+        if nd == 0 or name in _REPLICATED or name.endswith("norm"):
+            return P()
+        if name in _BIAS:
+            parts[-1] = "model"
+            return P(*parts)
+        is_expert = (
+            "moe_mlp" in names
+            or (
+                cfg.family == "moe"
+                and cfg.moe_every == 1
+                and name in ("w_gate", "w_up", "w_down")
+                and nd >= 4
+            )
+        ) and name != "router"
+        if is_expert and nd >= 3:
+            # (..., E, C, H): expert-parallel over model; FSDP on d_model.
+            parts[-3] = "model"
+            ax = -1 if name == "w_down" else -2
+            if fsdp_ok(shape[ax]):
+                parts[ax] = fsdp
+            return P(*parts)
+        if name == "embed":
+            # (..., V, D): vocab on model, FSDP on d_model.
+            if nd >= 2:
+                parts[-2] = "model"
+                if fsdp_ok(shape[-1]):
+                    parts[-1] = fsdp
+            return P(*parts)
+        if name == "wkv_b" and nd >= 3:
+            # (..., rank, H, nope+v): shard the head axis.
+            parts[-2] = "model"
+            if fsdp_ok(shape[-3]):
+                parts[-3] = fsdp
+            return P(*parts)
+        if name in _ROW and nd >= 2:
+            parts[-2] = "model"
+            if fsdp_ok(shape[-1]):
+                parts[-1] = fsdp
+            return P(*parts)
+        if name in _COL and nd >= 2:
+            parts[-1] = "model"
+            if fsdp_ok(shape[-2]):
+                parts[-2] = fsdp
+            return P(*parts)
+        # Unknown leaf: replicate (correct for any shape; costs memory only).
+        return P()
+
+    return jax.tree_util.tree_map_with_path(visit, params_sds)
+
+
+# ---------------------------------------------------------------------------
+# Caches (KV / SSM / conv state)
+# ---------------------------------------------------------------------------
+
+
+def cache_pspecs(cfg, cache_sds, dp_axes: Sequence[str], *,
+                 shard_batch: bool = True, model_size: int = 16):
+    """Specs for decode/prefill cache trees of every family.
+
+    The batch axis shards over the data axes (unless ``shard_batch=False``,
+    the long-context regime where batch=1); the head-like axis shards over
+    ``model`` only when divisible by ``model_size`` — KV-head counts are
+    small, so the fallback tries the head_dim axis before replicating.
+    """
+    dp = _dp_entry(dp_axes) if shard_batch else None
+
+    def maybe_model(dim: int) -> Optional[str]:
+        return "model" if model_size > 0 and dim % model_size == 0 else None
+
+    def visit(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        shape = leaf.shape
+        nd = len(shape)
+        if nd == 0 or name == "length":
+            return P()
+        parts = [None] * nd
+
+        if cfg.family == "ssm":
+            # xlstm: m leaves (G, m_per, B, H, ...) / s leaves (G, B, H, dh)
+            batch_ax = 2 if name == "m" else 1
+            head_ax = batch_ax + 1
+        else:
+            batch_ax = 1
+            head_ax = {
+                "ssm_s": 2, "ssm_n": 2, "conv": 3,
+                "k": 3, "v": 3, "k_scale": 3, "k_zero": 3,
+                "v_scale": 3, "v_zero": 3, "ckv": 3,
+            }.get(name)
+        if batch_ax < nd:
+            parts[batch_ax] = dp
+        if head_ax is not None and head_ax < nd:
+            placed = maybe_model(shape[head_ax])
+            if placed is None and head_ax + 1 < nd:
+                # e.g. few KV heads but wide head_dim: shard head_dim.
+                placed = maybe_model(shape[head_ax + 1])
+                if placed:
+                    parts[head_ax + 1] = placed
+            else:
+                parts[head_ax] = placed
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(visit, cache_sds)
+
+
+# ---------------------------------------------------------------------------
+# Token batches
+# ---------------------------------------------------------------------------
+
+
+def batch_pspecs(cfg, batch_sds, dp_axes: Sequence[str], *,
+                 shard_seq: bool = False):
+    """Specs for step-input trees (tokens / patch_embeds).
+
+    Default: batch axis over the data axes.  ``shard_seq=True`` is the
+    long-context layout: the *sequence* axis (axis 1) takes the data axes
+    instead (batch is 1 there, and a mesh axis may appear only once per
+    spec).
+    """
+    dp = _dp_entry(dp_axes)
+
+    def visit(path, leaf):
+        nd = leaf.ndim
+        if nd == 0:
+            return P()
+        parts = [None] * nd
+        if shard_seq and nd >= 2:
+            parts[1] = dp
+        else:
+            parts[0] = dp
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(visit, batch_sds)
+
+
+# ---------------------------------------------------------------------------
+# Divisibility sanitizer
+# ---------------------------------------------------------------------------
+
+
+def sanitize_pspecs(mesh, specs, sds):
+    """Drop axis placements that do not divide the dimension on ``mesh``.
+
+    The single divisibility gate between intent specs and a concrete mesh:
+    for every spec entry, the product of the named mesh-axis sizes must
+    divide the corresponding array dimension, and every named axis must
+    exist on the mesh — otherwise the entry is replaced by ``None``
+    (replicated).  Entry form (bare name vs. axis tuple) is preserved.
+
+    ``specs`` and ``sds`` must be matching pytrees with PartitionSpec /
+    ShapeDtypeStruct (or array) leaves respectively.
+    """
+    sizes = _axis_sizes(mesh)
+
+    def fix(spec, leaf):
+        if not isinstance(spec, P):
+            return spec
+        shape = leaf.shape
+        out = []
+        for i, entry in enumerate(spec):
+            if entry is None or i >= len(shape):
+                out.append(None)
+                continue
+            axis_names = entry if isinstance(entry, tuple) else (entry,)
+            if not all(a in sizes for a in axis_names):
+                out.append(None)
+                continue
+            total = int(np.prod([sizes[a] for a in axis_names]))
+            out.append(entry if total > 0 and shape[i] % total == 0 else None)
+        return P(*out)
+
+    return jax.tree.map(fix, specs, sds, is_leaf=lambda x: isinstance(x, P))

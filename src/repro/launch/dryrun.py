@@ -219,6 +219,8 @@ def lower_cell(
         ),
     }
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # older jaxlib: one dict per program
+        ca = ca[0] if ca else {}
     rec["cost"] = {
         "flops": float(ca.get("flops", 0.0)),
         "bytes_accessed": float(ca.get("bytes accessed", 0.0)),

@@ -32,31 +32,40 @@ from repro.models import common
 from repro.models.common import QuantizeSpec, act_q, apply_r4
 
 
+def _ambient_mesh():
+    """The mesh visible at trace time, or None outside any mesh context."""
+    get_abstract = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abstract is not None:  # jax >= 0.5
+        mesh = get_abstract()
+        return None if getattr(mesh, "empty", True) else mesh
+    from jax.interpreters import pxla  # jax 0.4.x: `with mesh:` context
+
+    mesh = pxla.thread_resources.env.physical_mesh
+    return None if mesh.empty else mesh
+
+
 def _pin(x: jax.Array, *spec) -> jax.Array:
     """Sharding hint, active only under an ambient mesh (pjit lowering).
 
     Pins the expert-parallel layout of the dispatch/compute buffers:
     batch on the data axes, experts on the model axis - without this
     GSPMD tends to replicate the E axis of the (B, E, cap, D) buffers.
+    Non-divisible placements are dropped by ``dist.sharding``'s
+    sanitizer, the same gate the launchers use.
     """
     from jax.sharding import PartitionSpec as P
 
-    mesh = jax.sharding.get_abstract_mesh()
-    if getattr(mesh, "empty", True) or "model" not in mesh.axis_names:
+    from repro.dist.sharding import sanitize_pspecs
+
+    mesh = _ambient_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
         return x
     dp = tuple(n for n in mesh.axis_names if n != "model")
-    dp_ax = dp if len(dp) > 1 else dp[0]
+    dp_ax = dp if len(dp) > 1 else (dp[0] if dp else None)
     parts = [dp_ax if a == "data" else ("model" if a == "model" else None)
              for a in spec]
-    # drop non-divisible placements (mirrors dist.sharding.sanitize_pspecs)
-    sizes = dict(zip(mesh.axis_names, mesh.shape_tuple if hasattr(mesh, "shape_tuple")
-                     else tuple(mesh.shape.values())))
-    import numpy as _np
-
-    total = lambda ax: int(_np.prod([sizes[a] for a in (ax if isinstance(ax, tuple) else (ax,))]))
-    parts = [a if (a is None or x.shape[i] % total(a) == 0) else None
-             for i, a in enumerate(parts)]
-    return jax.lax.with_sharding_constraint(x, P(*parts))
+    pspec = sanitize_pspecs(mesh, P(*parts), jax.ShapeDtypeStruct(x.shape, x.dtype))
+    return jax.lax.with_sharding_constraint(x, pspec)
 
 
 def init_moe_params(key, cfg: ModelConfig, n_layers: int, dtype) -> Dict:

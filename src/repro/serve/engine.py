@@ -11,12 +11,14 @@ per step across all active slots) - exactly the pair the dry-run lowers.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.common import NOQUANT, QuantizeSpec
 
@@ -30,16 +32,61 @@ class ServeConfig:
 
 
 class ServeEngine:
+    """Single-device by default; pass ``mesh`` to serve sharded.
+
+    With a mesh, parameters and the KV/state cache are placed with the
+    ``repro.dist.sharding`` rules (tensor/expert parallel weights,
+    batch-sharded cache) and both jitted entry points run under the mesh
+    context, so the in-graph sharding hints (e.g. the MoE dispatch pin)
+    are active — the same layout the 512-device dry-run compiles.
+    """
+
     def __init__(self, arch, params, scfg: ServeConfig, spec: QuantizeSpec = NOQUANT,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, mesh=None):
         self.arch = arch
         self.cfg = arch.config
         self.scfg = scfg
         self.spec = spec
         self.params = params
         self.dtype = dtype
+        self.mesh = mesh
+        self._cache_shardings = None
+        if mesh is not None:
+            from repro.dist.sharding import (
+                _axis_sizes, cache_pspecs, param_pspecs, sanitize_pspecs,
+            )
+            from repro.launch.mesh import dp_axes_of
+
+            dp = dp_axes_of(mesh)
+            model_size = _axis_sizes(mesh).get("model", 1)
+            params_sds = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params
+            )
+            pspec = sanitize_pspecs(
+                mesh, param_pspecs(self.cfg, params_sds), params_sds
+            )
+            cache_sds = arch.cache_specs(scfg.batch_slots, scfg.max_seq, spec, dtype)
+            cspec = sanitize_pspecs(
+                mesh,
+                cache_pspecs(self.cfg, cache_sds, dp, model_size=model_size),
+                cache_sds,
+            )
+            ns = lambda tree: jax.tree.map(
+                lambda s: NamedSharding(mesh, s), tree,
+                is_leaf=lambda x: isinstance(x, P),
+            )
+            self.params = jax.device_put(params, ns(pspec))
+            self._cache_shardings = ns(cspec)
         self._prefill = jax.jit(lambda p, b, c: arch.prefill(p, b, c, spec))
         self._decode = jax.jit(lambda p, t, c: arch.decode(p, t, c, spec))
+
+    def _mesh_ctx(self):
+        return self.mesh if self.mesh is not None else contextlib.nullcontext()
+
+    def _place_cache(self, cache):
+        if self._cache_shardings is None:
+            return cache
+        return jax.device_put(cache, self._cache_shardings)
 
     def _sample(self, logits: jax.Array, key) -> jax.Array:
         if self.scfg.temperature <= 0:
@@ -65,18 +112,21 @@ class ServeEngine:
                                             patch_embeds.dtype)])
             batch["patch_embeds"] = jnp.asarray(patch_embeds)
 
-        cache = self.arch.init_cache(scfg.batch_slots, scfg.max_seq, self.spec, self.dtype)
-        logits, cache = self._prefill(self.params, batch, cache)
-        key = jax.random.PRNGKey(scfg.seed)
-        outs = []
-        last = logits.reshape(scfg.batch_slots, *logits.shape[1:])
-        if last.ndim == 3:  # (B, 1, V) -> (B, V)
-            last = last[:, 0]
-        for t in range(max_new_tokens):
-            key, sub = jax.random.split(key)
-            tok = self._sample(last, sub)
-            outs.append(np.asarray(tok[:b]))
-            logits, cache = self._decode(self.params, tok, cache)
-            last = logits
+        cache = self._place_cache(
+            self.arch.init_cache(scfg.batch_slots, scfg.max_seq, self.spec, self.dtype)
+        )
+        with self._mesh_ctx():
+            logits, cache = self._prefill(self.params, batch, cache)
+            key = jax.random.PRNGKey(scfg.seed)
+            outs = []
+            last = logits.reshape(scfg.batch_slots, *logits.shape[1:])
+            if last.ndim == 3:  # (B, 1, V) -> (B, V)
+                last = last[:, 0]
+            for t in range(max_new_tokens):
+                key, sub = jax.random.split(key)
+                tok = self._sample(last, sub)
+                outs.append(np.asarray(tok[:b]))
+                logits, cache = self._decode(self.params, tok, cache)
+                last = logits
         gen = np.stack(outs, axis=1)  # (B, T) or (B, T, K)
         return {"tokens": gen, "final_length": int(cache["length"])}

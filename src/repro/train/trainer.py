@@ -54,13 +54,15 @@ class TrainerConfig:
 class Trainer:
     def __init__(self, arch, opt_cfg: OptConfig, tcfg: TrainerConfig,
                  spec: QuantizeSpec = NOQUANT, dtype=jnp.float32,
-                 step_fn: Optional[Callable] = None):
+                 step_fn: Optional[Callable] = None, mesh=None):
         self.arch = arch
         self.tcfg = tcfg
         self.opt_cfg = opt_cfg
         self.mgr = CheckpointManager(tcfg.ckpt_dir, keep_last=tcfg.keep_last)
         self._stop = False
         self.metrics_log = []
+        self.mesh = mesh
+        self._batch_shardings = None
 
         params = arch.init(jax.random.PRNGKey(tcfg.seed), dtype)
         opt_state = init_opt_state(params, opt_cfg)
@@ -73,6 +75,8 @@ class Trainer:
         if restored is not None:
             self.state, self.step = restored
             print(f"[trainer] resumed from step {self.step}")
+        if mesh is not None:
+            self._shard_state(mesh)
 
         self._train_step = step_fn or jax.jit(
             make_train_step(
@@ -81,6 +85,48 @@ class Trainer:
                 compress_grads=tcfg.compress_grads,
             )
         )
+
+    # ------------------------------------------------------------------
+    def _shard_state(self, mesh):
+        """Place params/opt/err with the dist.sharding rules.
+
+        Moments and error-feedback state mirror the parameter tree, so
+        they reuse the parameter specs leaf-for-leaf — the co-sharding
+        that keeps the AdamW update collective-free.  Restored checkpoint
+        state goes through the same path (the elastic re-mesh story: plan
+        with ``dist.elastic.plan_remesh``, rebuild the mesh, re-enter
+        here).
+        """
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.dist.elastic import reshard
+        from repro.dist.sharding import param_pspecs, sanitize_pspecs
+        from repro.launch.mesh import dp_axes_of
+
+        params = self.state["params"]
+        params_sds = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params
+        )
+        pspec = sanitize_pspecs(mesh, param_pspecs(self.arch.config, params_sds),
+                                params_sds)
+        from repro.train.optimizer import OptState
+
+        ospec = OptState(step=P(), mu=pspec, nu=pspec)
+        espec = pspec if self.tcfg.compress_grads else {}
+        spec_tree = {"params": pspec, "opt": ospec, "err": espec}
+        self.state = reshard(mesh, spec_tree, self.state)
+        dp = dp_axes_of(mesh)
+
+        def batch_sharding(x):
+            spec = P(dp, *([None] * (x.ndim - 1))) if x.ndim else P()
+            return NamedSharding(mesh, sanitize_pspecs(mesh, spec, x))
+
+        self._batch_shardings = lambda batch: jax.tree.map(batch_sharding, batch)
+
+    def _mesh_ctx(self):
+        import contextlib
+
+        return self.mesh if self.mesh is not None else contextlib.nullcontext()
 
     # ------------------------------------------------------------------
     def request_stop(self, *_args):
@@ -96,9 +142,12 @@ class Trainer:
                 raise RuntimeError(f"injected failure at step {self.step}")
             batch = next(batches)
             batch = {k: jnp.asarray(v) for k, v in batch.items()}
-            p, o, e, m = self._train_step(
-                self.state["params"], self.state["opt"], self.state["err"], batch
-            )
+            if self._batch_shardings is not None:
+                batch = jax.device_put(batch, self._batch_shardings(batch))
+            with self._mesh_ctx():
+                p, o, e, m = self._train_step(
+                    self.state["params"], self.state["opt"], self.state["err"], batch
+                )
             self.state = {"params": p, "opt": o, "err": e}
             self.step += 1
             skipped = int(m["skipped"])

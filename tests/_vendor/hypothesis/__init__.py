@@ -1,0 +1,93 @@
+"""Minimal vendored stand-in for the ``hypothesis`` property-testing API.
+
+Loaded by ``tests/conftest.py`` ONLY when the real package is not
+installed.  Supports the subset this repo's tests use — ``@given`` with
+keyword strategies, ``@settings(max_examples=..., deadline=...)``,
+``assume`` — with *deterministic* example generation: example ``i`` of a
+test is drawn from ``random.Random`` seeded by ``i``, so failures
+reproduce run-to-run.  Unlike real hypothesis there is no shrinking and
+no coverage-guided search; the first examples of every strategy are its
+boundary values, which recovers most of the edge-case value.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+from hypothesis import strategies  # noqa: F401  (submodule, vendored)
+from hypothesis.strategies import SearchStrategy  # noqa: F401
+
+__version__ = "0.0.0+vendored-shim"
+
+_DEFAULT_MAX_EXAMPLES = 20
+_SEED = 0x5EED
+
+
+class UnsatisfiedAssumption(Exception):
+    pass
+
+
+def assume(condition) -> bool:
+    """Skip the current example when ``condition`` is falsy."""
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
+
+
+class HealthCheck:
+    """Attribute sink: ``suppress_health_check=[HealthCheck.x]`` parses."""
+
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+    function_scoped_fixture = "function_scoped_fixture"
+
+
+def settings(max_examples=None, deadline=None, **_ignored):
+    """Decorator: only ``max_examples`` is honoured (no deadlines here)."""
+
+    def deco(fn):
+        if max_examples is not None:
+            fn._shim_max_examples = int(max_examples)
+        return fn
+
+    return deco
+
+
+def note(_msg) -> None:
+    pass
+
+
+def given(*arg_strategies, **kw_strategies):
+    if arg_strategies:
+        raise TypeError(
+            "vendored hypothesis shim supports only keyword-form @given(...)"
+        )
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_shim_max_examples", _DEFAULT_MAX_EXAMPLES)
+            ran = 0
+            for i in range(max(4 * n, n + 16)):
+                if ran >= n:
+                    break
+                rnd = random.Random((_SEED << 20) ^ (7919 * i))
+                drawn = {k: s.do_draw(rnd, i) for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except UnsatisfiedAssumption:
+                    continue
+                ran += 1
+
+        # Hide strategy params from pytest's fixture resolution.
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(
+            parameters=[
+                p for name, p in sig.parameters.items() if name not in kw_strategies
+            ]
+        )
+        return wrapper
+
+    return deco

@@ -1,0 +1,179 @@
+"""Strategies for the vendored hypothesis shim (see package docstring).
+
+Each strategy implements ``do_draw(rnd, i)``: deterministic example ``i``
+drawn with the per-example ``random.Random``.  The first few examples are
+the strategy's boundary values (min, max, zero, ...), the rest uniform.
+"""
+from __future__ import annotations
+
+import math
+import random
+from typing import Any, List, Optional, Sequence
+
+
+class SearchStrategy:
+    def do_draw(self, rnd: random.Random, i: int) -> Any:
+        raise NotImplementedError
+
+    def map(self, f) -> "SearchStrategy":
+        return _Mapped(self, f)
+
+    def filter(self, pred) -> "SearchStrategy":
+        return _Filtered(self, pred)
+
+
+class _Mapped(SearchStrategy):
+    def __init__(self, base, f):
+        self.base, self.f = base, f
+
+    def do_draw(self, rnd, i):
+        return self.f(self.base.do_draw(rnd, i))
+
+
+class _Filtered(SearchStrategy):
+    def __init__(self, base, pred):
+        self.base, self.pred = base, pred
+
+    def do_draw(self, rnd, i):
+        for k in range(1000):
+            v = self.base.do_draw(rnd, i + 1000 * k if k else i)
+            if self.pred(v):
+                return v
+        raise ValueError("filter predicate satisfied by no drawn example")
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, lo: Optional[int], hi: Optional[int]):
+        self.lo = -(2**32) if lo is None else int(lo)
+        self.hi = 2**32 if hi is None else int(hi)
+        if self.lo > self.hi:
+            raise ValueError(f"integers({lo}, {hi}): empty range")
+        edges = [self.lo, self.hi]
+        if self.lo < 0 < self.hi:
+            edges.append(0)
+        if self.lo < 1 <= self.hi:
+            edges.append(1)
+        self.edges: List[int] = list(dict.fromkeys(edges))
+
+    def do_draw(self, rnd, i):
+        if i < len(self.edges):
+            return self.edges[i]
+        return rnd.randint(self.lo, self.hi)
+
+
+def integers(min_value: Optional[int] = None, max_value: Optional[int] = None
+             ) -> SearchStrategy:
+    return _Integers(min_value, max_value)
+
+
+class _Booleans(SearchStrategy):
+    def do_draw(self, rnd, i):
+        if i < 2:
+            return bool(i)
+        return rnd.random() < 0.5
+
+
+def booleans() -> SearchStrategy:
+    return _Booleans()
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements: Sequence[Any]):
+        self.elements = list(elements)
+        if not self.elements:
+            raise ValueError("sampled_from of empty sequence")
+
+    def do_draw(self, rnd, i):
+        if i < len(self.elements):
+            return self.elements[i]
+        return rnd.choice(self.elements)
+
+
+def sampled_from(elements: Sequence[Any]) -> SearchStrategy:
+    return _SampledFrom(elements)
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, lo, hi, allow_nan, allow_infinity):
+        self.lo = -1e9 if lo is None else float(lo)
+        self.hi = 1e9 if hi is None else float(hi)
+        self.allow_nan = allow_nan
+        self.allow_infinity = allow_infinity
+        self.edges = [self.lo, self.hi]
+        if self.lo < 0.0 < self.hi:
+            self.edges.append(0.0)
+
+    def do_draw(self, rnd, i):
+        if i < len(self.edges):
+            return self.edges[i]
+        v = rnd.uniform(self.lo, self.hi)
+        return v if math.isfinite(v) else self.lo
+
+
+def floats(min_value=None, max_value=None, *, allow_nan: bool = False,
+           allow_infinity: bool = False, width: int = 64) -> SearchStrategy:
+    return _Floats(min_value, max_value, allow_nan, allow_infinity)
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elem: SearchStrategy, min_size: int, max_size: Optional[int],
+                 unique: bool):
+        self.elem = elem
+        self.min_size = min_size
+        self.max_size = max_size if max_size is not None else min_size + 10
+        self.unique = unique
+
+    def do_draw(self, rnd, i):
+        size = self.min_size if i == 0 else rnd.randint(self.min_size, self.max_size)
+        out: List[Any] = []
+        tries = 0
+        while len(out) < size and tries < 100 * (size + 1):
+            v = self.elem.do_draw(rnd, i + len(out) + 1)
+            tries += 1
+            if self.unique and v in out:
+                continue
+            out.append(v)
+        return out
+
+
+def lists(elements: SearchStrategy, *, min_size: int = 0,
+          max_size: Optional[int] = None, unique: bool = False) -> SearchStrategy:
+    return _Lists(elements, min_size, max_size, unique)
+
+
+class _Tuples(SearchStrategy):
+    def __init__(self, strategies):
+        self.strategies = strategies
+
+    def do_draw(self, rnd, i):
+        return tuple(s.do_draw(rnd, i) for s in self.strategies)
+
+
+def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return _Tuples(strategies)
+
+
+class _Just(SearchStrategy):
+    def __init__(self, value):
+        self.value = value
+
+    def do_draw(self, rnd, i):
+        return self.value
+
+
+def just(value) -> SearchStrategy:
+    return _Just(value)
+
+
+class _OneOf(SearchStrategy):
+    def __init__(self, strategies):
+        self.strategies = list(strategies)
+
+    def do_draw(self, rnd, i):
+        if i < len(self.strategies):
+            return self.strategies[i].do_draw(rnd, i)
+        return rnd.choice(self.strategies).do_draw(rnd, i)
+
+
+def one_of(*strategies: SearchStrategy) -> SearchStrategy:
+    return _OneOf(strategies)

@@ -1,0 +1,168 @@
+"""Property tests for the distribution layer.
+
+Contracts pinned here (hypothesis; deterministic shim in hermetic CI):
+  * ``plan_remesh`` never plans more devices than exist, always keeps the
+    model axis a divisor of the device count, and never *shrinks* the
+    global batch (exact preservation whenever the data degree divides it).
+  * ``sanitize_pspecs`` output always divides the mesh: every surviving
+    placement's axis-size product divides its dimension, unknown axis
+    names never survive, and the pass is idempotent.
+  * the packed-quantization specs co-shard codes/scales with their source
+    weight's output axis (the invariant the fused dequant kernel needs).
+  * the explicit-EP expert FFN equals the plain einsum path on a 1-device
+    mesh (the multi-device equivalence runs in the dry-run harness).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.elastic import plan_remesh
+from repro.dist.sharding import param_pspecs, sanitize_pspecs
+
+
+class FakeMesh:
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.zeros(shape)
+        self.shape = dict(zip(names, shape))
+
+
+MESHES = [((1, 1), ("data", "model")), ((4, 2), ("data", "model")),
+          ((8, 4), ("data", "model")), ((2, 16, 16), ("pod", "data", "model"))]
+
+_ENTRIES = [None, "data", "model", ("data", "model"), "pod", "bogus"]
+
+
+@settings(max_examples=80, deadline=None)
+@given(n=st.integers(1, 4096), gb=st.integers(1, 2048))
+def test_plan_remesh_contract(n, gb):
+    plan = plan_remesh(n, gb)
+    data, model = plan.mesh_shape
+    assert 1 <= data * model <= n
+    assert n % model == 0, (n, model)
+    assert plan.effective_batch >= gb
+    if gb % data == 0:
+        assert plan.effective_batch == gb  # exact preservation
+    assert plan.per_device_batch >= 1 and plan.grad_accum >= 1
+    assert plan.per_device_batch <= 16  # live-microbatch cap always holds
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    mesh_i=st.integers(0, len(MESHES) - 1),
+    dims=st.lists(st.integers(1, 48), min_size=1, max_size=4),
+    picks=st.lists(st.integers(0, len(_ENTRIES) - 1), min_size=1, max_size=4),
+    seed=st.integers(0, 10_000),
+)
+def test_sanitizer_output_always_divides_mesh(mesh_i, dims, picks, seed):
+    shape, names = MESHES[mesh_i]
+    mesh = FakeMesh(shape, names)
+    sds = jax.ShapeDtypeStruct(tuple(dims), jnp.float32)
+    spec = P(*[_ENTRIES[p] for p in picks[: len(dims)]])
+    out = sanitize_pspecs(mesh, spec, sds)
+    assert len(out) <= sds.ndim
+    for i, entry in enumerate(out):
+        if entry is None:
+            continue
+        axis_names = entry if isinstance(entry, tuple) else (entry,)
+        assert all(a in mesh.shape for a in axis_names), entry
+        total = int(np.prod([mesh.shape[a] for a in axis_names]))
+        assert sds.shape[i] % total == 0, (sds.shape, i, entry)
+    # idempotent: a sanitized spec sanitizes to itself
+    assert sanitize_pspecs(mesh, out, sds) == out
+
+
+@pytest.mark.parametrize("arch_name", ["smollm-135m", "deepseek-moe-16b",
+                                       "minicpm3-4b"])
+def test_quant_specs_coshard_output_axis(arch_name):
+    from repro.launch.quant_serve import quant_param_pspecs, quant_param_specs
+    from repro.models.registry import get_arch
+
+    arch = get_arch(arch_name)
+    sds = arch.param_specs()
+    qsds = quant_param_specs(arch.config, sds, wbits=4)
+    qspecs = quant_param_pspecs(arch.config, sds, qsds)
+    base = param_pspecs(arch.config, sds)
+
+    packed = {}
+
+    def collect(path, x):
+        if isinstance(x, dict) and "__meta__" in x:
+            packed["/".join(str(getattr(p, "key", p)) for p in path)] = x
+        return x
+
+    jax.tree_util.tree_map_with_path(
+        collect, qspecs,
+        is_leaf=lambda x: isinstance(x, dict) and "__meta__" in x or isinstance(x, P),
+    )
+    assert packed, "no leaves were packed"
+    flat_base = {
+        "/".join(str(getattr(p, "key", p)) for p in path): s
+        for path, s in jax.tree_util.tree_flatten_with_path(
+            base, is_leaf=lambda x: isinstance(x, P)
+        )[0]
+    }
+    for key, sub in packed.items():
+        src = flat_base[key]
+        out_axis = src[len(src) - 1] if len(src) else None
+        for part in ("codes", "scale", "zero"):
+            got = sub[part][len(sub[part]) - 1] if len(sub[part]) else None
+            assert got == out_axis, (key, part, got, out_axis)
+
+
+def test_expert_ffn_ep_matches_reference_single_device():
+    from repro.dist.collectives import expert_ffn_ep
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    key = jax.random.PRNGKey(0)
+    e, cap, d, de = 4, 3, 8, 16
+    xe = jax.random.normal(key, (2, e, cap, d))
+    wg = jax.random.normal(jax.random.fold_in(key, 1), (e, d, de))
+    wu = jax.random.normal(jax.random.fold_in(key, 2), (e, d, de))
+    wd = jax.random.normal(jax.random.fold_in(key, 3), (e, de, d))
+    ref = jnp.einsum(
+        "becf,efd->becd",
+        jax.nn.silu(jnp.einsum("becd,edf->becf", xe, wg))
+        * jnp.einsum("becd,edf->becf", xe, wu),
+        wd,
+    )
+    got = expert_ffn_ep(xe, wg, wu, wd, mesh)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_psum_partial_combine_sums_distinct_partials():
+    """Slice i of the stacked input is rank i's partial — the sum must be
+    the sum of *distinct* slices, not ep copies of one array."""
+    from repro.dist.collectives import psum_partial_combine
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    partials = jnp.stack([jnp.full((2, 3), 5.0)])  # ep == 1
+    out = psum_partial_combine(partials, mesh)
+    np.testing.assert_allclose(np.asarray(out), 5.0)
+    with pytest.raises(ValueError):
+        psum_partial_combine(jnp.zeros((2, 2, 3)), mesh)  # 2 partials, ep=1
+
+
+def test_param_pspecs_fsdp_axes_survive_sanitize():
+    """FSDP placements that survive must divide; dropped ones replicate."""
+    from repro.models.registry import get_arch
+
+    arch = get_arch("smollm-135m")
+    sds = arch.param_specs()
+    mesh = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+    specs = sanitize_pspecs(
+        mesh,
+        param_pspecs(arch.config, sds, fsdp_axes=("pod", "data"), fsdp_size=32),
+        sds,
+    )
+    leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    sds_leaves = jax.tree.leaves(sds)
+    assert len(leaves) == len(sds_leaves)
+    assert any(
+        any(entry == ("pod", "data") for entry in spec) for spec in leaves
+    ), "no leaf kept an FSDP placement"

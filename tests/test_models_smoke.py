@@ -51,6 +51,7 @@ def test_forward_shapes_finite(name, arches):
     assert np.isfinite(np.asarray(logits)).all()
 
 
+@pytest.mark.slow  # value_and_grad recompiles every arch: the heaviest cells
 @pytest.mark.parametrize("name", ARCH_IDS)
 def test_train_grad_finite(name, arches):
     from repro.models.common import cross_entropy
@@ -76,6 +77,7 @@ def test_train_grad_finite(name, arches):
     assert any(float(jnp.abs(g).max()) > 0 for g in leaves)
 
 
+@pytest.mark.slow  # compiles prefill AND decode per arch on top of forward
 @pytest.mark.parametrize("name", ARCH_IDS)
 def test_prefill_decode_matches_forward(name, arches):
     """Teacher-forcing: decode(t|prefix) logits == forward logits at t."""
