@@ -3,6 +3,12 @@ container is CPU - Pallas interpret timings are not meaningful) plus the
 derived per-call HBM bytes and FLOPs that set the TPU roofline for each
 kernel.  The Pallas kernels themselves are correctness-validated in
 tests/test_kernels.py against these references.
+
+Also benchmarks the two *artifact weight backends* the serve path can
+select per launch (``QuantizedModel.serve(backend=...)``): the
+"reference" dequant-on-use dispatch vs the "pallas" fused dequant-matmul
+(interpret mode here; the recorded bytes terms are what matter for the
+TPU roofline, the interpret wall time is tracked for trend only).
 """
 from __future__ import annotations
 
@@ -18,7 +24,8 @@ import jax.numpy as jnp
 from repro.core.hadamard import walsh
 from repro.kernels import ref
 from repro.quant import pack, rtn
-from repro.quant.qtypes import QuantConfig
+from repro.quant.packed import PackedWeight
+from repro.quant.qtypes import QuantConfig, paper_weight_cfg
 
 M, D, G = 512, 4096, 128
 
@@ -66,6 +73,23 @@ def run(quiet: bool = False):
     us = timeit(f_q, x)
     rows.append({"name": "rtn_fake_quant_ref(A4)", "us": us,
                  "hbm_bytes": 2 * M * D * 4, "flops": 4 * M * D})
+
+    # Artifact weight backends: x @ PackedWeight under each dispatch path.
+    h_out = 1024
+    wq = jnp.asarray(rng.normal(size=(D, h_out)).astype(np.float32))
+    pw = PackedWeight.from_float(wq, paper_weight_cfg(4, group=G).replace(mse_clip=False))
+    for backend in ("reference", "pallas"):
+        pwb = pw.replace(backend=backend)
+        f_b = jax.jit(lambda a: a @ pwb)
+        us = timeit(f_b, x, iters=3 if backend == "pallas" else 10)
+        rows.append({
+            "name": f"artifact_matmul[{backend}](W4)", "us": us,
+            "hbm_bytes": M * D * 4 + pw.nbytes_packed() + M * h_out * 4,
+            "flops": 2 * M * D * h_out,
+            "packed_weight_bytes": pw.nbytes_packed(),
+            "bf16_weight_bytes": D * h_out * 2,
+            "interpreted": backend == "pallas" and jax.default_backend() != "tpu",
+        })
 
     if not quiet:
         for r in rows:

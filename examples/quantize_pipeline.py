@@ -1,14 +1,17 @@
-"""End-to-end driver: train a ~100M-class model, PTQ it with GSR, serve it.
+"""End-to-end driver: train, PTQ once into an artifact, re-serve it.
 
     PYTHONPATH=src python examples/quantize_pipeline.py [--steps 300]
 
 1. trains smollm-135m (reduced widths for CPU; pass --full for the real
    config if you have the compute) for a few hundred steps with the
    fault-tolerant Trainer (checkpoints + resume);
-2. PTQs the result with the paper's full recipe (GSR R1, GPTQ weights,
-   MSE clipping, grouped W4A8) and with the GH baseline;
-3. compares held-out perplexity and serves a few greedy generations from
-   the quantized model.
+2. PTQs the result through the front door (``repro.api.quantize``) with
+   the paper's full recipe (GSR R1, GPTQ weights, MSE clipping, grouped
+   W4A8) and the GH baseline, comparing held-out perplexity of the packed
+   models;
+3. saves the GSR artifact, loads it back (bit-exact, no re-quantization),
+   and serves greedy generations from the *loaded* copy - the deploy
+   path: quantize once, save, re-serve forever.
 """
 import argparse
 
@@ -17,12 +20,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import api
 from repro.data import SyntheticLM
 from repro.data.synthetic import make_batch_for
 from repro.models.common import NOQUANT
 from repro.models.registry import get_arch
-from repro.quant.pipeline import PTQConfig, quantize_model
-from repro.serve.engine import ServeConfig, ServeEngine
 from repro.train.optimizer import OptConfig
 from repro.train.train_step import make_eval_step
 from repro.train.trainer import Trainer, TrainerConfig
@@ -35,6 +37,9 @@ def main():
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--full", action="store_true", help="full 135M config")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_quickstart_ckpt")
+    ap.add_argument("--artifact-dir", default="/tmp/repro_quickstart_artifact")
+    ap.add_argument("--backend", default="reference",
+                    choices=("reference", "pallas"))
     args = ap.parse_args()
 
     arch = get_arch("smollm-135m", reduced=not args.full)
@@ -56,29 +61,37 @@ def main():
     out = trainer.run(batches())
     params = out["state"]["params"]
 
-    print("[2/3] PTQ: GSR vs GH (W4A8, GPTQ, MSE clip, group 32)")
+    print("[2/3] PTQ via repro.api: GSR vs GH (W4A8, GPTQ, MSE clip, group 32)")
     ev = jax.jit(make_eval_step(arch, NOQUANT))
     held = {"tokens": jnp.asarray(data.batch(10_000, 0, 16))}
     base_nll = float(ev(params, held)["nll"])
     print(f"  fp16      ppl = {np.exp(base_nll):9.3f}")
-    results = {}
+    artifacts = {}
     for kind in ("GH", "GSR"):
-        ptq = PTQConfig(r1_kind=kind, wakv="W4A8", method="gptq", group=32,
-                        n_calib=4, calib_seq=args.seq)
-        qp, spec = quantize_model(arch, params, ptq)
-        evq = jax.jit(make_eval_step(arch, spec))
-        nll = float(evq(qp, held)["nll"])
-        results[kind] = (qp, spec, nll)
-        print(f"  {kind:4s} W4A8 ppl = {np.exp(nll):9.3f}")
+        ptq = api.PTQConfig(r1_kind=kind, wakv="W4A8", method="gptq", group=32,
+                            n_calib=4, calib_seq=args.seq)
+        qm = api.quantize(arch, params, ptq)
+        evq = jax.jit(make_eval_step(arch, qm.spec))
+        nll = float(evq(qm.params, held)["nll"])  # packed execution
+        artifacts[kind] = qm
+        print(f"  {kind:4s} W4A8 ppl = {np.exp(nll):9.3f} "
+              f"({qm.packed_bytes()/2**20:.2f} MiB packed)")
 
-    print("[3/3] serving 3 prompts from the GSR-quantized model")
-    qp, spec, _ = results["GSR"]
-    eng = ServeEngine(arch, qp, ServeConfig(max_seq=args.seq + 24, batch_slots=4), spec)
+    print(f"[3/3] save -> load -> serve the GSR artifact ({args.artifact_dir})")
+    artifacts["GSR"].save(args.artifact_dir)
+    loaded = api.load_quantized(args.artifact_dir)
+    eng = loaded.serve(
+        api.ServeConfig(max_seq=args.seq + 24, batch_slots=4),
+        backend=args.backend,
+    )
     prompts = data.batch(20_000, 0, 3)[:, :16].astype(np.int32)
     gen = eng.generate(prompts, max_new_tokens=12)
-    print("  generated token ids:")
+    print(f"  served off the loaded artifact (backend={args.backend}); "
+          "generated token ids:")
     for row in gen["tokens"]:
         print("   ", row.tolist())
+    print(f"  re-serve any time: PYTHONPATH=src python -m repro.launch.serve "
+          f"--artifact {args.artifact_dir}")
 
 
 if __name__ == "__main__":

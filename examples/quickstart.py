@@ -1,21 +1,25 @@
-"""Quickstart: build a GSR rotation, fuse it into a model, quantize, compare.
+"""Quickstart: GSR rotation -> one-call quantization -> save -> re-serve.
 
     PYTHONPATH=src python examples/quickstart.py
 
 Walks the paper's pipeline end-to-end on a reduced llama-family model in
-under a minute on CPU: construct the four rotation kinds, verify fp
-invariance, W2-quantize with each, and print the quant-error ordering.
+under a minute on CPU: construct the rotation kinds, verify fp
+invariance, compare W2 quant error per rotation, then the front-door API
+(``repro.api``): quantize once into a packed ``QuantizedModel`` artifact,
+save it, load it back bit-exact, and serve greedy generations from the
+loaded artifact through both weight backends.
 """
+import tempfile
+
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
+from repro import api
 from repro.core.hadamard import hadamard, sequency_of_rows, walsh
 from repro.core.rotation import make_rotation
-from repro.models.common import NOQUANT
 from repro.models.registry import get_arch
-from repro.quant.pipeline import PTQConfig, quantize_model
 
 
 def main():
@@ -40,16 +44,34 @@ def main():
     print(f"fp invariance |base-rotated|_max = "
           f"{float(jnp.abs(base - rot).max()):.2e}")
 
-    # 4. W2 PTQ with each rotation kind ------------------------------------
+    # 4. W2 PTQ with each rotation kind (packed artifacts) -----------------
     print("\nW2A16 (RTN) logit error vs fp, per rotation kind:")
     for kind in ("I", "GH", "GW", "LH", "GSR"):
-        ptq = PTQConfig(r1_kind=kind, wakv="W2A16", method="rtn", group=32)
-        qp, spec = quantize_model(arch, params, ptq)
-        ql = arch.forward(qp, batch, spec)
+        ptq = api.PTQConfig(r1_kind=kind, wakv="W2A16", method="rtn", group=32)
+        qm = api.quantize(arch, params, ptq)
+        ql = arch.forward(qm.params, batch, qm.spec)  # packed execution
         err = float(jnp.linalg.norm(ql - base) / jnp.linalg.norm(base))
-        print(f"  R1={kind:4s} relative logit error = {err:.4f}")
-    print("\n(expect rotations to beat identity; see benchmarks/ for the "
-          "trained-model PPL tables)")
+        print(f"  R1={kind:4s} relative logit error = {err:.4f} "
+              f"({qm.packed_bytes()/2**20:.2f} MiB packed)")
+
+    # 5. The front door: quantize once, save, re-serve ---------------------
+    print("\nquantize -> save -> load -> serve (no re-quantization):")
+    qm = api.quantize(arch, params,
+                      api.PTQConfig(r1_kind="GSR", wakv="W4A8", method="rtn",
+                                    group=32))
+    artifact_dir = tempfile.mkdtemp(prefix="gsr_artifact_")
+    qm.save(artifact_dir)
+    loaded = api.load_quantized(artifact_dir)
+    print(f"  saved + loaded {artifact_dir}: R1={loaded.rotation['r1_kind']}, "
+          f"{loaded.ptq.wakv}, {loaded.packed_bytes()/2**20:.2f} MiB packed")
+    prompts = np.asarray(tokens[:, :16])
+    for backend in ("reference", "pallas"):
+        eng = loaded.serve(api.ServeConfig(max_seq=48, batch_slots=2),
+                           backend=backend)
+        out = eng.generate(prompts, max_new_tokens=8)
+        print(f"  backend={backend:9s} tokens: {out['tokens'][0].tolist()}")
+    print("\n(expect rotations to beat identity and both backends to agree; "
+          "see benchmarks/ for the trained-model PPL tables)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,205 @@
+"""The front door for quantized models: quantize -> save/load -> serve.
+
+The paper's pitch is "quantization for free"; this module makes it one
+call each way:
+
+    from repro import api
+
+    arch = get_arch("smollm-135m", reduced=True)
+    qm = api.quantize(arch, params, api.PTQConfig(r1_kind="GSR", wakv="W4A8"))
+    qm.save("artifacts/smollm-w4a8")            # packed ints + manifest
+    ...
+    qm = api.load_quantized("artifacts/smollm-w4a8")   # no re-quantization
+    engine = qm.serve(api.ServeConfig(), backend="pallas")
+    engine.generate(prompts, max_new_tokens=32)
+
+A :class:`QuantizedModel` is a first-class pytree artifact: *packed*
+integer weights (``quant.packed.PackedWeight`` leaves: uint8 codes +
+grouped scale/zero) for every quantized matrix of all five model
+families, float leaves for everything else, plus the fused rotation
+metadata (R1 kind/seed/group, R4 spec) and the full model config - so a
+saved directory is self-describing and re-servable anywhere.
+
+Persistence rides :mod:`repro.checkpoint.ckpt` (atomic manifest-last
+writes); execution rides the pluggable weight backend of
+:class:`repro.serve.engine.ServeEngine` (``"reference"`` dequant-on-use
+vs ``"pallas"`` fused dequant-matmul), selectable per launch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict, Iterator, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.configs.base import ModelConfig
+from repro.models.common import QuantizeSpec
+from repro.quant import packed as packedmod
+from repro.quant.packed import PackedWeight
+from repro.quant.pipeline import PTQConfig, quantize_packed
+from repro.serve.engine import ServeConfig, ServeEngine
+
+__all__ = [
+    "PTQConfig", "QuantizeSpec", "QuantizedModel", "ServeConfig",
+    "load_quantized", "quantize",
+]
+
+_FORMAT_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# Artifact container
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class QuantizedModel:
+    """Packed quantized model + everything needed to re-serve it."""
+
+    arch: Any  # repro.models.registry.Arch
+    params: Dict  # pytree: PackedWeight leaves for quantized weights
+    ptq: PTQConfig
+    spec: QuantizeSpec
+
+    # -- views -----------------------------------------------------------
+    @property
+    def config(self) -> ModelConfig:
+        return self.arch.config
+
+    @property
+    def rotation(self) -> Dict:
+        """Fused-rotation provenance (R1 is already folded into weights;
+        R4/R3 remain online via ``spec``)."""
+        return {
+            "r1_kind": self.ptq.r1_kind, "r1_seed": self.ptq.seed,
+            "r1_group": self.ptq.group, "r4_kind": self.spec.r4_kind,
+            "r4_group": self.spec.r4_group, "r4_seed": self.spec.r4_seed,
+            "learned": self.ptq.learned,
+        }
+
+    def dequantize(self, dtype: Any = None) -> Dict:
+        """Back to the fake-quant float param tree (bit-identical to what
+        the legacy ``quantize_model`` pipeline returned)."""
+        return packedmod.dequantize_tree(self.params, dtype)
+
+    def packed_bytes(self) -> int:
+        return packedmod.packed_bytes(self.params)
+
+    # -- serving ---------------------------------------------------------
+    def serve(self, scfg: Optional[ServeConfig] = None, *, mesh=None,
+              backend: str = "reference", dtype=jnp.float32) -> ServeEngine:
+        """Build a ServeEngine executing the packed weights through the
+        chosen backend ("reference" dequant-on-use | "pallas" fused
+        dequant-matmul)."""
+        return ServeEngine(self.arch, self.params, scfg or ServeConfig(),
+                           self.spec, dtype=dtype, mesh=mesh, backend=backend)
+
+    # -- persistence -----------------------------------------------------
+    def save(self, directory: str) -> str:
+        """Write the artifact: one npz of packed arrays + a JSON manifest
+        carrying config / PTQ / per-leaf quantization metadata.  Uses the
+        checkpoint layer's atomic manifest-last protocol, so a partially
+        written artifact is never visible."""
+        packed_meta: Dict[str, Dict] = {}
+        dtypes: Dict[str, str] = {}
+
+        def plain(tree, prefix=""):
+            if packedmod.is_packed(tree):
+                packed_meta[prefix] = {
+                    "bits": tree.bits, "group": tree.group, "c": tree.c,
+                    "dtype": tree.dtype, "packed": tree.packed,
+                }
+                return {"codes": tree.codes, "scale": tree.scale,
+                        "zero": tree.zero}
+            if isinstance(tree, dict):
+                return {k: plain(v, f"{prefix}/{k}" if prefix else k)
+                        for k, v in tree.items()}
+            dtypes[prefix] = str(jnp.asarray(tree).dtype)
+            return tree
+
+        meta = {
+            "kind": "quantized-model",
+            "format": _FORMAT_VERSION,
+            "config": dataclasses.asdict(self.config),
+            "ptq": dataclasses.asdict(self.ptq),
+            "packed": packed_meta,
+            "dtypes": dtypes,
+        }
+        return ckpt.save_checkpoint(directory, 0, plain(self.params),
+                                    metadata=meta)
+
+    @classmethod
+    def load(cls, directory: str, *, backend: str = "reference"
+             ) -> "QuantizedModel":
+        """Reconstruct a saved artifact; no re-quantization, packed ints
+        are loaded bit-exact."""
+        from repro.models.registry import build_arch
+
+        step = ckpt.latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no quantized-model artifact in {directory}")
+        stepdir = os.path.join(directory, f"step_{step:08d}")
+        with open(os.path.join(stepdir, "manifest.json")) as f:
+            man = json.load(f)
+        if man.get("kind") != "quantized-model":
+            raise ValueError(f"{directory} is not a quantized-model artifact")
+        data = np.load(os.path.join(stepdir, "shard_0.npz"))
+
+        tree: Dict = {}
+        for key in data.files:
+            node = tree
+            *parents, leaf = key.split("/")
+            for p in parents:
+                node = node.setdefault(p, {})
+            node[leaf] = data[key]
+
+        dtypes = man.get("dtypes", {})
+
+        def rebuild(node, prefix=""):
+            meta = man["packed"].get(prefix)
+            if meta is not None:
+                return PackedWeight(
+                    codes=jnp.asarray(node["codes"]),
+                    scale=jnp.asarray(node["scale"], jnp.float32),
+                    zero=jnp.asarray(node["zero"], jnp.float32),
+                    bits=int(meta["bits"]), group=int(meta["group"]),
+                    c=int(meta["c"]), dtype=meta["dtype"],
+                    packed=bool(meta["packed"]), backend=backend,
+                )
+            if isinstance(node, dict):
+                return {k: rebuild(v, f"{prefix}/{k}" if prefix else k)
+                        for k, v in node.items()}
+            return jnp.asarray(node, dtype=dtypes.get(prefix) or None)
+
+        params = rebuild(tree)
+        cfg = ModelConfig(**man["config"])
+        ptq = PTQConfig(**man["ptq"])
+        return cls(arch=build_arch(cfg), params=params, ptq=ptq,
+                   spec=ptq.spec())
+
+
+# ---------------------------------------------------------------------------
+# Front-door entry points
+# ---------------------------------------------------------------------------
+
+
+def quantize(arch, params: Dict, ptq: PTQConfig,
+             calib_batches: Optional[Iterator] = None) -> QuantizedModel:
+    """Rotate + quantize ``params`` into a packed :class:`QuantizedModel`.
+
+    The single entry covering all five families: GSR/GH/GW/LH R1 fusion,
+    GPTQ (dense) or RTN weights, grouped packing - exactly the
+    ``quant.pipeline`` recipe, kept as packed integers.
+    """
+    qparams, spec = quantize_packed(arch, params, ptq, calib_batches)
+    return QuantizedModel(arch=arch, params=qparams, ptq=ptq, spec=spec)
+
+
+def load_quantized(directory: str, *, backend: str = "reference"
+                   ) -> QuantizedModel:
+    """Load a saved artifact (see :meth:`QuantizedModel.save`)."""
+    return QuantizedModel.load(directory, backend=backend)

@@ -16,10 +16,14 @@ matrix.  Layout conventions (trailing-axis relative, mesh axes
 * embeddings: ``model`` on the vocab axis; norms/gates/small recurrences
   replicated.
 
-Quantized (packed) leaves inherit their source weight's spec verbatim in
-``launch.quant_serve.quant_param_pspecs``: codes ``(..., C/pb, H)`` and
-grouped scales ``(..., C/g, H)`` keep ``model`` on the output axis H, so
-codes and scales always co-shard with the weight they dequantize into.
+Quantized (packed) leaves — ``repro.quant.packed.PackedWeight`` nodes —
+inherit their source weight's spec verbatim: :func:`param_pspecs` derives
+the rule from the *logical* ``(..., C, H)`` shape and mirrors it onto the
+codes ``(..., C/pb, H)`` and grouped scale/zero ``(..., C/g, H)``
+children, so ``model`` stays on the output axis H and codes and scales
+always co-shard with the weight they dequantize into.  Per-child
+divisibility (C/pb vs C/g) is settled by :func:`sanitize_pspecs` like any
+other leaf.
 
 Every intent spec must pass :func:`sanitize_pspecs` against a concrete
 mesh before use — that is the single place axis divisibility is decided
@@ -87,12 +91,20 @@ def param_pspecs(cfg, params_sds, *, fsdp_axes: Optional[Sequence[str]] = None,
     the FSDP mesh axes) so intent specs stay close to what survives
     :func:`sanitize_pspecs`.
     """
+    from repro.quant.packed import is_packed
+
     fsdp = _dp_entry(fsdp_axes) if fsdp_axes else None
 
     def fsdp_ok(dim: int) -> bool:
         return fsdp is not None and fsdp_size > 0 and dim % fsdp_size == 0
 
     def visit(path, leaf):
+        if is_packed(leaf):
+            # Derive the rule from the logical (..., C, H) weight shape and
+            # mirror it onto codes/scale/zero (packed-quant co-sharding).
+            base = visit(path, jax.ShapeDtypeStruct(leaf.logical_shape,
+                                                    np.float32))
+            return leaf.replace(codes=base, scale=base, zero=base)
         names = _path_names(path)
         name = names[-1] if names else ""
         shape = leaf.shape
@@ -146,7 +158,7 @@ def param_pspecs(cfg, params_sds, *, fsdp_axes: Optional[Sequence[str]] = None,
         # Unknown leaf: replicate (correct for any shape; costs memory only).
         return P()
 
-    return jax.tree_util.tree_map_with_path(visit, params_sds)
+    return jax.tree_util.tree_map_with_path(visit, params_sds, is_leaf=is_packed)
 
 
 # ---------------------------------------------------------------------------

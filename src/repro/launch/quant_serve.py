@@ -1,16 +1,28 @@
-"""Quantized-serving dry-run: packed low-bit weights on the decode path.
+"""Quantized-serving launcher: packed low-bit weights on the decode path.
 
 The paper's deployment story: after GSR rotation + GPTQ, weights live in
 HBM as packed uint8 codes (4x-8x fewer bytes than bf16) with per-group
 scales/zeros.  Decode is memory-roofline-bound on weight streaming, so
 this is the dominant-term lever for the decode cells (§Perf).
 
-Here the packed representation is lowered through a dequant-on-use wrapper
-(proving sharding + compile of the packed tensors at mesh scale); on real
-TPU the fused Pallas ``dequant_matmul`` kernel streams the packed bytes
-without materialising bf16 weights, so the roofline memory term for
-quantized decode is computed from ``argument_bytes`` (weights + cache
-actually resident in HBM), recorded alongside the HLO terms.
+Both entry points consume the *artifact* representation — params trees
+whose quantized leaves are :class:`repro.quant.packed.PackedWeight` —
+never ad-hoc inline quantization:
+
+  * :func:`lower_quant_decode` (called by ``launch.dryrun`` for the
+    ``--wbits`` cells) builds the packed ShapeDtypeStruct tree for a
+    production config and lowers ``arch.decode`` *directly on the packed
+    params*: the PackedWeight dispatch dequantizes on use, proving
+    sharding + compile of the packed tensors at mesh scale.  On real TPU
+    the ``backend="pallas"`` dispatch streams the packed bytes through
+    the fused ``dequant_matmul`` kernel instead of materialising bf16
+    weights; the roofline memory term for quantized decode is computed
+    from ``argument_bytes`` (weights + cache actually resident in HBM).
+
+  * ``main()`` serves a *saved* :class:`repro.api.QuantizedModel`
+    artifact — ``python -m repro.launch.quant_serve --artifact DIR`` —
+    with the weight backend selectable per launch and no requantization
+    anywhere on the path.
 """
 from __future__ import annotations
 
@@ -27,8 +39,9 @@ from repro.dist.sharding import batch_pspecs, cache_pspecs, param_pspecs, saniti
 from repro.launch.hlo_stats import collective_stats, total_wire_bytes
 from repro.launch.mesh import dp_axes_of
 from repro.models.common import QuantizeSpec
+from repro.quant.packed import PackedWeight, dequantize_tree, is_packed
+from repro.quant.pack import codes_per_byte, packable
 from repro.quant.pipeline import _FAMILY_WEIGHTS, fit_group
-from repro.quant.pack import codes_per_byte
 
 
 def _quantizable(path_keys, leaf, names) -> bool:
@@ -37,8 +50,10 @@ def _quantizable(path_keys, leaf, names) -> bool:
     )
 
 
-def quant_param_specs(cfg, params_sds, wbits: int, group: int = 128):
-    """Replace quantizable leaves with {codes, scale, zero} SDS subtrees."""
+def quant_param_specs(cfg, params_sds, wbits: int, group: int = 128,
+                      backend: str = "reference"):
+    """Replace quantizable leaves with PackedWeight ShapeDtypeStruct nodes
+    — the artifact layout ``repro.api.quantize`` produces for this config."""
     names = _FAMILY_WEIGHTS[cfg.family]
     pb = codes_per_byte(wbits)
 
@@ -47,62 +62,31 @@ def quant_param_specs(cfg, params_sds, wbits: int, group: int = 128):
         if not _quantizable(keys, leaf, names):
             return leaf
         *lead, c, h = leaf.shape
-        g = fit_group(c, group)
-        if c % pb:
+        if not packable(wbits, c):
             return leaf  # unpackable channel count: keep bf16
-        return {
-            "codes": jax.ShapeDtypeStruct((*lead, c // pb, h), jnp.uint8),
-            "scale": jax.ShapeDtypeStruct((*lead, c // g, h), jnp.float32),
-            "zero": jax.ShapeDtypeStruct((*lead, c // g, h), jnp.float32),
-            "__meta__": (wbits, g, c),
-        }
+        g = fit_group(c, group)
+        return PackedWeight(
+            codes=jax.ShapeDtypeStruct((*lead, c // pb, h), jnp.uint8),
+            scale=jax.ShapeDtypeStruct((*lead, c // g, h), jnp.float32),
+            zero=jax.ShapeDtypeStruct((*lead, c // g, h), jnp.float32),
+            bits=wbits, group=g, c=c, dtype=str(np.dtype(leaf.dtype)),
+            packed=True, backend=backend,
+        )
 
     return jax.tree_util.tree_map_with_path(visit, params_sds)
 
 
-def dequant_leaf(q: Dict, dtype=jnp.bfloat16) -> jax.Array:
-    """Unpack + dequantize a packed leaf (any leading stack dims)."""
-    wbits, g, c = q["__meta__"]
-    codes, scale, zero = q["codes"], q["scale"], q["zero"]
-    pb = codes_per_byte(wbits)
-    mask = (1 << wbits) - 1
-    parts = [((codes >> (wbits * i)) & mask).astype(jnp.float32) for i in range(pb)]
-    w = jnp.stack(parts, axis=-2)  # (..., C/pb, pb, H)
-    w = w.reshape(*codes.shape[:-2], c, codes.shape[-1])
-    ng = c // g
-    wg = w.reshape(*codes.shape[:-2], ng, g, codes.shape[-1])
-    wg = (wg - zero[..., :, None, :]) * scale[..., :, None, :]
-    return wg.reshape(*codes.shape[:-2], c, codes.shape[-1]).astype(dtype)
-
-
-def _is_qleaf(x) -> bool:
-    return isinstance(x, dict) and "__meta__" in x
-
-
 def dequant_params(qparams, dtype=jnp.bfloat16):
-    return jax.tree.map(
-        lambda x: dequant_leaf(x, dtype) if _is_qleaf(x) else x,
-        qparams,
-        is_leaf=lambda x: _is_qleaf(x) or not isinstance(x, dict),
-    )
+    """Materialize every packed leaf (dequant-on-use reference path)."""
+    return dequantize_tree(qparams, dtype)
 
 
 def quant_param_pspecs(cfg, params_sds, qparams_sds, fsdp_axes=None):
-    """Mirror the bf16 param specs onto the packed representation."""
-    base = param_pspecs(cfg, params_sds, fsdp_axes=fsdp_axes)
-
-    def visit(spec, qleaf):
-        if not _is_qleaf(qleaf):
-            return spec
-        nd = qleaf["codes"].ndim
-        parts = list(spec) + [None] * (nd - len(spec))
-        sub = P(*parts)
-        return {"codes": sub, "scale": sub, "zero": sub, "__meta__": None}
-
-    return jax.tree.map(
-        visit, base, qparams_sds,
-        is_leaf=lambda x: isinstance(x, P) or _is_qleaf(x),
-    )
+    """Specs for the packed tree: ``dist.sharding.param_pspecs`` mirrors
+    each logical weight's spec onto its codes/scale/zero children.
+    (``params_sds`` is retained for signature compatibility.)"""
+    del params_sds
+    return param_pspecs(cfg, qparams_sds, fsdp_axes=fsdp_axes)
 
 
 def lower_quant_decode(arch, shape: ShapeConfig, mesh, rec: Dict, wbits: int,
@@ -114,35 +98,14 @@ def lower_quant_decode(arch, shape: ShapeConfig, mesh, rec: Dict, wbits: int,
 
     t0 = time.time()
     params_sds = arch.param_specs(dtype=jnp.bfloat16)
-    qparams_sds = quant_param_specs(cfg, params_sds, wbits)
-    # strip __meta__ (static) from the SDS pytree passed to jit
-    metas = {}
-
-    def strip(path, x):
-        if _is_qleaf(x):
-            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
-            metas[key] = x["__meta__"]
-            return {k: v for k, v in x.items() if k != "__meta__"}
-        return x
-
-    qsds = jax.tree_util.tree_map_with_path(
-        strip, qparams_sds, is_leaf=lambda x: _is_qleaf(x) or not isinstance(x, dict)
-    )
+    qsds = quant_param_specs(cfg, params_sds, wbits)
 
     max_seq = shape.seq_len + (cfg.n_patches if cfg.modality == "vlm" else 0)
     cache_sds = arch.cache_specs(shape.global_batch, max_seq, spec)
     cspec = sanitize_pspecs(
         mesh, cache_pspecs(cfg, cache_sds, dp, shard_batch=not long_ctx, model_size=mesh.shape['model']), cache_sds
     )
-    pspec_q = quant_param_pspecs(cfg, params_sds, qparams_sds)
-    pspec_q = jax.tree_util.tree_map_with_path(
-        lambda path, x: {k: v for k, v in x.items() if k != "__meta__"}
-        if isinstance(x, dict) and "__meta__" in x
-        else x,
-        pspec_q,
-        is_leaf=lambda x: (isinstance(x, dict) and "__meta__" in x) or isinstance(x, P),
-    )
-    pspec_q = sanitize_pspecs(mesh, pspec_q, qsds)
+    pspec_q = sanitize_pspecs(mesh, param_pspecs(cfg, qsds), qsds)
     tok_sds = arch.input_specs(shape)
     tspec = (
         jax.tree.map(lambda x: P(), tok_sds)
@@ -150,20 +113,10 @@ def lower_quant_decode(arch, shape: ShapeConfig, mesh, rec: Dict, wbits: int,
         else sanitize_pspecs(mesh, batch_pspecs(cfg, tok_sds, dp), tok_sds)
     )
 
-    def is_packed(x):
-        return isinstance(x, dict) and set(x) >= {"codes", "scale", "zero"}
-
     def decode_fn(qp, toks, cache):
-        def deq(path, x):
-            if is_packed(x):
-                key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
-                return dequant_leaf({**x, "__meta__": metas[key]})
-            return x
-
-        params = jax.tree_util.tree_map_with_path(
-            deq, qp, is_leaf=lambda x: is_packed(x) or not isinstance(x, dict)
-        )
-        return arch.decode(params, toks["tokens"], cache, spec)
+        # Packed params execute directly: the PackedWeight leaves
+        # dequantize at their use sites inside the scanned layer body.
+        return arch.decode(qp, toks["tokens"], cache, spec)
 
     ns = lambda tree: jax.tree.map(
         lambda s: NamedSharding(mesh, s), tree, is_leaf=lambda x: isinstance(x, P)
@@ -207,3 +160,58 @@ def lower_quant_decode(arch, shape: ShapeConfig, mesh, rec: Dict, wbits: int,
     rec["collective_wire_bytes"] = total_wire_bytes(colls)
     rec["hlo_bytes"] = len(hlo)
     return rec
+
+
+# ---------------------------------------------------------------------------
+# Artifact serving entry point
+# ---------------------------------------------------------------------------
+
+
+def main():
+    import argparse
+
+    from repro import api
+
+    ap = argparse.ArgumentParser(
+        description="Serve a saved QuantizedModel artifact (no requantization)."
+    )
+    ap.add_argument("--artifact", required=True, help="QuantizedModel.save dir")
+    ap.add_argument("--backend", default="reference",
+                    choices=("reference", "pallas"))
+    ap.add_argument("--prompts", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-seq", type=int, default=128)
+    args = ap.parse_args()
+
+    qm = api.load_quantized(args.artifact, backend=args.backend)
+    cfg = qm.config
+    n_packed = sum(1 for l in jax.tree.leaves(qm.params, is_leaf=is_packed)
+                   if is_packed(l))
+    print(f"[quant_serve] loaded {cfg.name}: {n_packed} packed weight stacks, "
+          f"{qm.packed_bytes()/2**20:.2f} MiB packed "
+          f"(R1={qm.rotation['r1_kind']}, {qm.ptq.wakv} via {qm.ptq.method})")
+
+    eng = qm.serve(api.ServeConfig(max_seq=args.max_seq,
+                                   batch_slots=args.prompts),
+                   backend=args.backend)
+    rng = np.random.default_rng(0)
+    if cfg.modality == "audio":
+        prompts = rng.integers(0, cfg.vocab,
+                               size=(args.prompts, args.prompt_len, cfg.n_codebooks))
+    else:
+        prompts = rng.integers(0, cfg.vocab, size=(args.prompts, args.prompt_len))
+    pe = None
+    if cfg.modality == "vlm":
+        pe = rng.normal(size=(args.prompts, cfg.n_patches, cfg.d_model)).astype(np.float32) * 0.02
+    t0 = time.time()
+    out = eng.generate(prompts.astype(np.int32), args.max_new, patch_embeds=pe)
+    dt = time.time() - t0
+    print(f"[quant_serve] backend={args.backend}: generated "
+          f"{out['tokens'].shape} tokens in {dt:.2f}s "
+          f"({args.prompts * args.max_new / dt:.1f} tok/s)")
+    print(out["tokens"][:2])
+
+
+if __name__ == "__main__":
+    main()

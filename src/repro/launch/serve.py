@@ -1,11 +1,17 @@
-"""Quantized serving launcher: PTQ a model, then serve batched requests.
+"""Quantized serving launcher: quantize once -> save -> re-serve forever.
 
-The end-to-end deployment path of the paper: load (or train) weights,
-run the GSR + GPTQ/RTN PTQ pipeline, and serve greedy generations from
-the quantized model.
+The end-to-end deployment path of the paper through the front-door API
+(``repro.api``): load (or init) weights, PTQ them into a packed
+:class:`~repro.api.QuantizedModel` artifact, optionally persist it, and
+serve greedy generations through the selected weight backend.
 
+  # quantize + serve (and keep the artifact for later)
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
-      --r1 GSR --wakv W4A8 --prompts 4 --max-new 16
+      --r1 GSR --wakv W4A8 --save-artifact /tmp/smollm-w4a8
+
+  # re-serve the saved artifact: no re-quantization, packed ints loaded
+  PYTHONPATH=src python -m repro.launch.serve --artifact /tmp/smollm-w4a8 \
+      --backend pallas
 """
 from __future__ import annotations
 
@@ -15,10 +21,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.checkpoint import restore_checkpoint
 from repro.models.registry import ARCH_IDS, get_arch
-from repro.quant.pipeline import PTQConfig, quantize_model
-from repro.serve.engine import ServeConfig, ServeEngine
 
 
 def main():
@@ -26,6 +31,12 @@ def main():
     ap.add_argument("--arch", default="smollm-135m", choices=ARCH_IDS)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--ckpt-dir", default=None, help="restore trained weights")
+    ap.add_argument("--artifact", default=None,
+                    help="serve a saved QuantizedModel dir (skips PTQ)")
+    ap.add_argument("--save-artifact", default=None,
+                    help="persist the quantized model to this dir")
+    ap.add_argument("--backend", default="reference",
+                    choices=("reference", "pallas"))
     ap.add_argument("--r1", default="GSR", choices=("I", "GH", "GW", "LH", "GSR"))
     ap.add_argument("--wakv", default="W4A16")
     ap.add_argument("--method", default="rtn", choices=("rtn", "gptq"))
@@ -37,23 +48,36 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
 
-    arch = get_arch(args.arch, reduced=args.reduced)
-    cfg = arch.config
-    params = arch.init(jax.random.PRNGKey(0), jnp.float32)
-    if args.ckpt_dir:
-        state_tpl = {"params": params}
-        restored, step = restore_checkpoint(args.ckpt_dir, {"params": params, "opt": None, "err": {}})
-        params = restored["params"]
-        print(f"[serve] restored weights from step {step}")
+    if args.artifact:
+        qm = api.load_quantized(args.artifact, backend=args.backend)
+        print(f"[serve] loaded artifact {args.artifact}: {qm.config.name} "
+              f"(R1={qm.rotation['r1_kind']}, {qm.ptq.wakv} via {qm.ptq.method}, "
+              f"{qm.packed_bytes()/2**20:.2f} MiB packed)")
+        if args.save_artifact:  # re-export the loaded copy
+            path = qm.save(args.save_artifact)
+            print(f"[serve] artifact re-saved to {path}")
+    else:
+        arch = get_arch(args.arch, reduced=args.reduced)
+        params = arch.init(jax.random.PRNGKey(0), jnp.float32)
+        if args.ckpt_dir:
+            restored, step = restore_checkpoint(
+                args.ckpt_dir, {"params": params, "opt": None, "err": {}})
+            params = restored["params"]
+            print(f"[serve] restored weights from step {step}")
 
-    ptq = PTQConfig(r1_kind=args.r1, wakv=args.wakv, method=args.method,
-                    group=args.group)
-    qparams, spec = quantize_model(arch, params, ptq)
-    print(f"[serve] PTQ done: R1={args.r1} {args.wakv} via {args.method}")
+        ptq = api.PTQConfig(r1_kind=args.r1, wakv=args.wakv, method=args.method,
+                            group=args.group)
+        qm = api.quantize(arch, params, ptq)
+        print(f"[serve] PTQ done: R1={args.r1} {args.wakv} via {args.method} "
+              f"({qm.packed_bytes()/2**20:.2f} MiB packed)")
+        if args.save_artifact:
+            path = qm.save(args.save_artifact)
+            print(f"[serve] artifact saved to {path}")
 
-    eng = ServeEngine(arch, qparams, ServeConfig(
+    cfg = qm.config
+    eng = qm.serve(api.ServeConfig(
         max_seq=args.max_seq, batch_slots=args.prompts,
-        temperature=args.temperature), spec)
+        temperature=args.temperature), backend=args.backend)
     rng = np.random.default_rng(0)
     if cfg.modality == "audio":
         prompts = rng.integers(0, cfg.vocab,
@@ -64,8 +88,8 @@ def main():
     if cfg.modality == "vlm":
         pe = rng.normal(size=(args.prompts, cfg.n_patches, cfg.d_model)).astype(np.float32) * 0.02
     out = eng.generate(prompts.astype(np.int32), args.max_new, patch_embeds=pe)
-    print(f"[serve] generated {out['tokens'].shape} tokens; "
-          f"final cache length {out['final_length']}")
+    print(f"[serve] backend={args.backend}: generated {out['tokens'].shape} "
+          f"tokens; final cache length {out['final_length']}")
     print(out["tokens"][:2])
 
 

@@ -19,6 +19,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import common
 from repro.models.common import QuantizeSpec, act_q, apply_rope
+from repro.quant.packed import dense_w
 
 
 def init_mla_params(key, cfg: ModelConfig, n_layers: int, dtype) -> Dict:
@@ -74,7 +75,8 @@ def mla_prefill_attention(
     h = cfg.n_heads
     q_nope, q_rope = _project_q(lp, x, cfg, positions, spec)
     c_kv, k_rope = _project_latent(lp, x, cfg, positions, spec)
-    kv = jnp.einsum("bsr,rhe->bshe", c_kv, lp["wkv_b"])  # (B,S,H,nope+v)
+    # einsum cannot dispatch on PackedWeight: materialize wkv_b explicitly
+    kv = jnp.einsum("bsr,rhe->bshe", c_kv, dense_w(lp["wkv_b"]))  # (B,S,H,nope+v)
     k_nope, v = kv[..., : cfg.qk_nope_dim], kv[..., cfg.qk_nope_dim :]
     q = jnp.concatenate([q_nope, q_rope], -1)
     k = jnp.concatenate(
@@ -103,8 +105,9 @@ def mla_decode_attention(
     h = cfg.n_heads
     positions = jnp.broadcast_to(position, (b, 1))
     q_nope, q_rope = _project_q(lp, x, cfg, positions, spec)  # (B,1,H,*)
+    wkv_b = dense_w(lp["wkv_b"])  # einsum consumer: materialize explicitly
     # absorb K-expansion into the query: q_lat = q_nope @ W_kvb_K^T
-    wk = lp["wkv_b"][..., : cfg.qk_nope_dim]  # (rank, H, nope)
+    wk = wkv_b[..., : cfg.qk_nope_dim]  # (rank, H, nope)
     q_lat = jnp.einsum("bqhe,rhe->bqhr", q_nope, wk)  # (B,1,H,rank)
     s_lat = jnp.einsum("bqhr,bsr->bhqs", q_lat.astype(jnp.float32),
                        ckv_cache.astype(jnp.float32))
@@ -116,7 +119,7 @@ def mla_decode_attention(
     scores = jnp.where(mask, scores, common.NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
     out_lat = jnp.einsum("bhqs,bsr->bqhr", p, ckv_cache.astype(jnp.float32))  # (B,1,H,rank)
-    wv = lp["wkv_b"][..., cfg.qk_nope_dim :]  # (rank, H, v)
+    wv = wkv_b[..., cfg.qk_nope_dim :]  # (rank, H, v)
     out = jnp.einsum("bqhr,rhv->bqhv", out_lat.astype(x.dtype), wv)
     out = act_q(out.reshape(b, 1, h * cfg.v_head_dim), spec)
     return out @ lp["wo"]

@@ -30,6 +30,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import common
 from repro.models.common import QuantizeSpec, act_q, apply_r4
+from repro.quant.packed import dense_w
 
 
 def _ambient_mesh():
@@ -159,12 +160,14 @@ def moe_apply(lp: Dict, x: jax.Array, cfg: ModelConfig, spec: QuantizeSpec = com
     xe = _pin(xe, "data", "model", None, None)  # the expert all-to-all
 
     # --- expert computation (batched over B and E; MXU einsums) ---
-    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, lp["w_gate"])) * jnp.einsum(
-        "becd,edf->becf", xe, lp["w_up"]
+    # einsum cannot dispatch on PackedWeight: materialize expert stacks
+    # explicitly (dequant-on-use; XLA fuses it into the contraction).
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, dense_w(lp["w_gate"]))) * jnp.einsum(
+        "becd,edf->becf", xe, dense_w(lp["w_up"])
     )
     h = apply_r4(h, spec)
     h = act_q(h, spec)
-    ye = jnp.einsum("becf,efd->becd", h, lp["w_down"])  # (B, E, cap, D)
+    ye = jnp.einsum("becf,efd->becd", h, dense_w(lp["w_down"]))  # (B, E, cap, D)
     ye = _pin(ye, "data", "model", None, None)
 
     # --- combine (gather back, weight, unsort-scatter-add per sequence) ---

@@ -1,3 +1,10 @@
+from repro.quant.packed import (  # noqa: F401
+    PackedWeight,
+    dense_w,
+    dequantize_tree,
+    is_packed,
+    set_backend,
+)
 from repro.quant.qtypes import QuantConfig, QuantizedTensor, WAKVConfig  # noqa: F401
 from repro.quant.rtn import (  # noqa: F401
     compute_qparams,

@@ -1,8 +1,12 @@
 """Bit-packing of low-bit integer codes.
 
-Codes are packed along the *input-channel* axis (axis 0 of a (C, H) weight)
-so a dequant-matmul kernel can stream contiguous packed K-tiles from HBM:
-4-bit -> 2 codes/byte, 2-bit -> 4 codes/byte, 8-bit -> identity.
+Codes are packed along the *input-channel* axis (axis -2 of a ``(..., C, H)``
+weight) so a dequant-matmul kernel can stream contiguous packed K-tiles from
+HBM: 4-bit -> 2 codes/byte, 2-bit -> 4 codes/byte, 8-bit -> identity.  Any
+leading stack axes (layer ``L``, expert ``E``, interleave group) ride along
+untouched, so the same packer covers a 2-D Zamba shared-block weight, a
+stacked ``(L, C, H)`` transformer weight, and a ``(L, E, C, H)`` MoE expert
+stack.
 
 The packed representation is what the serving path stores in HBM; the
 roofline memory term of quantized decode is computed from these packed
@@ -24,23 +28,52 @@ def codes_per_byte(bits: int) -> int:
     return _PER_BYTE[bits]
 
 
-def pack(qt: QuantizedTensor) -> QuantizedTensor:
-    """Pack int8 codes (C, H) -> uint8 (C // per_byte, H)."""
-    if qt.packed:
-        return qt
-    n = codes_per_byte(qt.bits)
-    c, h = qt.codes.shape
+def packable(bits: int, c: int) -> bool:
+    """True when a C-channel weight at this width can be byte-packed."""
+    return bits in _PER_BYTE and c % _PER_BYTE[bits] == 0
+
+
+def pack_codes(codes: jax.Array, bits: int) -> jax.Array:
+    """Pack unsigned codes ``(..., C, H)`` -> uint8 ``(..., C/pb, H)``.
+
+    Codes must already be biased to unsigned (0..2^bits-1); channel row
+    ``byte*pb + i`` lands in bit-slot ``i`` of its byte.
+    """
+    n = codes_per_byte(bits)
+    *lead, c, h = codes.shape
     if c % n != 0:
         raise ValueError(f"C={c} not divisible by codes/byte={n}")
+    mask = (1 << bits) - 1
+    u = (codes.astype(jnp.int32) & mask).astype(jnp.uint8)
+    u = u.reshape(*lead, c // n, n, h)
+    out = jnp.zeros((*lead, c // n, h), jnp.uint8)
+    for i in range(n):
+        out = out | (u[..., i, :] << (bits * i))
+    return out
+
+
+def unpack_codes(packed: jax.Array, bits: int, c: int) -> jax.Array:
+    """Inverse of :func:`pack_codes`: uint8 ``(..., C/pb, H)`` -> int32 codes."""
+    n = codes_per_byte(bits)
+    mask = (1 << bits) - 1
+    parts = [((packed >> (bits * i)) & mask).astype(jnp.int32) for i in range(n)]
+    u = jnp.stack(parts, axis=-2)  # (..., C/pb, pb, H)
+    out = u.reshape(*packed.shape[:-2], packed.shape[-2] * n, packed.shape[-1])
+    if out.shape[-2] != c:
+        raise ValueError(f"unpacked rows {out.shape[-2]} != C={c}")
+    return out
+
+
+def pack(qt: QuantizedTensor) -> QuantizedTensor:
+    """Pack int codes ``(..., C, H)`` -> uint8 ``(..., C/pb, H)``."""
+    if qt.packed:
+        return qt
     # Bias symmetric codes to unsigned.
     offset = 0 if qt.zero is not None else (1 << (qt.bits - 1))
-    u = jnp.clip(qt.codes.astype(jnp.int32) + offset, 0, (1 << qt.bits) - 1).astype(jnp.uint8)
-    u = u.reshape(c // n, n, h)
-    out = jnp.zeros((c // n, h), jnp.uint8)
-    for i in range(n):
-        out = out | (u[:, i, :] << (qt.bits * i))
+    u = jnp.clip(qt.codes.astype(jnp.int32) + offset, 0, (1 << qt.bits) - 1)
     return QuantizedTensor(
-        codes=out, scale=qt.scale, zero=qt.zero, bits=qt.bits, group=qt.group, packed=True
+        codes=pack_codes(u, qt.bits), scale=qt.scale, zero=qt.zero,
+        bits=qt.bits, group=qt.group, packed=True,
     )
 
 
@@ -48,15 +81,10 @@ def unpack(qt: QuantizedTensor) -> QuantizedTensor:
     """Inverse of :func:`pack`."""
     if not qt.packed:
         return qt
-    n = codes_per_byte(qt.bits)
-    cp, h = qt.codes.shape
-    mask = (1 << qt.bits) - 1
-    parts = [
-        ((qt.codes >> (qt.bits * i)) & mask).astype(jnp.int32) for i in range(n)
-    ]  # each (C//n, H)
-    u = jnp.stack(parts, axis=1).reshape(cp * n, h)
+    c = qt.codes.shape[-2] * codes_per_byte(qt.bits)
+    u = unpack_codes(qt.codes, qt.bits, c)
     offset = 0 if qt.zero is not None else (1 << (qt.bits - 1))
-    codes = (u - offset).astype(jnp.int32)
     return QuantizedTensor(
-        codes=codes, scale=qt.scale, zero=qt.zero, bits=qt.bits, group=qt.group, packed=False
+        codes=(u - offset).astype(jnp.int32), scale=qt.scale, zero=qt.zero,
+        bits=qt.bits, group=qt.group, packed=False,
     )

@@ -1,0 +1,229 @@
+"""PackedWeight: the quantized-artifact leaf every layer of the stack shares.
+
+A ``PackedWeight`` holds one quantized ``(..., C, H)`` weight as packed
+integer codes plus per-group scale/zero, registered as a pytree so it flows
+through jit / scan / vmap / ``device_put`` / checkpointing like any bundle
+of arrays, while the static quantization metadata (bit width, group size,
+original channel count, dequantized dtype, execution backend) lives in the
+treedef.  It is what ``repro.api.QuantizedModel`` stores, what
+``dist.sharding`` co-shards, and what the launchers stream.
+
+Storage convention: codes are biased to unsigned ``0..2^bits-1`` with the
+bias folded into ``zero`` (for symmetric quantizers ``zero == 2^(bits-1)``
+exactly), so one dequant rule covers both: ``(codes - zero) * scale``.
+This makes dequantization bit-identical to the fake-quant float path the
+``quant.pipeline`` quantizers always produced.
+
+Execution dispatch: jax defers binary ops on unrecognised operand types,
+so a plain ``x @ w`` inside any model forward routes to
+:meth:`PackedWeight.__rmatmul__`:
+
+  * ``backend="reference"`` - dequantize-on-use in pure jnp; XLA fuses the
+    dequant into the matmul producer.  The oracle path, bit-identical to
+    evaluating the fake-quant float model.
+  * ``backend="pallas"`` - the fused ``kernels.dequant_matmul`` kernel
+    streams the packed bytes from HBM (interpret mode off-TPU).
+
+Consumers that contract through ``jnp.einsum`` (MoE expert stacks, MLA's
+``wkv_b``) cannot dispatch on a custom operand type; those call sites
+materialize explicitly via :func:`dense_w`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant import pack as packmod
+from repro.quant import rtn
+from repro.quant.qtypes import QuantConfig, QuantizedTensor
+
+BACKENDS = ("reference", "pallas")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedWeight:
+    """Grouped-quantized ``(..., C, H)`` weight; groups of ``group`` along C.
+
+    codes: uint8 - packed ``(..., C/pb, H)`` when ``packed`` else unpacked
+      ``(..., C, H)`` (non-byte-divisible channel counts, 3-bit codes).
+    scale/zero: float32 ``(..., C/g, H)``.
+    c: the original input-channel count (static; the packed axis hides it).
+    dtype: numpy dtype name the weight dequantizes back to.
+    backend: execution path for ``x @ w`` (see module docstring).
+    """
+
+    codes: jax.Array
+    scale: jax.Array
+    zero: jax.Array
+    bits: int
+    group: int
+    c: int
+    dtype: str = "float32"
+    packed: bool = True
+    backend: str = "reference"
+
+    # -- pytree protocol -------------------------------------------------
+    def tree_flatten(self):
+        return (self.codes, self.scale, self.zero), (
+            self.bits, self.group, self.c, self.dtype, self.packed, self.backend,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        codes, scale, zero = children
+        bits, group, c, dtype, packed, backend = aux
+        return cls(codes=codes, scale=scale, zero=zero, bits=bits, group=group,
+                   c=c, dtype=dtype, packed=packed, backend=backend)
+
+    def replace(self, **kw) -> "PackedWeight":
+        return dataclasses.replace(self, **kw)
+
+    # -- construction ----------------------------------------------------
+    @classmethod
+    def from_codes(cls, codes: jax.Array, scale: jax.Array,
+                   zero: Optional[jax.Array], *, bits: int, group: int,
+                   symmetric: bool = False, dtype: str = "float32",
+                   backend: str = "reference") -> "PackedWeight":
+        """Wrap quantizer output ``(..., C, H)`` codes + ``(..., C/g, H)``
+        scale/zero, biasing symmetric codes to the unsigned storage form
+        and byte-packing when the width/channel count allow."""
+        c = codes.shape[-2]
+        offset = (1 << (bits - 1)) if symmetric else 0
+        u = codes.astype(jnp.int32) + offset
+        scale = scale.astype(jnp.float32)
+        zf = jnp.zeros_like(scale) if zero is None else zero.astype(jnp.float32)
+        zf = zf + float(offset)
+        packed = packmod.packable(bits, c)
+        stored = packmod.pack_codes(u, bits) if packed else u.astype(jnp.uint8)
+        return cls(codes=stored, scale=scale, zero=zf, bits=bits, group=group,
+                   c=c, dtype=dtype, packed=packed, backend=backend)
+
+    @classmethod
+    def from_float(cls, w: jax.Array, cfg: QuantConfig, *,
+                   backend: str = "reference") -> "PackedWeight":
+        """RTN-quantize a float ``(..., C, H)`` weight (any leading stack
+        axes) into the packed artifact form."""
+        *lead, c, h = w.shape
+        flat = w.astype(jnp.float32).reshape(-1, c, h)
+        qt = jax.vmap(lambda m: rtn.quantize_weight_grouped(m, cfg))(flat)
+        rs = lambda a: a.reshape(*lead, *a.shape[1:])
+        return cls.from_codes(
+            rs(qt.codes), rs(qt.scale),
+            rs(qt.zero) if qt.zero is not None else None,
+            bits=cfg.bits, group=cfg.group, symmetric=cfg.symmetric,
+            dtype=str(w.dtype), backend=backend,
+        )
+
+    # -- shape metadata --------------------------------------------------
+    @property
+    def logical_shape(self):
+        """Shape of the float weight this dequantizes into."""
+        return (*self.codes.shape[:-2], self.c, self.codes.shape[-1])
+
+    @property
+    def out_features(self) -> int:
+        return self.codes.shape[-1]
+
+    def nbytes_packed(self) -> int:
+        n = 1
+        for s in self.codes.shape:
+            n *= s
+        return int(n + 2 * self.scale.size + 2 * self.zero.size)
+
+    # -- execution -------------------------------------------------------
+    def int_codes(self) -> jax.Array:
+        """Unpacked unsigned integer codes ``(..., C, H)`` (int32)."""
+        if self.packed:
+            return packmod.unpack_codes(self.codes, self.bits, self.c)
+        return self.codes.astype(jnp.int32)
+
+    def dequantize(self, dtype: Any = None) -> jax.Array:
+        """Back to the fake-quant float weight: ``(codes - zero) * scale``."""
+        dt = dtype if dtype is not None else self.dtype
+        codes = self.int_codes()
+        *lead, c, h = codes.shape
+        ng = c // self.group
+        wg = codes.astype(jnp.float32).reshape(*lead, ng, self.group, h)
+        wg = (wg - self.zero[..., :, None, :]) * self.scale[..., :, None, :]
+        return wg.reshape(*lead, c, h).astype(dt)
+
+    def to_qt(self) -> QuantizedTensor:
+        """View as the kernel-facing container (packed, asymmetric form)."""
+        if not self.packed:
+            raise ValueError("to_qt requires packed codes")
+        return QuantizedTensor(codes=self.codes, scale=self.scale,
+                               zero=self.zero, bits=self.bits,
+                               group=self.group, packed=True)
+
+    def __rmatmul__(self, x):
+        """``x @ w`` - the pluggable weight-backend dispatch point."""
+        if self.backend == "pallas" and self.packed and self.codes.ndim == 2:
+            from repro.kernels import ops  # local: kernels are optional
+
+            return ops.dequant_matmul(x, self.to_qt())
+        return x @ self.dequantize()
+
+    def astype(self, dtype) -> jax.Array:
+        return self.dequantize(dtype)
+
+    def __getitem__(self, idx) -> "PackedWeight":
+        """Index *leading stack axes only* (layer / expert / interleave
+        group — e.g. the per-group slicing in transformer._group_slices).
+        The trailing (C, H) axes cannot be indexed: the packed-C length
+        differs between codes (C/pb) and scale/zero (C/g), so one index
+        cannot mean the same rows in all three children."""
+        items = idx if isinstance(idx, tuple) else (idx,)
+        if any(e is Ellipsis for e in items) or len(items) > self.codes.ndim - 2:
+            raise IndexError(
+                "PackedWeight indexing is limited to leading stack axes; "
+                "dequantize() first to index the (C, H) plane"
+            )
+        return self.replace(codes=self.codes[idx], scale=self.scale[idx],
+                            zero=self.zero[idx])
+
+
+# ---------------------------------------------------------------------------
+# Tree helpers
+# ---------------------------------------------------------------------------
+
+
+def is_packed(x) -> bool:
+    return isinstance(x, PackedWeight)
+
+
+def _map_packed(fn, tree):
+    return jax.tree_util.tree_map(
+        lambda x: fn(x) if is_packed(x) else x, tree, is_leaf=is_packed
+    )
+
+
+def dense_w(w, dtype: Any = None):
+    """Materialize a PackedWeight (einsum consumers); pass arrays through."""
+    if is_packed(w):
+        return w.dequantize(dtype)
+    return w
+
+
+def dequantize_tree(tree, dtype: Any = None):
+    """Replace every PackedWeight leaf with its fake-quant float weight."""
+    return _map_packed(lambda w: w.dequantize(dtype), tree)
+
+
+def set_backend(tree, backend: str):
+    """Return ``tree`` with every PackedWeight switched to ``backend``."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown weight backend {backend!r}; want {BACKENDS}")
+    return _map_packed(lambda w: w.replace(backend=backend), tree)
+
+
+def packed_bytes(tree) -> int:
+    """Total packed bytes (codes + fp16-equivalent scales/zeros)."""
+    total = 0
+    for leaf in jax.tree.leaves(tree, is_leaf=is_packed):
+        if is_packed(leaf):
+            total += leaf.nbytes_packed()
+    return total

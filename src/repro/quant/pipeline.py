@@ -10,6 +10,13 @@ This reproduces the paper's experimental harness (Appendix A.1):
 with r1_kind in {GH, GW, LH, GSR} as the paper's independent variable.
 Weights: asymmetric, MSE-clipped, grouped (128 at full scale); acts:
 symmetric RTN, clip 0.9; R4 online rotation ahead of down_proj.
+
+Every family quantizer returns *packed integer* weights - a params tree
+whose quantized leaves are :class:`repro.quant.packed.PackedWeight`
+(codes + scale + zero) rather than fake-quant floats.  The packed tree is
+the canonical artifact (``repro.api.QuantizedModel``); the legacy
+float-valued view is one :func:`repro.quant.packed.dequantize_tree` away
+and is what :func:`quantize_model` still returns for existing callers.
 """
 from __future__ import annotations
 
@@ -28,6 +35,7 @@ from repro.models import transformer as tmod
 from repro.models.common import QuantizeSpec, act_q, apply_r4, rmsnorm
 from repro.quant import gptq as gptq_mod
 from repro.quant import rtn
+from repro.quant.packed import PackedWeight, dequantize_tree
 from repro.quant.qtypes import QuantConfig, WAKVConfig
 
 
@@ -82,17 +90,15 @@ _FAMILY_WEIGHTS = {
 }
 
 
-def _quantize_leaf_rtn(w: jax.Array, cfg: QuantConfig) -> jax.Array:
-    """Fake-quant a stacked weight (..., C, H) group-wise along C."""
-    c = w.shape[-2]
-    g = fit_group(c, cfg.group)
-    lcfg = cfg.replace(group=g)
-    flat = w.reshape(-1, *w.shape[-2:])
-    out = jax.vmap(lambda x: rtn.fake_quant_weight(x, lcfg))(flat)
-    return out.reshape(w.shape).astype(w.dtype)
+def _quantize_leaf_rtn(w: jax.Array, cfg: QuantConfig) -> PackedWeight:
+    """Quantize a (stacked) weight (..., C, H) group-wise along C into the
+    packed (codes, scale, zero) artifact form."""
+    g = fit_group(w.shape[-2], cfg.group)
+    return PackedWeight.from_float(w, cfg.replace(group=g))
 
 
 def rtn_quantize_params(cfg: ModelConfig, params: Dict, wcfg: QuantConfig) -> Dict:
+    """RTN-quantize every quantizable leaf to a :class:`PackedWeight`."""
     names = _FAMILY_WEIGHTS[cfg.family]
 
     def walk(tree):
@@ -104,8 +110,7 @@ def rtn_quantize_params(cfg: ModelConfig, params: Dict, wcfg: QuantConfig) -> Di
                 out[k] = _quantize_leaf_rtn(v, wcfg)
             elif k in names and getattr(v, "ndim", 0) == 2 and "b" != k[0]:
                 # unstacked (zamba shared block) 2-D weights
-                g = fit_group(v.shape[0], wcfg.group)
-                out[k] = rtn.fake_quant_weight(v, wcfg.replace(group=g)).astype(v.dtype)
+                out[k] = _quantize_leaf_rtn(v, wcfg)
             else:
                 out[k] = v
         return out
@@ -167,15 +172,20 @@ _DENSE_HESS_FOR = {
 
 def gptq_quantize_dense(cfg: ModelConfig, params: Dict, hess: Dict,
                         wcfg: QuantConfig) -> Dict:
+    """GPTQ every dense-family weight into a :class:`PackedWeight` stack."""
     layers = dict(params["layers"])
     for name, hkey in _DENSE_HESS_FOR.items():
         w = layers[name]  # (L, C, H)
         g = fit_group(w.shape[1], wcfg.group)
         lcfg = wcfg.replace(group=g)
-        quant_one = lambda wi, hi: gptq_mod.gptq_quantize(wi, hi, lcfg)[1]
-        layers[name] = jax.vmap(quant_one)(
+        quant_one = lambda wi, hi: gptq_mod.gptq_quantize(wi, hi, lcfg)[0]
+        qt = jax.vmap(quant_one)(
             w.astype(jnp.float32), hess[hkey].astype(jnp.float32)
-        ).astype(w.dtype)
+        )  # stacked QuantizedTensor: codes (L, C, H), scale/zero (L, C/g, H)
+        layers[name] = PackedWeight.from_codes(
+            qt.codes, qt.scale, qt.zero, bits=lcfg.bits, group=g,
+            symmetric=lcfg.symmetric, dtype=str(w.dtype),
+        )
     return dict(params, layers=layers)
 
 
@@ -213,13 +223,18 @@ def _learned_rotation(cfg: ModelConfig, params: Dict, r_init: Rotation,
 # ---------------------------------------------------------------------------
 
 
-def quantize_model(
+def quantize_packed(
     arch,
     params: Dict,
     ptq: PTQConfig,
     calib_batches: Optional[Iterator] = None,
 ) -> Tuple[Dict, QuantizeSpec]:
-    """Full PTQ: returns (quantized fused params, serving QuantizeSpec)."""
+    """Full PTQ to the packed artifact form.
+
+    Returns ``(fused params with PackedWeight leaves, serving spec)`` -
+    the canonical representation; wrap it in ``repro.api.QuantizedModel``
+    (or call :func:`quantize_model` for the legacy fake-quant float view).
+    """
     cfg = arch.config
     spec = ptq.spec()
     wcfg = ptq.weight_cfg()
@@ -240,6 +255,8 @@ def quantize_model(
         # is untouched), changing only what the quantizers see.
         fused = _apply_smoothing(cfg, fused, scale)
 
+    if not wcfg.enabled:
+        return fused, spec
     if ptq.method == "gptq" and cfg.family == "dense":
         if calib_batches is None:
             from repro.data import calibration_batches
@@ -251,6 +268,22 @@ def quantize_model(
     else:
         qparams = rtn_quantize_params(cfg, fused, wcfg)
     return qparams, spec
+
+
+def quantize_model(
+    arch,
+    params: Dict,
+    ptq: PTQConfig,
+    calib_batches: Optional[Iterator] = None,
+) -> Tuple[Dict, QuantizeSpec]:
+    """Legacy view: (fake-quant float params, serving QuantizeSpec).
+
+    Exactly :func:`quantize_packed` followed by leaf dequantization; the
+    float values are bit-identical to what the quantizers historically
+    emitted.  New code should prefer ``repro.api.quantize``.
+    """
+    qparams, spec = quantize_packed(arch, params, ptq, calib_batches)
+    return dequantize_tree(qparams), spec
 
 
 def _apply_smoothing(cfg: ModelConfig, fused: Dict, s: np.ndarray) -> Dict:

@@ -42,7 +42,13 @@ def dequant_matmul_ref(x: jax.Array, qt: QuantizedTensor) -> jax.Array:
     return (x.astype(jnp.float32) @ w).astype(x.dtype)
 
 
-def dequant_matmul(x: jax.Array, qt: QuantizedTensor, *, use_kernel: bool = False) -> jax.Array:
+def dequant_matmul(x: jax.Array, qt, *, use_kernel: bool = False) -> jax.Array:
+    """Accepts a :class:`QuantizedTensor` or a ``quant.packed.PackedWeight``
+    (the artifact leaf routes through its own backend dispatch)."""
+    from repro.quant.packed import is_packed
+
+    if is_packed(qt):
+        return x @ qt.replace(backend="pallas" if use_kernel else "reference")
     if use_kernel:
         from repro.kernels import ops  # local import: kernels are optional
 

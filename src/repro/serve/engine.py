@@ -5,6 +5,14 @@ short prompts), greedy/temperature sampling, per-slot stop tracking, and
 quantized execution via the QuantizeSpec (rotated+quantized weights come
 from the PTQ pipeline; KV quantization handled inside the model decode).
 
+Params may be plain float trees *or* the packed artifact form
+(``repro.quant.packed.PackedWeight`` leaves, e.g. from
+``repro.api.QuantizedModel``).  Packed weights execute through a
+pluggable per-launch weight backend — ``backend="reference"``
+(dequant-on-use, the oracle) or ``backend="pallas"`` (fused
+``dequant_matmul`` streaming the packed bytes; interpret mode off-TPU) —
+and are co-sharded with their scales by the ``dist.sharding`` rules.
+
 Continuous batching at cluster scale is a scheduler concern layered on
 these two jitted entry points (prefill once per admission, decode once
 per step across all active slots) - exactly the pair the dry-run lowers.
@@ -42,12 +50,17 @@ class ServeEngine:
     """
 
     def __init__(self, arch, params, scfg: ServeConfig, spec: QuantizeSpec = NOQUANT,
-                 dtype=jnp.float32, mesh=None):
+                 dtype=jnp.float32, mesh=None, backend: Optional[str] = None):
+        from repro.quant.packed import set_backend
+
         self.arch = arch
         self.cfg = arch.config
         self.scfg = scfg
         self.spec = spec
+        if backend is not None:
+            params = set_backend(params, backend)
         self.params = params
+        self.backend = backend
         self.dtype = dtype
         self.mesh = mesh
         self._cache_shardings = None

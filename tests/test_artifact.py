@@ -1,0 +1,224 @@
+"""QuantizedModel artifact tests: quantize -> save -> load -> serve.
+
+The front-door contract (repro.api) over all five model families at
+reduced scale:
+
+  * the packed integer representation round-trips a save/load bit-exactly;
+  * executing the packed params through the "reference" backend is
+    logit-identical to the legacy fake-quant float pipeline;
+  * the "pallas" backend (fused dequant_matmul, interpret mode on CPU)
+    matches within dtype tolerance on dense + MoE;
+  * a ServeEngine built from a *loaded* artifact generates the same
+    tokens as one built from the in-memory quantization - i.e. serving
+    never needs to re-quantize.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import api
+from repro.models.registry import get_arch
+from repro.quant import pack
+from repro.quant.packed import PackedWeight, is_packed, set_backend
+from repro.quant.pipeline import PTQConfig, quantize_model
+
+FAMILY_ARCHS = {
+    "dense": "smollm-135m",
+    "moe": "deepseek-moe-16b",
+    "mla": "minicpm3-4b",
+    "ssm": "xlstm-1.3b",
+    "hybrid": "zamba2-1.2b",
+}
+FAMILIES = sorted(FAMILY_ARCHS)
+
+_PTQ = PTQConfig(r1_kind="GSR", wakv="W4A8", method="rtn", group=32)
+
+
+@pytest.fixture(scope="module")
+def quantized():
+    """{family: (arch, float params, QuantizedModel, tokens)} cache."""
+    out = {}
+    for family, name in FAMILY_ARCHS.items():
+        arch = get_arch(name, reduced=True)
+        params = arch.init(jax.random.PRNGKey(0), jnp.float32)
+        toks = jax.random.randint(
+            jax.random.PRNGKey(1), (2, 16), 0, arch.config.vocab
+        )
+        out[family] = (arch, params, api.quantize(arch, params, _PTQ), toks)
+    return out
+
+
+def _packed_leaves(tree):
+    return [l for l in jax.tree.leaves(tree, is_leaf=is_packed) if is_packed(l)]
+
+
+# ---------------------------------------------------------------------------
+# Packing layer: stacked layouts
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("lead", [(), (3,), (2, 5)])
+def test_pack_roundtrip_stacked(bits, lead):
+    rng = np.random.default_rng(bits)
+    codes = rng.integers(0, 2**bits, size=(*lead, 16, 8))
+    packed = pack.pack_codes(jnp.asarray(codes), bits)
+    assert packed.shape == (*lead, 16 // pack.codes_per_byte(bits), 8)
+    assert packed.dtype == jnp.uint8
+    unpacked = pack.unpack_codes(packed, bits, 16)
+    np.testing.assert_array_equal(np.asarray(unpacked), codes)
+
+
+def test_packed_weight_from_float_stacked_matches_2d():
+    """A (L, C, H) stack quantizes layer-for-layer like its 2-D slices."""
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(3, 32, 8)).astype(np.float32))
+    from repro.quant.qtypes import paper_weight_cfg
+
+    cfg = paper_weight_cfg(4, group=16)
+    stacked = PackedWeight.from_float(w, cfg)
+    for i in range(3):
+        single = PackedWeight.from_float(w[i], cfg)
+        np.testing.assert_array_equal(
+            np.asarray(stacked.codes[i]), np.asarray(single.codes))
+        np.testing.assert_array_equal(
+            np.asarray(stacked.dequantize()[i]), np.asarray(single.dequantize()))
+
+
+# ---------------------------------------------------------------------------
+# Reference backend == legacy fake-quant pipeline (all five families)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_dequantize_bit_identical_to_legacy_pipeline(quantized, family):
+    arch, params, qm, _ = quantized[family]
+    legacy, spec = quantize_model(arch, params, _PTQ)
+    assert spec == qm.spec
+    for a, b in zip(jax.tree.leaves(qm.dequantize()), jax.tree.leaves(legacy)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_reference_backend_logit_identical(quantized, family):
+    """Packed execution (dequant-on-use dispatch) == fake-quant floats."""
+    arch, params, qm, toks = quantized[family]
+    legacy, spec = quantize_model(arch, params, _PTQ)
+    lf = arch.forward(legacy, {"tokens": toks}, spec)
+    lp = arch.forward(qm.params, {"tokens": toks}, qm.spec)
+    np.testing.assert_array_equal(np.asarray(lf), np.asarray(lp))
+
+
+# ---------------------------------------------------------------------------
+# Save / load round trip
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_roundtrip_bit_exact(quantized, family, tmp_path):
+    arch, _, qm, toks = quantized[family]
+    d = str(tmp_path / family)
+    qm.save(d)
+    qm2 = api.load_quantized(d)
+    assert qm2.config == qm.config
+    assert qm2.ptq == qm.ptq and qm2.spec == qm.spec
+
+    leaves1 = jax.tree.leaves(qm.params, is_leaf=is_packed)
+    leaves2 = jax.tree.leaves(qm2.params, is_leaf=is_packed)
+    assert len(leaves1) == len(leaves2)
+    n_packed = 0
+    for l1, l2 in zip(leaves1, leaves2):
+        assert is_packed(l1) == is_packed(l2)
+        if is_packed(l1):
+            n_packed += 1
+            np.testing.assert_array_equal(np.asarray(l1.codes), np.asarray(l2.codes))
+            np.testing.assert_array_equal(np.asarray(l1.scale), np.asarray(l2.scale))
+            np.testing.assert_array_equal(np.asarray(l1.zero), np.asarray(l2.zero))
+            assert (l1.bits, l1.group, l1.c, l1.dtype, l1.packed) == (
+                l2.bits, l2.group, l2.c, l2.dtype, l2.packed)
+        else:
+            assert l1.dtype == l2.dtype
+            np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    assert n_packed > 0, "artifact contained no packed weights"
+
+    # loaded artifact evaluates identically
+    lf = arch.forward(qm.params, {"tokens": toks}, qm.spec)
+    ll = qm2.arch.forward(qm2.params, {"tokens": toks}, qm2.spec)
+    np.testing.assert_array_equal(np.asarray(lf), np.asarray(ll))
+
+
+def test_save_is_atomic_and_self_describing(quantized, tmp_path):
+    import json
+    import os
+
+    _, _, qm, _ = quantized["dense"]
+    d = str(tmp_path / "artifact")
+    stepdir = qm.save(d)
+    with open(os.path.join(stepdir, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["kind"] == "quantized-model"
+    assert man["config"]["name"] == qm.config.name
+    assert man["ptq"]["r1_kind"] == "GSR"
+    assert man["packed"], "manifest must enumerate packed leaves"
+    for meta in man["packed"].values():
+        assert set(meta) >= {"bits", "group", "c", "dtype", "packed"}
+
+
+def test_load_missing_dir_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        api.load_quantized(str(tmp_path / "nope"))
+
+
+# ---------------------------------------------------------------------------
+# Serving off the artifact
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", ["dense", "moe"])
+def test_serve_off_loaded_artifact_matches_in_memory(quantized, family, tmp_path):
+    """quantize -> save -> load -> serve produces the same greedy tokens
+    as serving the in-memory quantization: no re-quantization anywhere."""
+    arch, _, qm, toks = quantized[family]
+    d = str(tmp_path / family)
+    qm.save(d)
+    qm2 = api.load_quantized(d)
+
+    scfg = api.ServeConfig(max_seq=32, batch_slots=2)
+    prompts = np.asarray(toks[:, :8])
+    out1 = qm.serve(scfg).generate(prompts, 3)
+    out2 = qm2.serve(scfg).generate(prompts, 3)
+    np.testing.assert_array_equal(out1["tokens"], out2["tokens"])
+
+
+@pytest.mark.parametrize("family", ["dense", "moe"])
+def test_pallas_backend_matches_reference(quantized, family):
+    """backend="pallas" (fused dequant_matmul, interpret mode on CPU)
+    agrees with the reference dequant-on-use path within f32 tolerance."""
+    arch, _, qm, toks = quantized[family]
+    batch = {"tokens": toks[:, :8]}
+    ref = arch.forward(set_backend(qm.params, "reference"), batch, qm.spec)
+    pal = arch.forward(set_backend(qm.params, "pallas"), batch, qm.spec)
+    np.testing.assert_allclose(
+        np.asarray(pal), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("family", ["dense", "moe"])
+def test_pallas_backend_serve_tokens_match(quantized, family):
+    _, _, qm, toks = quantized[family]
+    scfg = api.ServeConfig(max_seq=24, batch_slots=2)
+    prompts = np.asarray(toks[:, :8])
+    out_ref = qm.serve(scfg, backend="reference").generate(prompts, 3)
+    out_pal = qm.serve(scfg, backend="pallas").generate(prompts, 3)
+    np.testing.assert_array_equal(out_ref["tokens"], out_pal["tokens"])
+
+
+def test_packed_bytes_smaller_than_float(quantized):
+    arch, params, qm, _ = quantized["dense"]
+    float_bytes = sum(
+        np.asarray(l).nbytes
+        for l in jax.tree.leaves(params)
+    )
+    assert 0 < qm.packed_bytes() < float_bytes

@@ -81,6 +81,7 @@ def test_sanitizer_output_always_divides_mesh(mesh_i, dims, picks, seed):
 def test_quant_specs_coshard_output_axis(arch_name):
     from repro.launch.quant_serve import quant_param_pspecs, quant_param_specs
     from repro.models.registry import get_arch
+    from repro.quant.packed import is_packed
 
     arch = get_arch(arch_name)
     sds = arch.param_specs()
@@ -88,17 +89,13 @@ def test_quant_specs_coshard_output_axis(arch_name):
     qspecs = quant_param_pspecs(arch.config, sds, qsds)
     base = param_pspecs(arch.config, sds)
 
-    packed = {}
-
-    def collect(path, x):
-        if isinstance(x, dict) and "__meta__" in x:
-            packed["/".join(str(getattr(p, "key", p)) for p in path)] = x
-        return x
-
-    jax.tree_util.tree_map_with_path(
-        collect, qspecs,
-        is_leaf=lambda x: isinstance(x, dict) and "__meta__" in x or isinstance(x, P),
-    )
+    packed = {
+        "/".join(str(getattr(p, "key", p)) for p in path): node
+        for path, node in jax.tree_util.tree_flatten_with_path(
+            qspecs, is_leaf=lambda x: is_packed(x) or isinstance(x, P)
+        )[0]
+        if is_packed(node)
+    }
     assert packed, "no leaves were packed"
     flat_base = {
         "/".join(str(getattr(p, "key", p)) for p in path): s
@@ -106,11 +103,12 @@ def test_quant_specs_coshard_output_axis(arch_name):
             base, is_leaf=lambda x: isinstance(x, P)
         )[0]
     }
-    for key, sub in packed.items():
+    for key, node in packed.items():
         src = flat_base[key]
         out_axis = src[len(src) - 1] if len(src) else None
-        for part in ("codes", "scale", "zero"):
-            got = sub[part][len(sub[part]) - 1] if len(sub[part]) else None
+        for part, got_spec in (("codes", node.codes), ("scale", node.scale),
+                               ("zero", node.zero)):
+            got = got_spec[len(got_spec) - 1] if len(got_spec) else None
             assert got == out_axis, (key, part, got, out_axis)
 
 

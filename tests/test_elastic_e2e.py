@@ -1,0 +1,99 @@
+"""End-to-end elastic re-mesh test (ROADMAP open item).
+
+Train N steps on mesh A, checkpoint, resume on mesh B via
+``dist.elastic.plan_remesh`` + ``reshard`` (the Trainer's restore path),
+and assert the post-resize loss trajectory matches the unresized run.
+
+Multiple devices only exist if ``--xla_force_host_platform_device_count``
+is set *before* jax initialises, and the pytest process must keep seeing
+1 CPU device (see test_dist.py) — so the whole scenario runs in a
+subprocess with its own XLA_FLAGS.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import SyntheticLM
+from repro.dist.elastic import make_mesh, plan_remesh
+from repro.models.registry import get_arch
+from repro.train.optimizer import OptConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+out_path, ckpt_root = sys.argv[1], sys.argv[2]
+TOTAL, RESIZE_AT, BATCH = 6, 3, 8
+
+arch = get_arch("smollm-135m", reduced=True)
+cfg = arch.config
+data = SyntheticLM(cfg.vocab, 32, seed=5)
+
+
+def batches_from(trainer):
+    step = trainer.step
+    while True:
+        yield {"tokens": data.batch(step, 0, BATCH)}
+        step += 1
+
+
+def run(tag, phases):
+    # phases: [(n_devices, total_steps), ...] sharing one ckpt dir
+    losses = {}
+    for n_dev, total in phases:
+        plan = plan_remesh(n_dev, BATCH, model_parallel=1)
+        assert plan.mesh_shape[0] == n_dev and plan.effective_batch == BATCH
+        mesh = make_mesh(plan)
+        opt = OptConfig(lr=1e-2, warmup_steps=2, total_steps=TOTAL)
+        tcfg = TrainerConfig(total_steps=total, ckpt_interval=RESIZE_AT,
+                             ckpt_dir=os.path.join(ckpt_root, tag),
+                             log_interval=1, seed=0)
+        trainer = Trainer(arch, opt, tcfg, mesh=mesh)
+        trainer.run(batches_from(trainer))
+        for rec in trainer.metrics_log:
+            losses[rec["step"]] = rec["loss"]
+    return losses
+
+
+# Control: mesh A (2 devices) end to end, no resize.
+control = run("control", [(2, TOTAL)])
+# Elastic: mesh A to step 3, checkpoint, resume on mesh B (4 devices).
+elastic = run("elastic", [(2, RESIZE_AT), (4, TOTAL)])
+
+with open(out_path, "w") as f:
+    json.dump({"control": control, "elastic": elastic}, f)
+"""
+
+
+def test_elastic_resize_preserves_loss_trajectory(tmp_path):
+    out = tmp_path / "losses.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (
+        os.path.join(os.path.dirname(__file__), "..", "src")
+        + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT, str(out), str(tmp_path / "ckpt")],
+        env=env, capture_output=True, text=True, timeout=540,
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    res = json.loads(out.read_text())
+    control, elastic = res["control"], res["elastic"]
+    assert set(control) == set(elastic) and len(control) == 6
+    # Pre-resize steps ran on the same mesh: identical.
+    for s in ("1", "2", "3"):
+        np.testing.assert_allclose(elastic[s], control[s], rtol=1e-5)
+    # Post-resize (2 -> 4 data shards): same trajectory up to the changed
+    # reduction order of the data-parallel mean/sum.
+    for s in ("4", "5", "6"):
+        np.testing.assert_allclose(elastic[s], control[s], rtol=2e-3, atol=2e-3)

@@ -44,17 +44,31 @@ def test_training_learned_something(trained):
 
 
 def test_w2_rotation_beats_identity(trained):
-    """The reason rotations exist: at W2, any orthogonal rotation should
-    beat no rotation on a trained model."""
-    arch, params, held = trained
-    nlls = {}
+    """The reason rotations exist: at W2, an orthogonal rotation should
+    beat no rotation on a trained model.
+
+    Deflaked for the reduced scale (ROADMAP open item): quantize with RTN
+    — GPTQ's error compensation washes the rotation margin into noise on
+    a 64-dim model (the full-setting comparison lives in
+    benchmarks/table1) — and average the NLL margin over a small fixed
+    seed set of held-out batches instead of asserting one draw.  All
+    seeds are pinned, so the averaged margin is deterministic; the
+    widened threshold (> 0.005 nats mean vs. strict per-draw dominance)
+    keeps the test about the mechanism, not the noise floor.
+    """
+    arch, params, _ = trained
+    data = SyntheticLM(arch.config.vocab, 48, seed=3)
+    evs = {}
     for kind in ("I", "GSR"):
-        ptq = PTQConfig(r1_kind=kind, wakv="W2A16", method="gptq", group=16,
-                        n_calib=4, calib_seq=48)
+        ptq = PTQConfig(r1_kind=kind, wakv="W2A16", method="rtn", group=32)
         qp, spec = quantize_model(arch, params, ptq)
-        ev = jax.jit(make_eval_step(arch, spec))
-        nlls[kind] = float(ev(qp, held)["nll"])
-    assert nlls["GSR"] < nlls["I"], nlls
+        evs[kind] = (jax.jit(make_eval_step(arch, spec)), qp)
+    margins = []
+    for k in range(4):  # the fixed held-out seed set
+        held_k = {"tokens": jnp.asarray(data.batch(9_999 + 10_000 * k, 0, 16))}
+        nll = {kind: float(ev(qp, held_k)["nll"]) for kind, (ev, qp) in evs.items()}
+        margins.append(nll["I"] - nll["GSR"])
+    assert np.mean(margins) > 0.005, margins
 
 
 def test_w4_quantization_near_lossless(trained):
