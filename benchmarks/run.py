@@ -38,6 +38,13 @@ def main() -> None:
     for r in kernels_bench.run(quiet=True):
         print(f"kernel/{r['name']},{r['us']:.1f},bytes={r['hbm_bytes']:.3e}")
 
+    print("# === serve (continuous vs static batching) ===")
+    from benchmarks import serve_bench
+
+    for r in serve_bench.run(quiet=True, fast=fast):
+        print(f"serve/{r['name']},0,tok_s={r['tokens_per_s']:.1f};"
+              f"util={r['utilisation']:.3f};steps={r['decode_steps']}")
+
     if not fast:
         print("# === table1 (paper Table 1) ===")
         from benchmarks import table1

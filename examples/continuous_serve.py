@@ -1,0 +1,75 @@
+"""Continuous-batching serving off a loaded quantized artifact.
+
+    PYTHONPATH=src python examples/continuous_serve.py
+
+End-to-end on CPU in under a minute: quantize a reduced model through the
+front door (``repro.api``), save + reload the packed artifact, then serve
+a mixed-length request trace through the continuous scheduler —
+``submit()`` with a streaming token callback, per-slot stop + refill over
+the block-paged KV pool, and the queue-wait / TTFT / decode-slot
+utilisation metrics the scheduler keeps.  Finishes by showing the
+``generate()`` compatibility wrapper produces the same greedy tokens as
+the static fixed-batch loop it replaced.
+"""
+import tempfile
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import api
+from repro.models.registry import get_arch
+from repro.serve.scheduler import synthetic_trace
+
+
+def main():
+    # 1. Quantize -> save -> load (no re-quantization on the serve path) --
+    arch = get_arch("smollm-135m", reduced=True)
+    cfg = arch.config
+    params = arch.init(jax.random.PRNGKey(0), jnp.float32)
+    qm = api.quantize(arch, params,
+                      api.PTQConfig(r1_kind="GSR", wakv="W4A8", group=32))
+    with tempfile.TemporaryDirectory() as d:
+        qm.save(d, shards=2)  # one shard per host on a cluster
+        loaded = api.load_quantized(d)
+        print(f"artifact reloaded: {loaded.config.name}, "
+              f"{loaded.packed_bytes() / 2**20:.2f} MiB packed, 2 shards")
+
+        # 2. A continuous engine: 2 decode slots, 8-token KV blocks -------
+        eng = loaded.serve(api.ServeConfig(max_seq=48, batch_slots=2,
+                                           block_tokens=8))
+
+        # 3. Stream a mixed-length trace through submit/step/drain --------
+        def stream(req, tok, done):
+            flag = " <- finished" if done else ""
+            print(f"  r{req.rid}: token {len(req.tokens):2d} = {int(tok)}{flag}")
+
+        trace = synthetic_trace(cfg, 5, seed=3, prompt_len=8,
+                                max_new_low=2, max_new_high=8)
+        for r in trace:
+            r.on_token = stream if r is trace[0] else None
+            eng.scheduler.submit(r)
+        while eng.step():  # tick-by-tick: admit, batched decode, refill
+            pass
+        m = eng.scheduler.metrics()["aggregate"]
+        print(f"drained {m['n_requests']} requests / "
+              f"{m['tokens_generated']} tokens; decode-slot utilisation "
+              f"{m['slot_utilisation']:.2f}, mean TTFT "
+              f"{m['mean_ttft_s'] * 1e3:.1f} ms, mean queue wait "
+              f"{m['mean_queue_wait_s'] * 1e3:.1f} ms")
+
+        # 4. generate() wraps the same scheduler; static loop is the oracle
+        prompts = np.asarray(
+            jax.random.randint(jax.random.PRNGKey(1), (3, 8), 0, cfg.vocab))
+        cont = eng.generate(prompts, max_new_tokens=6)
+        static = loaded.serve(
+            api.ServeConfig(max_seq=48, batch_slots=3)
+        ).generate_static(prompts, max_new_tokens=6)
+        assert np.array_equal(cont["tokens"], static["tokens"])
+        print("continuous generate() == static generate_static():",
+              cont["tokens"].shape, "tokens identical")
+
+
+if __name__ == "__main__":
+    main()

@@ -99,11 +99,19 @@ class QuantizedModel:
                            self.spec, dtype=dtype, mesh=mesh, backend=backend)
 
     # -- persistence -----------------------------------------------------
-    def save(self, directory: str) -> str:
-        """Write the artifact: one npz of packed arrays + a JSON manifest
-        carrying config / PTQ / per-leaf quantization metadata.  Uses the
-        checkpoint layer's atomic manifest-last protocol, so a partially
-        written artifact is never visible."""
+    def save(self, directory: str, *, shards: int = 1) -> str:
+        """Write the artifact: packed arrays in ``shards`` npz files + a
+        JSON manifest carrying config / PTQ / per-leaf quantization
+        metadata.  Uses the checkpoint layer's atomic manifest-last
+        protocol (the manifest is written only after the *last* shard), so
+        a partially written artifact is never visible.
+
+        ``shards > 1`` is the multi-host layout: leaves are split into
+        byte-balanced groups, one ``shard_<i>.npz`` each — on a cluster
+        each host writes its own shard via the checkpoint layer's
+        ``shard`` argument; here all shards are written by this process so
+        a single-host artifact and a cluster artifact restore identically.
+        """
         packed_meta: Dict[str, Dict] = {}
         dtypes: Dict[str, str] = {}
 
@@ -129,8 +137,16 @@ class QuantizedModel:
             "packed": packed_meta,
             "dtypes": dtypes,
         }
-        return ckpt.save_checkpoint(directory, 0, plain(self.params),
-                                    metadata=meta)
+        tree = plain(self.params)
+        if shards <= 1:
+            return ckpt.save_checkpoint(directory, 0, tree, metadata=meta)
+        parts = _partition_leaves(tree, shards)
+        out = None
+        for i, part in enumerate(parts):
+            out = ckpt.save_checkpoint(
+                directory, 0, part, shard=i, n_shards=len(parts),
+                write_manifest=(i == len(parts) - 1), metadata=meta)
+        return out
 
     @classmethod
     def load(cls, directory: str, *, backend: str = "reference"
@@ -147,15 +163,16 @@ class QuantizedModel:
             man = json.load(f)
         if man.get("kind") != "quantized-model":
             raise ValueError(f"{directory} is not a quantized-model artifact")
-        data = np.load(os.path.join(stepdir, "shard_0.npz"))
 
         tree: Dict = {}
-        for key in data.files:
-            node = tree
-            *parents, leaf = key.split("/")
-            for p in parents:
-                node = node.setdefault(p, {})
-            node[leaf] = data[key]
+        for shard in range(int(man.get("shards", 1))):
+            data = np.load(os.path.join(stepdir, f"shard_{shard}.npz"))
+            for key in data.files:
+                node = tree
+                *parents, leaf = key.split("/")
+                for p in parents:
+                    node = node.setdefault(p, {})
+                node[leaf] = data[key]
 
         dtypes = man.get("dtypes", {})
 
@@ -180,6 +197,30 @@ class QuantizedModel:
         ptq = PTQConfig(**man["ptq"])
         return cls(arch=build_arch(cfg), params=params, ptq=ptq,
                    spec=ptq.spec())
+
+
+def _partition_leaves(tree: Dict, shards: int) -> list:
+    """Split a nested array tree into ``shards`` flat {path: array} dicts,
+    greedily byte-balanced (largest leaves first, deterministic
+    tie-breaking by path) — the per-host shard layout."""
+    flat: Dict[str, Any] = {}
+
+    def walk(node, prefix=""):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(v, f"{prefix}/{k}" if prefix else k)
+        else:
+            flat[prefix] = node
+
+    walk(tree)
+    order = sorted(flat, key=lambda k: (-np.asarray(flat[k]).nbytes, k))
+    parts = [{} for _ in range(max(1, shards))]
+    loads = [0] * len(parts)
+    for key in order:
+        i = loads.index(min(loads))
+        parts[i][key] = flat[key]
+        loads[i] += np.asarray(flat[key]).nbytes
+    return parts
 
 
 # ---------------------------------------------------------------------------

@@ -40,8 +40,17 @@ def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
 
 
 def save_checkpoint(directory: str, step: int, tree: Any, *, shard: int = 0,
+                    n_shards: Optional[int] = None,
+                    write_manifest: bool = True,
                     metadata: Optional[Dict] = None) -> str:
-    """Write {directory}/step_{step}/shard_{shard}.npz atomically."""
+    """Write {directory}/step_{step}/shard_{shard}.npz atomically.
+
+    Multi-shard writers (one shard per host, or ``QuantizedModel.save``'s
+    single-process splitting) call this once per shard with
+    ``write_manifest=False`` for all but the final call, so the manifest —
+    and with it checkpoint visibility — still lands last; ``n_shards``
+    records the total in the manifest for the reader.
+    """
     stepdir = os.path.join(directory, f"step_{step:08d}")
     os.makedirs(stepdir, exist_ok=True)
     flat = _flatten_with_paths(tree)
@@ -53,12 +62,14 @@ def save_checkpoint(directory: str, step: int, tree: Any, *, shard: int = 0,
     finally:
         if os.path.exists(tmp.name):
             os.unlink(tmp.name)
-    # manifest last -> checkpoint becomes visible atomically
-    man = {"step": step, "time": time.time(), "shards": shard + 1, **(metadata or {})}
-    mtmp = os.path.join(stepdir, ".manifest.tmp")
-    with open(mtmp, "w") as f:
-        json.dump(man, f)
-    os.replace(mtmp, os.path.join(stepdir, "manifest.json"))
+    if write_manifest:
+        # manifest last -> checkpoint becomes visible atomically
+        man = {"step": step, "time": time.time(),
+               "shards": n_shards or shard + 1, **(metadata or {})}
+        mtmp = os.path.join(stepdir, ".manifest.tmp")
+        with open(mtmp, "w") as f:
+            json.dump(man, f)
+        os.replace(mtmp, os.path.join(stepdir, "manifest.json"))
     return stepdir
 
 

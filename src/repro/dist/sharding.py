@@ -216,6 +216,25 @@ def cache_pspecs(cfg, cache_sds, dp_axes: Sequence[str], *,
     return jax.tree_util.tree_map_with_path(visit, cache_sds)
 
 
+def pool_pspecs(cfg, pool_sds, dp_axes: Sequence[str], *,
+                shard_blocks: bool = True, model_size: int = 16):
+    """Specs for the paged KV-pool storage of ``repro.serve.kvpool``.
+
+    The pool allocates block storage through the model's own
+    ``init_cache(batch=n_blocks, max_seq=block_tokens)``, so every leaf
+    keeps the static cache's layout with the *block* axis sitting exactly
+    where the batch axis sits (and the per-slot state fragment keeps the
+    batch axis as the slot axis).  KV blocks therefore shard on the same
+    mesh axes as the static cache: blocks/slots over the data axes,
+    head-like axes over ``model`` — :func:`cache_pspecs` applies verbatim.
+    Pass the pool-geometry ShapeDtypeStruct tree (``cache_specs(n_blocks,
+    block_tokens)`` or ``cache_specs(n_slots, block_tokens)``) and gate
+    the result through :func:`sanitize_pspecs` as usual.
+    """
+    return cache_pspecs(cfg, pool_sds, dp_axes, shard_batch=shard_blocks,
+                        model_size=model_size)
+
+
 # ---------------------------------------------------------------------------
 # Token batches
 # ---------------------------------------------------------------------------

@@ -121,6 +121,15 @@ def lower_cell(
         "kvbits": kvbits,
     }
 
+    if cfg.family == "moe":
+        # ROADMAP open item (measurement half): per-layer collective bytes
+        # of the explicit shard_map EP expert path vs the GSPMD einsum
+        # schedule, so flipping the default is a data-driven decision.
+        try:
+            rec["moe_ep"] = moe_ep_collectives(cfg, mesh, shape)
+        except Exception as e:  # noqa: BLE001 - keep the cell record alive
+            rec["moe_ep"] = {"error": repr(e)}
+
     t0 = time.time()
     params_sds = arch.param_specs(dtype=jnp.bfloat16)
     fsdp_axes = _fsdp_axes_for(total, dp, fsdp, shape.kind, scope=fsdp_scope)
@@ -232,6 +241,83 @@ def lower_cell(
     rec["collective_wire_bytes"] = total_wire_bytes(colls)
     rec["hlo_bytes"] = len(hlo)
     return rec
+
+
+def moe_ep_collectives(cfg, mesh, shape) -> Dict:
+    """Collective-byte comparison for the MoE expert FFN: the explicit
+    ``dist.collectives.expert_ffn_ep`` shard_map schedule vs the GSPMD
+    einsum path ``moe_apply`` uses today (ROADMAP open item, measurement
+    half: the default-path switch should be data-driven).
+
+    Both variants consume and return the dispatch buffer in the token-side
+    layout (batch over the data axes, experts unsharded), so each graph
+    carries its *own* resharding cost: the explicit path's batch-spread
+    over the model axis + two all-to-alls, vs whatever the partitioner
+    infers around the pinned ``P(dp, "model", ...)`` einsums.  Bytes are
+    per MoE-layer application; multiply by ``n_moe_layers`` (recorded) for
+    the per-step total.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.collectives import expert_ffn_ep
+    from repro.models.moe import capacity
+
+    dp = dp_axes_of(mesh)
+    dp_entry = dp if len(dp) > 1 else dp[0]
+    e, d = cfg.n_experts, cfg.d_model
+    de = cfg.d_expert or cfg.d_ff
+    s = 1 if shape.kind == "decode" else min(shape.seq_len, 4096)
+    cap = capacity(cfg, s)
+    xe_sds = jax.ShapeDtypeStruct((shape.global_batch, e, cap, d), jnp.bfloat16)
+    wcol_sds = jax.ShapeDtypeStruct((e, d, de), jnp.bfloat16)
+    wrow_sds = jax.ShapeDtypeStruct((e, de, d), jnp.bfloat16)
+
+    tok_spec = sanitize_pspecs(mesh, P(dp_entry, None, None, None), xe_sds)
+    full_spec = sanitize_pspecs(mesh, P(tuple(dp) + ("model",), None, None, None),
+                                xe_sds)
+    pin_spec = sanitize_pspecs(mesh, P(dp_entry, "model", None, None), xe_sds)
+    w_spec = sanitize_pspecs(mesh, P("model", None, None), wcol_sds)
+
+    def explicit(xe, wg, wu, wd):
+        xe = jax.lax.with_sharding_constraint(xe, full_spec)
+        ye = expert_ffn_ep(xe, wg, wu, wd, mesh, data_axes=dp)
+        return jax.lax.with_sharding_constraint(ye, tok_spec)
+
+    def gspmd(xe, wg, wu, wd):
+        xe = jax.lax.with_sharding_constraint(xe, pin_spec)
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, wg)) * jnp.einsum(
+            "becd,edf->becf", xe, wu)
+        ye = jnp.einsum("becf,efd->becd", h, wd)
+        ye = jax.lax.with_sharding_constraint(ye, pin_spec)
+        return jax.lax.with_sharding_constraint(ye, tok_spec)
+
+    out = {
+        "dispatch_shape": list(xe_sds.shape),
+        "n_moe_layers": cfg.n_layers // max(1, cfg.moe_every),
+    }
+    for name, fn in (("explicit_ep", explicit), ("gspmd_einsum", gspmd)):
+        # A variant can be infeasible for this cell's dispatch layout (e.g.
+        # batch not divisible by data x model for the shard_map spread) —
+        # that infeasibility is itself the record: the default path cannot
+        # switch for this cell.
+        try:
+            jf = jax.jit(
+                fn,
+                in_shardings=(_ns(mesh, tok_spec), _ns(mesh, w_spec),
+                              _ns(mesh, w_spec), _ns(mesh, w_spec)),
+                out_shardings=_ns(mesh, tok_spec),
+            )
+            with mesh:
+                hlo = jf.lower(xe_sds, wcol_sds, wcol_sds,
+                               wrow_sds).compile().as_text()
+            colls = collective_stats(hlo)
+            out[name] = {
+                "collectives": {k: v for k, v in colls.items() if v["count"]},
+                "wire_bytes_per_layer": total_wire_bytes(colls),
+            }
+        except Exception as e:  # noqa: BLE001
+            out[name] = {"error": repr(e)}
+    return out
 
 
 def lower_quant_serve_cell(arch, shape, mesh, rec, wbits, kvbits, seq_shard):

@@ -46,6 +46,12 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--continuous", action="store_true",
+                    help="replay a synthetic mixed-length request trace "
+                         "through the continuous-batching scheduler")
+    ap.add_argument("--trace-requests", type=int, default=8)
+    ap.add_argument("--block-tokens", type=int, default=16,
+                    help="KV pool block size (continuous mode)")
     args = ap.parse_args()
 
     if args.artifact:
@@ -77,7 +83,15 @@ def main():
     cfg = qm.config
     eng = qm.serve(api.ServeConfig(
         max_seq=args.max_seq, batch_slots=args.prompts,
-        temperature=args.temperature), backend=args.backend)
+        temperature=args.temperature, block_tokens=args.block_tokens),
+        backend=args.backend)
+    if args.continuous:
+        from repro.serve.scheduler import run_continuous_trace
+
+        run_continuous_trace(eng, n_requests=args.trace_requests,
+                             prompt_len=args.prompt_len,
+                             max_new=args.max_new)
+        return
     rng = np.random.default_rng(0)
     if cfg.modality == "audio":
         prompts = rng.integers(0, cfg.vocab,

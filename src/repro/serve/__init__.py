@@ -1,0 +1,9 @@
+"""Serving subsystem: engine + continuous-batching scheduler + paged KV pool."""
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.kvpool import KVPool
+from repro.serve.scheduler import ContinuousScheduler, Request, synthetic_trace
+
+__all__ = [
+    "ContinuousScheduler", "KVPool", "Request", "ServeConfig", "ServeEngine",
+    "synthetic_trace",
+]

@@ -1,27 +1,41 @@
-"""Batched serving engine: prefill + decode over fixed batch slots.
+"""Serving engine: continuous batching over a paged quantized-KV pool.
 
-A deliberately production-shaped loop: fixed-size slot batch (padding
-short prompts), greedy/temperature sampling, per-slot stop tracking, and
-quantized execution via the QuantizeSpec (rotated+quantized weights come
-from the PTQ pipeline; KV quantization handled inside the model decode).
+Two serving modes share one set of jitted model entry points (prefill
+once per admission, decode once per tick across all slots — the pair the
+dry-run lowers):
+
+* **continuous** (the default production path): ``submit()`` enqueues
+  requests, ``step()`` runs one scheduler tick (admission with
+  prefill-on-admit, one batched decode over per-slot block-paged cache
+  views, per-slot stop + immediate refill), ``drain()`` runs to
+  completion.  Cache storage lives in a :class:`repro.serve.kvpool.KVPool`
+  — fixed-size token blocks with a free list, quantized KV blocks
+  (packed codes + scales from ``quant.kv_cache``) dequantized at
+  attention time, per-slot views handed to the models' unmodified decode
+  so refill never re-allocates or copies surviving slots.
+
+* **static** (``generate_static()``): the original fixed-slot batch loop,
+  kept as the baseline the serving bench and the token-identity tests
+  compare against.  ``generate()`` is a thin compatibility wrapper that
+  round-trips through the continuous scheduler and returns the same
+  ``{"tokens", "final_length"}`` dict (greedy tokens are identical —
+  prefill/decode are per-sequence computations, so batch composition
+  cannot change any sequence's logits).
 
 Params may be plain float trees *or* the packed artifact form
 (``repro.quant.packed.PackedWeight`` leaves, e.g. from
-``repro.api.QuantizedModel``).  Packed weights execute through a
-pluggable per-launch weight backend — ``backend="reference"``
-(dequant-on-use, the oracle) or ``backend="pallas"`` (fused
-``dequant_matmul`` streaming the packed bytes; interpret mode off-TPU) —
-and are co-sharded with their scales by the ``dist.sharding`` rules.
-
-Continuous batching at cluster scale is a scheduler concern layered on
-these two jitted entry points (prefill once per admission, decode once
-per step across all active slots) - exactly the pair the dry-run lowers.
+``repro.api.QuantizedModel``), executing through the pluggable weight
+backend (``"reference"`` dequant-on-use vs ``"pallas"`` fused
+dequant-matmul).  With a ``mesh``, params, the static cache, and the KV
+pool (via ``dist.sharding.pool_pspecs`` — blocks shard on the same mesh
+axes as the static cache) are placed by the ``repro.dist`` rules.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
-from typing import Dict, Optional
+import math
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,16 +51,20 @@ class ServeConfig:
     batch_slots: int = 4
     temperature: float = 0.0  # 0 = greedy
     seed: int = 0
+    # --- continuous-batching / paged-KV pool geometry ---
+    block_tokens: int = 16  # tokens per KV block
+    pool_blocks: Optional[int] = None  # None: full provisioning (+1 scratch)
 
 
 class ServeEngine:
     """Single-device by default; pass ``mesh`` to serve sharded.
 
-    With a mesh, parameters and the KV/state cache are placed with the
-    ``repro.dist.sharding`` rules (tensor/expert parallel weights,
-    batch-sharded cache) and both jitted entry points run under the mesh
-    context, so the in-graph sharding hints (e.g. the MoE dispatch pin)
-    are active — the same layout the 512-device dry-run compiles.
+    With a mesh, parameters and cache storage (static cache and the paged
+    pool alike) are placed with the ``repro.dist.sharding`` rules
+    (tensor/expert parallel weights, batch/block-sharded cache) and the
+    jitted entry points run under the mesh context, so the in-graph
+    sharding hints (e.g. the MoE dispatch pin) are active — the same
+    layout the 512-device dry-run compiles.
     """
 
     def __init__(self, arch, params, scfg: ServeConfig, spec: QuantizeSpec = NOQUANT,
@@ -92,6 +110,10 @@ class ServeEngine:
             self._cache_shardings = ns(cspec)
         self._prefill = jax.jit(lambda p, b, c: arch.prefill(p, b, c, spec))
         self._decode = jax.jit(lambda p, t, c: arch.decode(p, t, c, spec))
+        # continuous-batching machinery, built lazily on first submit()
+        self._pool = None
+        self._pool_step_fn = None
+        self._sched = None
 
     def _mesh_ctx(self):
         return self.mesh if self.mesh is not None else contextlib.nullcontext()
@@ -106,10 +128,153 @@ class ServeEngine:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return jax.random.categorical(key, logits / self.scfg.temperature).astype(jnp.int32)
 
+    # ------------------------------------------------------------------
+    # Continuous batching: submit / step / drain (scheduler-driven)
+    # ------------------------------------------------------------------
+
+    @property
+    def pool(self):
+        if self._pool is None:
+            self._build_continuous()
+        return self._pool
+
+    @property
+    def scheduler(self):
+        if self._sched is None:
+            self._build_continuous()
+        return self._sched
+
+    def _build_continuous(self):
+        from repro.serve.kvpool import KVPool
+        from repro.serve.scheduler import ContinuousScheduler
+
+        scfg = self.scfg
+        round_to = 1
+        if self.mesh is not None:
+            from repro.dist.sharding import _axis_sizes
+            from repro.launch.mesh import dp_axes_of
+
+            sizes = _axis_sizes(self.mesh)
+            for a in dp_axes_of(self.mesh):
+                round_to *= sizes[a]
+        self._pool = KVPool(
+            self.arch, self.spec, self.dtype,
+            n_slots=scfg.batch_slots, max_seq=scfg.max_seq,
+            block_tokens=scfg.block_tokens, n_blocks=scfg.pool_blocks,
+            round_blocks_to=round_to,
+        )
+        if self.mesh is not None:
+            self._place_pool()
+        run = self._pool.build_step(
+            lambda p, t, c: self.arch.decode(p, t, c, self.spec))
+        self._pool_step_fn = run
+        self._sched = ContinuousScheduler(self)
+
+    def _place_pool(self):
+        """Shard the pool's block/state storage like the static cache."""
+        from repro.dist.sharding import pool_pspecs, sanitize_pspecs, _axis_sizes
+        from repro.launch.mesh import dp_axes_of
+
+        pool = self._pool
+        dp = dp_axes_of(self.mesh)
+        model_size = _axis_sizes(self.mesh).get("model", 1)
+        for tree_name, batch in (("paged", pool.n_blocks),
+                                 ("state", pool.n_slots)):
+            sds = self.arch.cache_specs(batch, pool.block_tokens, self.spec,
+                                        self.dtype)
+            specs = sanitize_pspecs(
+                self.mesh, pool_pspecs(self.cfg, sds, dp, model_size=model_size),
+                sds)
+            flat = dict(zip(pool.paths, jax.tree.leaves(specs)))
+            store = getattr(pool, tree_name)
+            for path in store:
+                store[path] = jax.device_put(
+                    store[path], NamedSharding(self.mesh, flat[path]))
+
+    def pool_step(self, tokens, lengths, tables):
+        """One batched decode tick over every pool slot (scheduler hook)."""
+        with self._mesh_ctx():
+            return self._pool_step_fn(self.params, tokens, lengths, tables)
+
+    def prefill_one(self, prompt: np.ndarray, patch_embeds: Optional[np.ndarray]
+                    ) -> tuple:
+        """Prefill a single request at its exact prompt length into a
+        batch=1 cache sized to whole pool blocks (so admit can copy it
+        block-for-block).  Returns (last_logits (V,)|(K,V), cache, n_tokens).
+
+        Exact-length prefill retraces the jitted prefill once per distinct
+        prompt length.  This is deliberate: the models' prefill returns
+        *last-position* logits, so padding the prompt to a bucket boundary
+        would sample the first token from a padding position — bucketing
+        needs a prefill variant that returns logits at the true last
+        token (ROADMAP open item) before it can be correct."""
+        pool = self.pool
+        s_total = prompt.shape[0]
+        if self.cfg.modality == "vlm" and patch_embeds is not None:
+            s_total += patch_embeds.shape[0]
+        nb0 = max(1, math.ceil(s_total / pool.block_tokens))
+        cache0 = self.arch.init_cache(1, nb0 * pool.block_tokens, self.spec,
+                                      self.dtype)
+        batch = {"tokens": jnp.asarray(prompt[None])}
+        if self.cfg.modality == "vlm" and patch_embeds is not None:
+            batch["patch_embeds"] = jnp.asarray(patch_embeds[None])
+        with self._mesh_ctx():
+            logits, cache = self._prefill(self.params, batch, cache0)
+        last = np.asarray(logits)[0]
+        if last.ndim >= 2 and last.shape[0] == 1:  # (1, V) / (1, K, V)
+            last = last[0]
+        return last, cache, s_total
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int, *,
+               patch_embeds: Optional[np.ndarray] = None,
+               stop_token: Optional[int] = None,
+               on_token=None):
+        """Enqueue one request; returns the :class:`Request` handle (its
+        ``tokens`` fill in as the scheduler produces them)."""
+        from repro.serve.scheduler import Request
+
+        return self.scheduler.submit(Request(
+            prompt=np.asarray(prompt), max_new_tokens=max_new_tokens,
+            patch_embeds=patch_embeds, stop_token=stop_token,
+            on_token=on_token))
+
+    def step(self) -> bool:
+        """One scheduler tick (admit + batched decode). False when idle."""
+        return self.scheduler.step()
+
+    def drain(self) -> List:
+        """Run the scheduler until queue and slots are empty; returns the
+        finished requests (see ``scheduler.metrics()`` for aggregates)."""
+        return self.scheduler.drain()
+
+    # ------------------------------------------------------------------
+    # Generation entry points
+    # ------------------------------------------------------------------
+
     def generate(self, prompts: np.ndarray, max_new_tokens: int,
                  patch_embeds: Optional[np.ndarray] = None) -> Dict:
-        """prompts: (B, S_prompt) int32 (audio: (B, S, K)). Returns dict with
-        generated tokens (B, max_new) and per-step logits stats."""
+        """Compatibility wrapper: round-trips through the continuous
+        scheduler (submit all prompts, drain) and returns the static
+        ``{"tokens": (B, T[,K]), "final_length": int}`` contract.  Greedy
+        outputs are token-identical to :meth:`generate_static`; prompts
+        beyond ``batch_slots`` simply queue."""
+        prompts = np.asarray(prompts)
+        reqs = []
+        for i in range(prompts.shape[0]):
+            pe = None if patch_embeds is None else np.asarray(patch_embeds[i])
+            reqs.append(self.submit(prompts[i], max_new_tokens,
+                                    patch_embeds=pe))
+        self.drain()
+        gen = np.stack([r.token_array() for r in reqs])  # (B, T) or (B, T, K)
+        final = reqs[-1].prompt_tokens + max_new_tokens
+        return {"tokens": gen, "final_length": int(final)}
+
+    def generate_static(self, prompts: np.ndarray, max_new_tokens: int,
+                        patch_embeds: Optional[np.ndarray] = None) -> Dict:
+        """The original fixed-slot batch loop: one monolithic cache, all
+        slots prefilled together, decode until the longest sequence is
+        done.  Kept as the baseline for the continuous scheduler (token
+        identity + the serving bench's utilisation comparison)."""
         cfg, scfg = self.cfg, self.scfg
         b = prompts.shape[0]
         assert b <= scfg.batch_slots, "more prompts than batch slots"
@@ -133,7 +298,7 @@ class ServeEngine:
             key = jax.random.PRNGKey(scfg.seed)
             outs = []
             last = logits.reshape(scfg.batch_slots, *logits.shape[1:])
-            if last.ndim == 3:  # (B, 1, V) -> (B, V)
+            if last.ndim >= 3:  # (B, 1, V) -> (B, V); audio (B, 1, K, V)
                 last = last[:, 0]
             for t in range(max_new_tokens):
                 key, sub = jax.random.split(key)

@@ -1,0 +1,379 @@
+"""Block-paged KV/state pool for continuous-batching serving.
+
+The static :class:`~repro.serve.engine.ServeEngine` cache is one
+monolithic allocation per ``generate()`` call: every slot's KV lives at a
+fixed batch index, and admitting a new sequence means re-allocating (and
+re-placing) the whole tree.  The pool breaks the *sequence axis* of every
+cache leaf into fixed-size token blocks with a free list, so a finished
+slot returns its blocks and a new request is admitted by writing only its
+own blocks — surviving slots are never re-allocated, copied, or even
+touched.
+
+Layout trick: block storage is allocated through the model's own
+``init_cache(batch=n_blocks, max_seq=block_tokens)``, i.e. the batch axis
+*is* the block axis.  That makes the pool generic over every family:
+
+* transformer / MLA leaves ``(L, B, S, ...)`` page on ``S`` (including
+  the quantized-KV code/scale/zero leaves from ``quant.kv_cache`` — a
+  block of a quantized cache is packed uint8 codes plus its scales, and
+  dequantization keeps happening at attention time inside the model);
+* Zamba pages its shared-block KV and keeps SSD/conv state per slot;
+* xLSTM has no sequence axis at all and degenerates to per-slot state.
+
+Which axes are batch/sequence is *probed*, not hard-coded: the pool
+evaluates ``cache_specs`` at two batch sizes and two sequence lengths and
+records, per leaf, which axis moved.  Leaves with a sequence axis are
+paged; leaves without are per-slot state; the scalar ``length`` leaf is
+replaced by a per-slot length vector.
+
+Block 0 is a reserved scratch block: free slots and unallocated table
+entries point at it, so the gather/scatter decode step runs with fully
+static shapes and inactive lanes read and write only scratch.
+
+The decode step itself (:meth:`KVPool.build_step`) gathers each slot's
+blocks into a contiguous per-slot view, runs the model's unmodified
+``decode`` under ``jax.vmap`` (one lane per slot, per-slot lengths), and
+scatters the updated blocks back — one jitted function for the whole
+pool, compiled once per pool geometry.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import NOQUANT, QuantizeSpec
+
+SCRATCH = 0  # reserved block id; never allocated, absorbs inactive-lane writes
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def _path_str(path) -> str:
+    return "/".join(_key_str(k) for k in path)
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafMeta:
+    """Where a cache leaf keeps its batch/sequence axes (probed)."""
+
+    batch_ax: Optional[int]  # None only for the scalar `length` leaf
+    seq_ax: Optional[int]  # None for per-slot state leaves
+
+    @property
+    def paged(self) -> bool:
+        return self.seq_ax is not None
+
+
+def _diff_axes(a: Tuple[int, ...], b: Tuple[int, ...]) -> List[int]:
+    assert len(a) == len(b), (a, b)
+    return [i for i, (x, y) in enumerate(zip(a, b)) if x != y]
+
+
+class KVPool:
+    """Paged cache storage shared by all decode slots of one engine.
+
+    Host-side bookkeeping (free list, per-slot block chains, lengths) is
+    plain Python/numpy; device-side storage is two pytree fragments
+    (``paged`` block storage, ``state`` per-slot storage) updated
+    functionally by admit/step.
+    """
+
+    def __init__(self, arch, spec: QuantizeSpec = NOQUANT, dtype=jnp.float32, *,
+                 n_slots: int, max_seq: int, block_tokens: int = 16,
+                 n_blocks: Optional[int] = None, round_blocks_to: int = 1):
+        """``round_blocks_to`` rounds the total block count up to a
+        multiple (the engine passes the data-parallel mesh size, so the
+        block axis stays divisible and ``pool_pspecs`` placements survive
+        ``sanitize_pspecs`` instead of silently replicating the pool)."""
+        if block_tokens < 1:
+            raise ValueError("block_tokens must be >= 1")
+        self.arch = arch
+        self.spec = spec
+        self.dtype = dtype
+        self.n_slots = n_slots
+        self.block_tokens = block_tokens
+        self.blocks_per_slot = max(1, math.ceil(max_seq / block_tokens))
+        self.view_tokens = self.blocks_per_slot * block_tokens
+
+        # --- probe which axis of each leaf is batch / sequence ------------
+        t = block_tokens
+        ref = arch.cache_specs(2, 2 * t, spec, dtype)
+        flat, self.treedef = jax.tree_util.tree_flatten_with_path(ref)
+        self.paths: List[str] = [_path_str(p) for p, _ in flat]
+        alt_b = jax.tree.leaves(arch.cache_specs(3, 2 * t, spec, dtype))
+        alt_s = jax.tree.leaves(arch.cache_specs(2, 3 * t, spec, dtype))
+        self.meta: Dict[str, LeafMeta] = {}
+        self.length_path: Optional[str] = None
+        for (path, leaf), lb, ls in zip(flat, alt_b, alt_s):
+            name = _path_str(path)
+            ba = _diff_axes(leaf.shape, lb.shape)
+            sa = _diff_axes(leaf.shape, ls.shape)
+            if not ba:
+                assert name.endswith("length") and leaf.ndim == 0, (
+                    f"cache leaf {name} has no batch axis and is not `length`")
+                self.length_path = name
+                self.meta[name] = LeafMeta(batch_ax=None, seq_ax=None)
+                continue
+            assert len(ba) == 1, f"ambiguous batch axis for {name}: {ba}"
+            assert len(sa) <= 1, f"ambiguous sequence axis for {name}: {sa}"
+            m = LeafMeta(batch_ax=ba[0], seq_ax=sa[0] if sa else None)
+            if m.paged:
+                assert m.seq_ax == m.batch_ax + 1, (
+                    f"{name}: pool assumes the sequence axis immediately "
+                    f"follows the batch axis, got {m}")
+            self.meta[name] = m
+        assert self.length_path is not None, "cache tree has no `length` leaf"
+        self.has_paged = any(m.paged for m in self.meta.values())
+
+        # --- device storage ----------------------------------------------
+        if n_blocks is None:
+            n_blocks = n_slots * self.blocks_per_slot + 1  # + scratch
+        r = max(1, round_blocks_to)
+        n_blocks = -(-n_blocks // r) * r
+        if n_blocks < 2:
+            raise ValueError("need at least one real block besides scratch")
+        self.n_blocks = n_blocks
+        block_tree = arch.init_cache(n_blocks, block_tokens, spec, dtype)
+        slot_tree = arch.init_cache(n_slots, block_tokens, spec, dtype)
+        bflat = dict(zip(self.paths, jax.tree.leaves(block_tree)))
+        sflat = dict(zip(self.paths, jax.tree.leaves(slot_tree)))
+        self.paged: Dict[str, jax.Array] = {
+            p: bflat[p] for p, m in self.meta.items() if m.paged}
+        self.state: Dict[str, jax.Array] = {
+            p: sflat[p] for p, m in self.meta.items()
+            if m.batch_ax is not None and not m.paged}
+
+        # --- host bookkeeping ----------------------------------------------
+        self.free: List[int] = list(range(1, n_blocks))
+        self.slot_blocks: List[List[int]] = [[] for _ in range(n_slots)]
+        self.tables = np.full((n_slots, self.blocks_per_slot), SCRATCH, np.int32)
+        self.lengths = np.zeros((n_slots,), np.int32)
+        self._reserved = np.zeros((n_slots,), np.int32)  # worst-case blocks
+
+    # ------------------------------------------------------------------
+    # Admission accounting
+    # ------------------------------------------------------------------
+
+    def blocks_for(self, n_tokens: int) -> int:
+        if not self.has_paged:
+            return 0
+        return max(1, math.ceil(n_tokens / self.block_tokens))
+
+    @property
+    def capacity_blocks(self) -> int:
+        return self.n_blocks - 1
+
+    def _outstanding(self) -> int:
+        """Blocks active slots may still demand under their reservations."""
+        return int(sum(max(0, int(self._reserved[s]) - len(self.slot_blocks[s]))
+                       for s in range(self.n_slots)))
+
+    def can_admit(self, worst_tokens: int) -> bool:
+        """Conservative policy: admit only if the request's worst case fits
+        after every running request takes its own worst case — decode can
+        then never starve mid-flight (no preemption needed)."""
+        if not self.has_paged:
+            return True
+        return len(self.free) >= self._outstanding() + self.blocks_for(worst_tokens)
+
+    # ------------------------------------------------------------------
+    # Slot lifecycle
+    # ------------------------------------------------------------------
+
+    def _alloc(self, slot: int) -> int:
+        if not self.free:
+            raise RuntimeError("KV pool out of blocks (admission bug)")
+        blk = self.free.pop()
+        self.slot_blocks[slot].append(blk)
+        self.tables[slot, len(self.slot_blocks[slot]) - 1] = blk
+        return blk
+
+    def admit(self, slot: int, cache_tree, n_tokens: int, worst_tokens: int
+              ) -> None:
+        """Install a freshly prefilled batch=1 cache into ``slot``.
+
+        ``cache_tree``'s paged leaves must carry ``ceil(n_tokens /
+        block_tokens) * block_tokens`` sequence positions.  Only this
+        slot's blocks and state row are written.
+        """
+        assert not self.slot_blocks[slot], f"slot {slot} already occupied"
+        if worst_tokens > self.view_tokens:
+            raise ValueError(
+                f"request needs {worst_tokens} cache positions, pool view "
+                f"holds {self.view_tokens}")
+        nb0 = self.blocks_for(n_tokens)
+        self._reserved[slot] = self.blocks_for(worst_tokens)
+        blocks = [self._alloc(slot) for _ in range(nb0)]
+        leaves = dict(zip(self.paths, jax.tree.leaves(cache_tree)))
+        t = self.block_tokens
+        for path, m in self.meta.items():
+            if m.batch_ax is None:
+                continue
+            val = jnp.squeeze(leaves[path], axis=m.batch_ax)
+            if m.paged:
+                # (.., V', ..) -> (.., nb0, T, ..) -> pool[.., blocks, T, ..]
+                sa = m.seq_ax - 1  # after squeezing the batch axis
+                shape = val.shape
+                assert shape[sa] >= nb0 * t, (path, shape, nb0, t)
+                val = jax.lax.slice_in_dim(val, 0, nb0 * t, axis=sa)
+                val = val.reshape(shape[:sa] + (nb0, t) + shape[sa + 1:])
+                idx = (slice(None),) * m.batch_ax + (jnp.asarray(blocks),)
+                self.paged[path] = self.paged[path].at[idx].set(
+                    val.astype(self.paged[path].dtype))
+            else:
+                idx = (slice(None),) * m.batch_ax + (slot,)
+                self.state[path] = self.state[path].at[idx].set(
+                    val.astype(self.state[path].dtype))
+        self.lengths[slot] = n_tokens
+
+    def ensure(self, slot: int) -> None:
+        """Grow ``slot`` so the next decode write position is backed by a
+        real block (conservative admission guarantees the free list can
+        serve it)."""
+        if not self.has_paged:
+            return
+        pos = int(self.lengths[slot])  # next write position
+        if pos >= self.view_tokens:
+            raise RuntimeError(f"slot {slot} exceeded pool view ({pos})")
+        while len(self.slot_blocks[slot]) * self.block_tokens <= pos:
+            self._alloc(slot)
+
+    def advance(self, slot: int) -> None:
+        self.lengths[slot] += 1
+
+    def release(self, slot: int) -> None:
+        self.free.extend(self.slot_blocks[slot])
+        self.slot_blocks[slot] = []
+        self.tables[slot, :] = SCRATCH
+        self.lengths[slot] = 0
+        self._reserved[slot] = 0
+
+    # ------------------------------------------------------------------
+    # Invariants (exercised by tests after every admit/step/release)
+    # ------------------------------------------------------------------
+
+    def check_invariants(self) -> None:
+        owned = [b for blocks in self.slot_blocks for b in blocks]
+        assert SCRATCH not in owned, "scratch block was allocated"
+        assert SCRATCH not in self.free, "scratch block on the free list"
+        assert len(set(owned)) == len(owned), "block double-assigned"
+        assert len(set(self.free)) == len(self.free), "free list duplicate"
+        assert not (set(owned) & set(self.free)), "block both free and owned"
+        assert set(owned) | set(self.free) == set(range(1, self.n_blocks)), \
+            "block leaked"
+        for s in range(self.n_slots):
+            blocks = self.slot_blocks[s]
+            assert list(self.tables[s, : len(blocks)]) == blocks
+            assert all(b == SCRATCH for b in self.tables[s, len(blocks):])
+            if blocks:
+                need = self.blocks_for(max(1, int(self.lengths[s])))
+                assert len(blocks) >= need, "slot under-allocated"
+
+    # ------------------------------------------------------------------
+    # The jitted gather -> vmapped decode -> scatter step
+    # ------------------------------------------------------------------
+
+    def build_step(self, decode_fn: Callable) -> Callable:
+        """``decode_fn(params, tokens_1d, cache) -> (logits, cache)`` is the
+        model's unmodified single-step decode; the returned callable runs
+        it once per slot (per-slot lengths) over block-gathered views:
+
+            logits, paged, state, lengths = step(
+                params, tokens, lengths, tables, paged, state)
+
+        ``tokens``: (n_slots,) int32 (audio: (n_slots, K)); ``lengths``:
+        (n_slots,) int32; ``tables``: (n_slots, blocks_per_slot) int32.
+        Inactive lanes run on scratch-backed views and only ever write the
+        scratch block / their own state row.
+        """
+        meta, paths, treedef = self.meta, self.paths, self.treedef
+        t, mb = self.block_tokens, self.blocks_per_slot
+        paged_paths = sorted(self.paged)
+        state_paths = sorted(self.state)
+
+        in_axes: List[int] = []
+        for path in paths:
+            m = meta[path]
+            in_axes.append(0 if m.batch_ax is None else m.batch_ax)
+
+        def step(params, tokens, lengths, tables, paged, state):
+            def one(tok, *leaves):
+                cache_leaves = []
+                for path, leaf in zip(paths, leaves):
+                    m = meta[path]
+                    if m.batch_ax is None:
+                        cache_leaves.append(leaf)  # per-slot scalar length
+                    else:
+                        cache_leaves.append(jnp.expand_dims(leaf, m.batch_ax))
+                cache = jax.tree_util.tree_unflatten(treedef, cache_leaves)
+                logits, cache2 = decode_fn(params, tok[None], cache)
+                flat2, treedef2 = jax.tree_util.tree_flatten(cache2)
+                assert treedef2 == treedef, "decode changed the cache structure"
+                out = []
+                for path, leaf in zip(paths, flat2):
+                    m = meta[path]
+                    out.append(leaf if m.batch_ax is None
+                               else jnp.squeeze(leaf, axis=m.batch_ax))
+                return logits[0], tuple(out)
+
+            gathered = []
+            for path in paths:
+                m = meta[path]
+                if m.batch_ax is None:
+                    gathered.append(lengths)
+                elif m.paged:
+                    ba = m.batch_ax
+                    g = jnp.take(paged[path], tables, axis=ba)
+                    shape = g.shape  # (.., n_slots, mb, T, ..)
+                    gathered.append(
+                        g.reshape(shape[:ba + 1] + (mb * t,) + shape[ba + 3:]))
+                else:
+                    gathered.append(state[path])
+
+            fn = jax.vmap(lambda tok, *ls: one(tok, *ls),
+                          in_axes=(0,) + tuple(in_axes),
+                          out_axes=(0, tuple(in_axes)))
+            logits, new_leaves = fn(tokens, *gathered)
+
+            new_paged, new_state, new_lengths = {}, {}, lengths
+            for path, leaf in zip(paths, new_leaves):
+                m = meta[path]
+                if m.batch_ax is None:
+                    new_lengths = leaf
+                elif m.paged:
+                    ba = m.batch_ax
+                    shape = leaf.shape  # (.., n_slots, V, ..)
+                    val = leaf.reshape(
+                        shape[:ba + 1] + (mb, t) + shape[ba + 2:])
+                    idx = (slice(None),) * ba + (tables,)
+                    new_paged[path] = paged[path].at[idx].set(val)
+                else:
+                    new_state[path] = leaf
+            # keep untouched fragments (e.g. pure-state archs have no paged)
+            for path in paged_paths:
+                new_paged.setdefault(path, paged[path])
+            for path in state_paths:
+                new_state.setdefault(path, state[path])
+            return logits, new_paged, new_state, new_lengths
+
+        jitted = jax.jit(step, donate_argnums=(4, 5))
+
+        def run(params, tokens, lengths, tables):
+            logits, paged, state, new_lengths = jitted(
+                params, jnp.asarray(tokens), jnp.asarray(lengths),
+                jnp.asarray(tables), self.paged, self.state)
+            self.paged, self.state = paged, state
+            return logits, new_lengths
+
+        return run

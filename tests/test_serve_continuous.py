@@ -1,0 +1,254 @@
+"""Continuous-batching serving tests: scheduler + paged KV pool.
+
+The acceptance contract of the serving subsystem:
+
+  * the continuous scheduler is *token-identical* to the static
+    fixed-batch ``generate_static()`` on the same prompts, across all
+    five model families (reference backend), including when requests
+    outnumber slots (queue + per-slot refill) and with quantized KV;
+  * the KV pool never leaks or double-assigns a block across
+    admit/stop/refill cycles (float and quantized KV), and returns to
+    pristine state once drained;
+  * streaming callbacks fire token-by-token and the metrics surface
+    queue wait / TTFT / decode-slot utilisation.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import QuantizeSpec
+from repro.models.registry import get_arch
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.scheduler import synthetic_trace
+
+FAMILY_ARCHS = {
+    "dense": "smollm-135m",
+    "moe": "deepseek-moe-16b",
+    "mla": "minicpm3-4b",
+    "ssm": "xlstm-1.3b",
+    "hybrid": "zamba2-1.2b",
+}
+FAMILIES = sorted(FAMILY_ARCHS)
+
+
+@pytest.fixture(scope="module")
+def models():
+    """{family: (arch, float params)} at reduced scale."""
+    out = {}
+    for family, name in FAMILY_ARCHS.items():
+        arch = get_arch(name, reduced=True)
+        out[family] = (arch, arch.init(jax.random.PRNGKey(0), jnp.float32))
+    return out
+
+
+def _prompts(cfg, b, s, seed=0):
+    rng = np.random.default_rng(seed)
+    if cfg.modality == "audio":
+        return rng.integers(0, cfg.vocab, size=(b, s, cfg.n_codebooks)
+                            ).astype(np.int32)
+    return rng.integers(0, cfg.vocab, size=(b, s)).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Token identity: continuous scheduler == static fixed-batch loop
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_continuous_token_identical_to_static(models, family):
+    """3 requests through 2 slots (queue + refill) produce exactly the
+    tokens the static loop produces with all 3 resident."""
+    arch, params = models[family]
+    prompts = _prompts(arch.config, 3, 8)
+    static = ServeEngine(arch, params, ServeConfig(max_seq=32, batch_slots=3))
+    out_s = static.generate_static(prompts, 5)
+    cont = ServeEngine(arch, params, ServeConfig(max_seq=32, batch_slots=2,
+                                                 block_tokens=8))
+    out_c = cont.generate(prompts, 5)
+    np.testing.assert_array_equal(out_s["tokens"], out_c["tokens"])
+    # the pool is pristine after drain: every block back on the free list
+    cont.pool.check_invariants()
+    assert not any(cont.pool.slot_blocks[s] for s in range(2))
+
+
+@pytest.mark.parametrize("family", ["dense", "mla", "hybrid"])
+def test_continuous_token_identical_quantized_kv(models, family):
+    """Same contract through the quantized-KV path: packed int8 KV blocks
+    in the pool, dequantized at attention time."""
+    arch, params = models[family]
+    spec = QuantizeSpec(kv_bits=4)
+    prompts = _prompts(arch.config, 3, 8)
+    out_s = ServeEngine(arch, params, ServeConfig(max_seq=32, batch_slots=3),
+                        spec).generate_static(prompts, 4)
+    out_c = ServeEngine(arch, params, ServeConfig(max_seq=32, batch_slots=2,
+                                                  block_tokens=8),
+                        spec).generate(prompts, 4)
+    np.testing.assert_array_equal(out_s["tokens"], out_c["tokens"])
+
+
+def test_mixed_prompt_lengths_match_per_request_static(models):
+    """Continuous admission prefilled at exact per-request prompt lengths:
+    each request's tokens equal a dedicated static run of that prompt."""
+    arch, params = models["dense"]
+    cfg = arch.config
+    lens = [5, 9, 12]
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab, size=(s,)).astype(np.int32)
+               for s in lens]
+    eng = ServeEngine(arch, params, ServeConfig(max_seq=32, batch_slots=2,
+                                                block_tokens=8))
+    reqs = [eng.submit(p, 4) for p in prompts]
+    eng.drain()
+    oracle = ServeEngine(arch, params, ServeConfig(max_seq=32, batch_slots=1))
+    for p, r in zip(prompts, reqs):
+        out = oracle.generate_static(p[None], 4)
+        np.testing.assert_array_equal(out["tokens"][0], r.token_array())
+
+
+@pytest.mark.parametrize("name", ["musicgen-medium", "internvl2-2b"])
+def test_modalities_generate_matches_static(name):
+    """The generate() wrapper keeps the audio / vlm contracts."""
+    arch = get_arch(name, reduced=True)
+    cfg = arch.config
+    params = arch.init(jax.random.PRNGKey(0), jnp.float32)
+    prompts = _prompts(cfg, 2, 6)
+    pe = None
+    if cfg.modality == "vlm":
+        pe = (np.random.default_rng(0)
+              .normal(size=(2, cfg.n_patches, cfg.d_model))
+              .astype(np.float32) * 0.02)
+    out_s = ServeEngine(arch, params, ServeConfig(max_seq=48, batch_slots=2)
+                        ).generate_static(prompts, 3, patch_embeds=pe)
+    out_c = ServeEngine(arch, params, ServeConfig(max_seq=48, batch_slots=2,
+                                                  block_tokens=8)
+                        ).generate(prompts, 3, patch_embeds=pe)
+    np.testing.assert_array_equal(out_s["tokens"], out_c["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# Pool invariants across admit / stop / refill
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kv_bits", [16, 4])
+def test_pool_invariants_over_oversubscribed_trace(models, kv_bits):
+    """Mixed-length trace through an *undersized* pool (admission must
+    defer): after every tick no block is leaked, double-assigned, or both
+    free and owned; the drained pool is pristine."""
+    arch, params = models["dense"]
+    spec = QuantizeSpec(kv_bits=kv_bits)
+    eng = ServeEngine(arch, params,
+                      ServeConfig(max_seq=32, batch_slots=2, block_tokens=8,
+                                  pool_blocks=7),  # < full provisioning (9)
+                      spec)
+    trace = synthetic_trace(arch.config, 6, seed=2, prompt_len=6,
+                            prompt_jitter=4, max_new_low=2, max_new_high=8)
+    for r in trace:
+        eng.scheduler.submit(r)
+        eng.pool.check_invariants()
+    waited = False
+    while eng.scheduler.queue or eng.scheduler.n_active:
+        free_before = len(eng.pool.free)
+        eng.step()
+        eng.pool.check_invariants()
+        waited |= bool(eng.scheduler.queue) and free_before > 0
+    assert all(len(r.tokens) == r.max_new_tokens for r in trace)
+    assert len(eng.pool.free) == eng.pool.capacity_blocks  # all returned
+    assert not any(eng.pool.slot_blocks)
+    assert waited, "trace never exercised deferred admission"
+
+
+def test_pool_release_and_reuse_is_exact(models):
+    """A refilled slot reuses blocks a finished request returned; its
+    tokens are unaffected by the stale content (masked by length)."""
+    arch, params = models["dense"]
+    cfg = arch.config
+    eng = ServeEngine(arch, params, ServeConfig(max_seq=32, batch_slots=1,
+                                                block_tokens=8))
+    p1, p2 = _prompts(cfg, 2, 8, seed=3)
+    r1 = eng.submit(p1, 6)
+    eng.drain()
+    r2 = eng.submit(p2, 6)  # refills slot 0 with r1's returned blocks
+    eng.drain()
+    oracle = ServeEngine(arch, params, ServeConfig(max_seq=32, batch_slots=1))
+    np.testing.assert_array_equal(
+        oracle.generate_static(p2[None], 6)["tokens"][0], r2.token_array())
+    assert r1.rid != r2.rid
+
+
+# ---------------------------------------------------------------------------
+# Streaming + metrics + validation
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_callbacks_and_metrics(models):
+    arch, params = models["dense"]
+    cfg = arch.config
+    eng = ServeEngine(arch, params, ServeConfig(max_seq=32, batch_slots=2,
+                                                block_tokens=8))
+    seen = []
+
+    def cb(req, tok, done):
+        seen.append((req.rid, int(np.asarray(tok)), done))
+
+    prompts = _prompts(cfg, 3, 8)
+    reqs = [eng.submit(prompts[i], 3, on_token=cb) for i in range(3)]
+    eng.drain()
+    for r in reqs:
+        mine = [(rid, t, d) for rid, t, d in seen if rid == r.rid]
+        assert [m[1] for m in mine] == [int(x) for x in r.token_array()]
+        assert [m[2] for m in mine] == [False, False, True]
+
+    m = eng.scheduler.metrics()
+    agg = m["aggregate"]
+    assert agg["n_requests"] == 3
+    assert agg["tokens_generated"] == 9
+    assert 0 < agg["slot_utilisation"] <= 1
+    assert agg["busy_slot_steps"] <= agg["decode_steps"] * 2
+    for r in m["requests"]:
+        assert r["queue_wait_s"] >= 0
+        assert r["ttft_s"] >= r["queue_wait_s"]
+        assert r["new_tokens"] == 3
+
+
+def test_stop_token_ends_request_early(models):
+    arch, params = models["dense"]
+    cfg = arch.config
+    eng = ServeEngine(arch, params, ServeConfig(max_seq=32, batch_slots=1,
+                                                block_tokens=8))
+    prompt = _prompts(cfg, 1, 8)[0]
+    ref = eng.submit(prompt, 6)
+    eng.drain()
+    stop = int(ref.token_array()[1])  # stop on the 2nd greedy token
+    eng2 = ServeEngine(arch, params, ServeConfig(max_seq=32, batch_slots=1,
+                                                 block_tokens=8))
+    r = eng2.submit(prompt, 6, stop_token=stop)
+    eng2.drain()
+    assert len(r.tokens) == 2
+    assert int(r.token_array()[-1]) == stop
+    eng2.pool.check_invariants()
+
+
+def test_continuous_under_mesh_matches_unmeshed(models):
+    """The pool's block storage is placed by ``dist.sharding.pool_pspecs``
+    under a mesh; a 1-device mesh must be a behavioural no-op."""
+    arch, params = models["dense"]
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    prompts = _prompts(arch.config, 2, 8)
+    scfg = ServeConfig(max_seq=32, batch_slots=2, block_tokens=8)
+    out_m = ServeEngine(arch, params, scfg, mesh=mesh).generate(prompts, 4)
+    out_0 = ServeEngine(arch, params, scfg).generate(prompts, 4)
+    np.testing.assert_array_equal(out_m["tokens"], out_0["tokens"])
+
+
+def test_submit_validation(models):
+    arch, params = models["dense"]
+    cfg = arch.config
+    eng = ServeEngine(arch, params, ServeConfig(max_seq=16, batch_slots=1,
+                                                block_tokens=8))
+    with pytest.raises(ValueError, match="cache positions"):
+        eng.submit(_prompts(cfg, 1, 14)[0], 8)  # 14 + 7 > 16-token view
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit(_prompts(cfg, 1, 4)[0], 0)
