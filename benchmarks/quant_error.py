@@ -8,6 +8,12 @@ at W2/W3/W4 grouped, and measure relative MSE per rotation kind.
 
 Expected (paper): err(GSR) <= err(LH) <= err(GW) <= err(GH) on
 structured/outlier weights; all rotations >> identity on outliers.
+
+``--policy <name|all>`` sweeps shipped :mod:`repro.quant.policy`
+presets instead: each preset's R1 plan (constructed, or SpinQuant-lite
+learned + composed) is materialised and every distinct precision rule is
+measured against the same weight suite — the nightly record that keeps
+the preset recipes honest as they evolve.
 """
 from __future__ import annotations
 
@@ -18,7 +24,7 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from repro.core.rotation import make_rotation
+from repro.core.rotation import Rotation, RotationKind, make_rotation
 from repro.quant.qtypes import QuantConfig
 from repro.quant.rtn import fake_quant_weight
 
@@ -84,7 +90,86 @@ def run(quiet: bool = False):
     return rows
 
 
+def _policy_r1(policy, dim: int) -> np.ndarray:
+    """Materialise a policy's R1 as a dense (dim, dim) matrix.
+
+    Learned sources optimize SpinQuant-lite directly on the synthetic
+    weight suite (few steps — this is a benchmark, not a deployment) and
+    compose the constructed post-rotation exactly like the pipeline.
+    """
+    from repro.quant.pipeline import fit_group
+    from repro.quant.spinquant import optimize_rotation
+
+    r1s = policy.rotation.r1
+    if r1s.source == "learn":
+        init = make_rotation(r1s.kind, dim, group=fit_group(dim, r1s.group),
+                             seed=r1s.seed).dense()
+        front = [jnp.asarray(make_weights("structured", s)) for s in range(2)]
+        rule = policy.rules[0]
+        proxy = QuantConfig(bits=rule.bits, group=fit_group(dim, rule.group),
+                            symmetric=rule.symmetric)
+        base = optimize_rotation(init, front, [], proxy,
+                                 steps=min(r1s.learn_steps, 30)).rotation
+    else:
+        base = r1s.base_matrix(dim)
+        base = np.eye(dim) if base is None else base
+    post = r1s.compose_matrix(dim)
+    return base if post is None else base @ post
+
+
+def run_policies(names, quiet: bool = False):
+    """Weight-quant error of every distinct rule of each policy preset."""
+    from repro.quant.policy import PRESETS, get_policy
+
+    rows = []
+    for name in (sorted(PRESETS) if names == "all" else names.split(",")):
+        policy = get_policy(name)
+        r1 = _policy_r1(policy, DIM)
+        rot = Rotation(kind=RotationKind.GLOBAL_HADAMARD, dim=DIM, matrix=r1)
+        for ri, rule in enumerate(policy.rules):
+            cfg = rule.weight_cfg(DIM)
+            for wkind in ("gaussian", "outlier", "structured"):
+                errs = []
+                errs_id = []
+                for s in range(3):
+                    w = make_weights(wkind, s)
+                    wr = rot.inverse_dense().astype(np.float32) @ w
+                    dq = np.asarray(fake_quant_weight(jnp.asarray(wr), cfg))
+                    errs.append(((dq - wr) ** 2).sum() / (wr ** 2).sum())
+                    dqi = np.asarray(fake_quant_weight(jnp.asarray(w), cfg))
+                    errs_id.append(((dqi - w) ** 2).sum() / (w ** 2).sum())
+                rows.append({
+                    "policy": name, "rule": ri, "pattern": rule.pattern,
+                    "bits": rule.bits, "group": cfg.group,
+                    "weights": wkind,
+                    "rel_mse": float(np.mean(errs)),
+                    "rel_mse_identity": float(np.mean(errs_id)),
+                })
+                if not quiet:
+                    r = rows[-1]
+                    print(f"{name:20s} rule{ri} ({rule.pattern:8s} W{rule.bits}) "
+                          f"{wkind:10s}: {r['rel_mse']:.5f} "
+                          f"(identity {r['rel_mse_identity']:.5f})")
+    os.makedirs("results", exist_ok=True)
+    with open("results/quant_error_policy.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
 def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policy", default=None,
+                    help="sweep policy presets ('all' or comma-separated "
+                         "names) instead of the rotation-kind grid")
+    args = ap.parse_args()
+    if args.policy:
+        for r in run_policies(args.policy, quiet=True):
+            print(f"quant_error_policy/{r['policy']}/rule{r['rule']}/"
+                  f"{r['weights']},0,W{r['bits']}={r['rel_mse']:.5f};"
+                  f"I={r['rel_mse_identity']:.5f}")
+        return
     for r in run():
         vals = ";".join(f"{k}={r[k]:.5f}" for k in KINDS)
         print(f"quant_error/{r['weights']}/W{r['bits']},0,{vals}")

@@ -1,17 +1,34 @@
-"""End-to-end driver: train, PTQ once into an artifact, re-serve it.
+"""End-to-end driver: train, PTQ under declarative policies, re-serve.
 
     PYTHONPATH=src python examples/quantize_pipeline.py [--steps 300]
 
 1. trains smollm-135m (reduced widths for CPU; pass --full for the real
    config if you have the compute) for a few hundred steps with the
    fault-tolerant Trainer (checkpoints + resume);
-2. PTQs the result through the front door (``repro.api.quantize``) with
-   the paper's full recipe (GSR R1, GPTQ weights, MSE clipping, grouped
-   W4A8) and the GH baseline, comparing held-out perplexity of the packed
-   models;
-3. saves the GSR artifact, loads it back (bit-exact, no re-quantization),
-   and serves greedy generations from the *loaded* copy - the deploy
-   path: quantize once, save, re-serve forever.
+2. PTQs the result through the policy front door (``repro.api``):
+   the flat-config baseline (``PTQConfig`` — lowers to a single-rule
+   policy), the mixed-precision ``w2-sensitive-fp4`` preset (W2
+   everywhere, sensitive down projections at W4 with a per-site GSR
+   online rotation), and the composed-rotation ``gsr-over-spinquant``
+   recipe (SpinQuant-lite learned R1 with a GSR post-rotation — the
+   paper's "GSR over optimization-based methods" experiment), comparing
+   held-out perplexity of the packed models;
+3. saves the mixed-precision artifact (its resolved policy rides the
+   manifest), loads it back (bit-exact, no re-quantization), and serves
+   greedy generations from the *loaded* copy - the deploy path:
+   quantize once, save, re-serve forever.
+
+Custom recipes are plain data — e.g. GSR rotation with GPTQ attention
+but cheap RTN experts, W2 except the first layer:
+
+    policy = api.QuantPolicy(
+        rules=(api.SiteRule(pattern="*", layers=(0, 0), bits=4, group=32),
+               api.SiteRule(pattern="w[qkv]", bits=2, group=32,
+                            method="gptq"),
+               api.SiteRule(pattern="*", bits=2, group=32)),
+        rotation=api.RotationPlan(r1=api.RotationSpec(kind="GSR", group=32)),
+    )
+    qm = api.quantize(arch, params, policy)
 """
 import argparse
 
@@ -61,25 +78,38 @@ def main():
     out = trainer.run(batches())
     params = out["state"]["params"]
 
-    print("[2/3] PTQ via repro.api: GSR vs GH (W4A8, GPTQ, MSE clip, group 32)")
+    print("[2/3] PTQ under three policies (flat W4A8 GPTQ baseline, "
+          "mixed-precision, composed rotation)")
     ev = jax.jit(make_eval_step(arch, NOQUANT))
     held = {"tokens": jnp.asarray(data.batch(10_000, 0, 16))}
     base_nll = float(ev(params, held)["nll"])
-    print(f"  fp16      ppl = {np.exp(base_nll):9.3f}")
+    print(f"  fp16                     ppl = {np.exp(base_nll):9.3f}")
+
+    recipes = {
+        # the flat config is still one line - and is itself a policy
+        "gsr-w4a8-gptq": api.PTQConfig(r1_kind="GSR", wakv="W4A8",
+                                       method="gptq", group=32, n_calib=4,
+                                       calib_seq=args.seq),
+        # W2 everywhere except the sensitive down projections at W4
+        # (per-site GSR online rotation) - unreachable from a flat config
+        "w2-sensitive-fp4": api.get_policy("w2-sensitive-fp4"),
+        # SpinQuant-lite learned R1 composed with a GSR post-rotation
+        "gsr-over-spinquant": api.get_policy("gsr-over-spinquant"),
+    }
     artifacts = {}
-    for kind in ("GH", "GSR"):
-        ptq = api.PTQConfig(r1_kind=kind, wakv="W4A8", method="gptq", group=32,
-                            n_calib=4, calib_seq=args.seq)
-        qm = api.quantize(arch, params, ptq)
+    for name, recipe in recipes.items():
+        qm = api.quantize(arch, params, recipe)
         evq = jax.jit(make_eval_step(arch, qm.spec))
         nll = float(evq(qm.params, held)["nll"])  # packed execution
-        artifacts[kind] = qm
-        print(f"  {kind:4s} W4A8 ppl = {np.exp(nll):9.3f} "
+        artifacts[name] = qm
+        print(f"  {name:24s} ppl = {np.exp(nll):9.3f} "
               f"({qm.packed_bytes()/2**20:.2f} MiB packed)")
 
-    print(f"[3/3] save -> load -> serve the GSR artifact ({args.artifact_dir})")
-    artifacts["GSR"].save(args.artifact_dir)
+    print(f"[3/3] save -> load -> serve the mixed-precision artifact "
+          f"({args.artifact_dir})")
+    artifacts["w2-sensitive-fp4"].save(args.artifact_dir)
     loaded = api.load_quantized(args.artifact_dir)
+    print(f"  loaded: {loaded.policy.describe()}")
     eng = loaded.serve(
         api.ServeConfig(max_seq=args.seq + 24, batch_slots=4),
         backend=args.backend,

@@ -13,6 +13,16 @@ call each way:
     engine = qm.serve(api.ServeConfig(), backend="pallas")
     engine.generate(prompts, max_new_tokens=32)
 
+``quantize`` also takes a declarative per-site
+:class:`~repro.quant.policy.QuantPolicy` (or a preset name such as
+``"w2-sensitive-fp4"``): ordered ``site glob x layer range`` rules give
+every matmul site its own (bits, group, method, online rotation) and the
+rotation plan its R1 source (constructed / SpinQuant-learned / loaded,
+optionally composed with a GSR post-rotation).  The flat ``PTQConfig``
+lowers to a single-rule policy, and the resolved policy is serialized
+into the artifact manifest, so mixed-precision models round-trip
+bit-exactly.
+
 A :class:`QuantizedModel` is a first-class pytree artifact: *packed*
 integer weights (``quant.packed.PackedWeight`` leaves: uint8 codes +
 grouped scale/zero) for every quantized matrix of all five model
@@ -40,15 +50,19 @@ from repro.configs.base import ModelConfig
 from repro.models.common import QuantizeSpec
 from repro.quant import packed as packedmod
 from repro.quant.packed import PackedWeight
-from repro.quant.pipeline import PTQConfig, quantize_packed
+from repro.quant.pipeline import PTQConfig, normalize_policy, quantize_packed
+from repro.quant.policy import (
+    PRESETS, QuantPolicy, RotationPlan, RotationSpec, SiteRule, get_policy,
+)
 from repro.serve.engine import ServeConfig, ServeEngine
 
 __all__ = [
-    "PTQConfig", "QuantizeSpec", "QuantizedModel", "ServeConfig",
+    "PRESETS", "PTQConfig", "QuantPolicy", "QuantizeSpec", "QuantizedModel",
+    "RotationPlan", "RotationSpec", "ServeConfig", "SiteRule", "get_policy",
     "load_quantized", "quantize",
 ]
 
-_FORMAT_VERSION = 1
+_FORMAT_VERSION = 2  # 2: manifest carries the resolved QuantPolicy
 
 
 # ---------------------------------------------------------------------------
@@ -58,12 +72,24 @@ _FORMAT_VERSION = 1
 
 @dataclasses.dataclass
 class QuantizedModel:
-    """Packed quantized model + everything needed to re-serve it."""
+    """Packed quantized model + everything needed to re-serve it.
+
+    ``policy`` is the canonical provenance (the resolved
+    :class:`~repro.quant.policy.QuantPolicy` every quantization now runs
+    through); ``ptq`` is kept when the model was quantized via the flat
+    :class:`PTQConfig` front door, so old call sites and old artifacts
+    keep their exact shape.
+    """
 
     arch: Any  # repro.models.registry.Arch
     params: Dict  # pytree: PackedWeight leaves for quantized weights
-    ptq: PTQConfig
+    ptq: Optional[PTQConfig]
     spec: QuantizeSpec
+    policy: Optional[QuantPolicy] = None
+
+    def __post_init__(self):
+        if self.policy is None and self.ptq is not None:
+            self.policy = self.ptq.to_policy()
 
     # -- views -----------------------------------------------------------
     @property
@@ -74,11 +100,16 @@ class QuantizedModel:
     def rotation(self) -> Dict:
         """Fused-rotation provenance (R1 is already folded into weights;
         R4/R3 remain online via ``spec``)."""
+        r1 = self.policy.rotation.r1
+        kind = {"construct": r1.kind, "identity": "I", "learn": r1.kind,
+                "load": "loaded"}[r1.source]
+        if r1.compose:
+            kind = f"{kind}+{r1.compose}"
         return {
-            "r1_kind": self.ptq.r1_kind, "r1_seed": self.ptq.seed,
-            "r1_group": self.ptq.group, "r4_kind": self.spec.r4_kind,
+            "r1_kind": kind, "r1_seed": r1.seed, "r1_group": r1.group,
+            "r1_source": r1.source, "r4_kind": self.spec.r4_kind,
             "r4_group": self.spec.r4_group, "r4_seed": self.spec.r4_seed,
-            "learned": self.ptq.learned,
+            "learned": (r1.learn if r1.source == "learn" else "none"),
         }
 
     def dequantize(self, dtype: Any = None) -> Dict:
@@ -133,10 +164,12 @@ class QuantizedModel:
             "kind": "quantized-model",
             "format": _FORMAT_VERSION,
             "config": dataclasses.asdict(self.config),
-            "ptq": dataclasses.asdict(self.ptq),
+            "policy": self.policy.to_json_dict(),
             "packed": packed_meta,
             "dtypes": dtypes,
         }
+        if self.ptq is not None:
+            meta["ptq"] = dataclasses.asdict(self.ptq)
         tree = plain(self.params)
         if shards <= 1:
             return ckpt.save_checkpoint(directory, 0, tree, metadata=meta)
@@ -194,9 +227,13 @@ class QuantizedModel:
 
         params = rebuild(tree)
         cfg = ModelConfig(**man["config"])
-        ptq = PTQConfig(**man["ptq"])
+        ptq = PTQConfig(**man["ptq"]) if "ptq" in man else None
+        if "policy" in man:  # format >= 2: the policy is canonical
+            policy = QuantPolicy.from_json_dict(man["policy"])
+        else:  # format-1 artifact: reconstruct from the flat config
+            policy = ptq.to_policy()
         return cls(arch=build_arch(cfg), params=params, ptq=ptq,
-                   spec=ptq.spec())
+                   spec=policy.spec(), policy=policy)
 
 
 def _partition_leaves(tree: Dict, shards: int) -> list:
@@ -228,16 +265,22 @@ def _partition_leaves(tree: Dict, shards: int) -> list:
 # ---------------------------------------------------------------------------
 
 
-def quantize(arch, params: Dict, ptq: PTQConfig,
+def quantize(arch, params: Dict, ptq,
              calib_batches: Optional[Iterator] = None) -> QuantizedModel:
     """Rotate + quantize ``params`` into a packed :class:`QuantizedModel`.
 
-    The single entry covering all five families: GSR/GH/GW/LH R1 fusion,
-    GPTQ (dense) or RTN weights, grouped packing - exactly the
-    ``quant.pipeline`` recipe, kept as packed integers.
+    ``ptq`` is a flat :class:`PTQConfig`, a declarative
+    :class:`QuantPolicy`, or a policy name/JSON accepted by
+    :func:`repro.quant.policy.get_policy` (e.g. ``"w2-sensitive-fp4"``).
+    The single entry covering all five families: R1/R2 fusion from the
+    rotation plan, per-site GPTQ (dense) or RTN weights at per-site
+    bits/groups, grouped packing - kept as packed integers.
     """
-    qparams, spec = quantize_packed(arch, params, ptq, calib_batches)
-    return QuantizedModel(arch=arch, params=qparams, ptq=ptq, spec=spec)
+    policy = normalize_policy(ptq)
+    qparams, spec = quantize_packed(arch, params, policy, calib_batches)
+    return QuantizedModel(arch=arch, params=qparams,
+                          ptq=ptq if isinstance(ptq, PTQConfig) else None,
+                          spec=spec, policy=policy)
 
 
 def load_quantized(directory: str, *, backend: str = "reference"

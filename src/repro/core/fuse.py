@@ -85,6 +85,7 @@ def _fuse_attn_std(cfg: ModelConfig, lp: Dict, r1: np.ndarray,
 
 def _fuse_mlp_dense(lp: Dict, r1: np.ndarray, r4: Optional[np.ndarray],
                     keys=("w_gate", "w_up", "w_down")) -> Dict:
+    """r4 must be the rotation ``apply_r4`` uses at the matching site."""
     lp = dict(lp)
     g, u, dn = keys
     for k in (g, u):
@@ -131,10 +132,15 @@ def _fuse_mla(cfg: ModelConfig, lp: Dict, r1: np.ndarray) -> Dict:
     return lp
 
 
-def _r4_for(spec: QuantizeSpec, dim: int) -> Optional[np.ndarray]:
-    if spec.r4_kind == "I":
+def _r4_for(spec: QuantizeSpec, dim: int, site: str = "w_down"
+            ) -> Optional[np.ndarray]:
+    """Dense R4 pre-rotation matrix for ``site`` — the same per-site
+    lookup ``apply_r4`` does online, so fusion and inference cancel
+    exactly even when a policy assigns different rotations per site."""
+    kind, group, seed = spec.r4_for(site)
+    if kind == "I":
         return None
-    rot = _r4_blocks(spec.r4_kind, dim, spec.r4_group, spec.r4_seed)
+    rot = _r4_blocks(kind, dim, group, seed)
     return rot.dense()
 
 
@@ -201,7 +207,8 @@ def _fuse_transformer(cfg, p, r1m, r2m, spec):
         moe["mlp_norm"] = attn_keys["mlp_norm"][:, cfg.moe_every - 1]
         de = cfg.d_expert or cfg.d_ff
         moe = _fuse_moe(cfg, moe, r1m, _r4_for(spec, de),
-                        _r4_for(spec, de * max(cfg.n_shared_experts, 1)))
+                        _r4_for(spec, de * max(cfg.n_shared_experts, 1),
+                                "shared_down"))
         # reassemble the folded norms back into the stacked layout
         mlp_norm = jnp.concatenate(
             [dense.pop("mlp_norm"), moe.pop("mlp_norm")[:, None]], axis=1
@@ -213,7 +220,8 @@ def _fuse_transformer(cfg, p, r1m, r2m, spec):
         if cfg.family == "moe":
             de = cfg.d_expert or cfg.d_ff
             layers = _fuse_moe(cfg, layers, r1m, _r4_for(spec, de),
-                               _r4_for(spec, de * max(cfg.n_shared_experts, 1)))
+                               _r4_for(spec, de * max(cfg.n_shared_experts, 1),
+                                       "shared_down"))
         else:
             r4 = _r4_for(spec, cfg.d_ff)
             layers = _fuse_mlp_dense(layers, r1m, r4)

@@ -93,7 +93,7 @@ def expert_ffn_ep(
         h = jax.nn.silu(jnp.einsum("becd,edf->becf", xl, wg)) * jnp.einsum(
             "becd,edf->becf", xl, wu
         )
-        h = apply_r4(h, spec)
+        h = apply_r4(h, spec, "w_down")
         h = act_q(h, spec)
         yl = jnp.einsum("becf,efd->becd", h, wd)
         return all_to_all_combine(yl, expert_axis)

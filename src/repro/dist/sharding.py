@@ -21,9 +21,12 @@ inherit their source weight's spec verbatim: :func:`param_pspecs` derives
 the rule from the *logical* ``(..., C, H)`` shape and mirrors it onto the
 codes ``(..., C/pb, H)`` and grouped scale/zero ``(..., C/g, H)``
 children, so ``model`` stays on the output axis H and codes and scales
-always co-shard with the weight they dequantize into.  Per-child
-divisibility (C/pb vs C/g) is settled by :func:`sanitize_pspecs` like any
-other leaf.
+always co-shard with the weight they dequantize into.  Because the rule
+is keyed on the logical shape alone, *heterogeneous* packed trees — a
+per-site ``QuantPolicy`` mixing bits and group sizes across leaves (or
+across layers inside one leaf) — co-shard exactly like uniform ones;
+per-child divisibility (C/pb vs C/g, whatever g each leaf ended up with)
+is settled by :func:`sanitize_pspecs` like any other leaf.
 
 Every intent spec must pass :func:`sanitize_pspecs` against a concrete
 mesh before use — that is the single place axis divisibility is decided

@@ -88,7 +88,56 @@ def _auto_microbatches(cfg, shape, dp_total: int, budget: int = 2 << 30) -> int:
     return mb
 
 
+def pick_moe_ep_default(moe_ep: Dict) -> str:
+    """Data-driven default for the MoE expert-FFN schedule in one cell.
+
+    The explicit shard_map EP path becomes the default exactly where the
+    recorded per-layer HLO collective bytes show it beating the GSPMD
+    einsum schedule; cells where it is infeasible (recorded as an error)
+    or not cheaper keep the gspmd path (closes the ROADMAP open item —
+    the measurement half landed with the ``moe_ep`` records).
+    """
+    exp = moe_ep.get("explicit_ep", {})
+    gsp = moe_ep.get("gspmd_einsum", {})
+    if "wire_bytes_per_layer" not in exp or "wire_bytes_per_layer" not in gsp:
+        return "gspmd"
+    return ("explicit"
+            if exp["wire_bytes_per_layer"] < gsp["wire_bytes_per_layer"]
+            else "gspmd")
+
+
 def lower_cell(
+    arch_name: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    **kw,
+) -> Dict:
+    """Lower + compile one cell; returns the record dict.
+
+    MoE cells first record the explicit-EP vs GSPMD collective-byte
+    comparison (``moe_ep``) and then lower with whichever expert-FFN
+    schedule the measurement favours (``moe_ep.default_path``)."""
+    from repro.models import moe as moe_mod
+
+    cfg = get_arch(arch_name).config
+    moe_ep = None
+    impl = "gspmd"
+    if cfg.family == "moe":
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        shape = SHAPES[shape_name]
+        try:
+            moe_ep = moe_ep_collectives(cfg, mesh, shape)
+        except Exception as e:  # noqa: BLE001 - keep the cell record alive
+            moe_ep = {"error": repr(e)}
+        impl = pick_moe_ep_default(moe_ep)
+        moe_ep["default_path"] = impl
+    with moe_mod.moe_ep_impl(impl):
+        return _lower_cell(arch_name, shape_name, multi_pod=multi_pod,
+                           moe_ep=moe_ep, **kw)
+
+
+def _lower_cell(
     arch_name: str,
     shape_name: str,
     *,
@@ -99,8 +148,8 @@ def lower_cell(
     fsdp: Optional[bool] = None,
     fsdp_scope: str = "auto",
     seq_shard: bool = False,
+    moe_ep: Optional[Dict] = None,
 ) -> Dict:
-    """Lower + compile one cell; returns the record dict."""
     arch = get_arch(arch_name)
     cfg = arch.config
     shape = SHAPES[shape_name]
@@ -120,15 +169,8 @@ def lower_cell(
         "wbits": wbits,
         "kvbits": kvbits,
     }
-
-    if cfg.family == "moe":
-        # ROADMAP open item (measurement half): per-layer collective bytes
-        # of the explicit shard_map EP expert path vs the GSPMD einsum
-        # schedule, so flipping the default is a data-driven decision.
-        try:
-            rec["moe_ep"] = moe_ep_collectives(cfg, mesh, shape)
-        except Exception as e:  # noqa: BLE001 - keep the cell record alive
-            rec["moe_ep"] = {"error": repr(e)}
+    if moe_ep is not None:
+        rec["moe_ep"] = moe_ep
 
     t0 = time.time()
     params_sds = arch.param_specs(dtype=jnp.bfloat16)

@@ -196,7 +196,7 @@ def main():
                    if is_packed(l))
     print(f"[quant_serve] loaded {cfg.name}: {n_packed} packed weight stacks, "
           f"{qm.packed_bytes()/2**20:.2f} MiB packed "
-          f"(R1={qm.rotation['r1_kind']}, {qm.ptq.wakv} via {qm.ptq.method})")
+          f"({qm.policy.describe()})")
 
     eng = qm.serve(api.ServeConfig(max_seq=args.max_seq,
                                    batch_slots=args.prompts,

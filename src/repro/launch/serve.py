@@ -37,6 +37,12 @@ def main():
                     help="persist the quantized model to this dir")
     ap.add_argument("--backend", default="reference",
                     choices=("reference", "pallas"))
+    ap.add_argument("--policy", default=None,
+                    help="quantize under a declarative QuantPolicy: a "
+                         "preset name (paper-table1 | w2-sensitive-fp4 | "
+                         "gsr-over-spinquant), a JSON object, or a path "
+                         "to a policy JSON; overrides --r1/--wakv/"
+                         "--method/--group")
     ap.add_argument("--r1", default="GSR", choices=("I", "GH", "GW", "LH", "GSR"))
     ap.add_argument("--wakv", default="W4A16")
     ap.add_argument("--method", default="rtn", choices=("rtn", "gptq"))
@@ -57,7 +63,7 @@ def main():
     if args.artifact:
         qm = api.load_quantized(args.artifact, backend=args.backend)
         print(f"[serve] loaded artifact {args.artifact}: {qm.config.name} "
-              f"(R1={qm.rotation['r1_kind']}, {qm.ptq.wakv} via {qm.ptq.method}, "
+              f"({qm.policy.describe()}, "
               f"{qm.packed_bytes()/2**20:.2f} MiB packed)")
         if args.save_artifact:  # re-export the loaded copy
             path = qm.save(args.save_artifact)
@@ -71,10 +77,13 @@ def main():
             params = restored["params"]
             print(f"[serve] restored weights from step {step}")
 
-        ptq = api.PTQConfig(r1_kind=args.r1, wakv=args.wakv, method=args.method,
-                            group=args.group)
+        if args.policy:
+            ptq = api.get_policy(args.policy)
+        else:
+            ptq = api.PTQConfig(r1_kind=args.r1, wakv=args.wakv,
+                                method=args.method, group=args.group)
         qm = api.quantize(arch, params, ptq)
-        print(f"[serve] PTQ done: R1={args.r1} {args.wakv} via {args.method} "
+        print(f"[serve] PTQ done: {qm.policy.describe()} "
               f"({qm.packed_bytes()/2**20:.2f} MiB packed)")
         if args.save_artifact:
             path = qm.save(args.save_artifact)

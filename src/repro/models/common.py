@@ -75,6 +75,15 @@ class QuantizeSpec:
     this spec controls what runs inside the forward pass: activation
     fake-quant in front of each GEMM (Ay), the online R4 rotation before
     down_proj, the online R3 rotation after RoPE, and KV-cache quant.
+
+    ``r4_sites`` carries *per-site* online rotation overrides from a
+    :class:`repro.quant.policy.QuantPolicy`: a tuple of
+    ``(site glob, kind, group, seed)`` entries matched first-wins against
+    the site name each ``apply_r4`` call passes (``w_down``,
+    ``shared_down``, ...); sites with no match fall back to ``r4_kind``.
+    The offline fusion (:mod:`repro.core.fuse`) consults the same table,
+    so the weight pre-rotation and the online activation rotation always
+    cancel site-for-site.
     """
 
     act_bits: int = 16
@@ -86,10 +95,28 @@ class QuantizeSpec:
     r3: bool = False
     kv_bits: int = 16
     use_kernels: bool = False
+    r4_sites: Tuple[Tuple[str, str, int, int], ...] = ()
 
     @property
     def act_enabled(self) -> bool:
         return self.act_bits < 16
+
+    def r4_for(self, site: str) -> Tuple[str, int, int]:
+        """(kind, group, seed) of the online R4 rotation at ``site``.
+
+        ``apply_r4`` call sites pass *bare* site names (``w_down``,
+        ``shared_down``) — the layer body cannot know its qualified tree
+        path — so a slash-qualified rule pattern falls back to matching
+        by its last path component (``moe_mlp/w_down`` applies at
+        ``w_down``); overlaps resolve first-match-wins like every rule.
+        """
+        import fnmatch
+
+        for pattern, kind, group, seed in self.r4_sites:
+            if (fnmatch.fnmatchcase(site, pattern)
+                    or fnmatch.fnmatchcase(site, pattern.rsplit("/", 1)[-1])):
+                return kind, group, seed
+        return self.r4_kind, self.r4_group, self.r4_seed
 
 
 NOQUANT = QuantizeSpec()
@@ -138,11 +165,16 @@ def _r4_blocks(kind: str, dim: int, group: int, seed: int):
     return make_rotation(kind, dim, group=g, seed=seed)
 
 
-def apply_r4(x: jax.Array, spec: QuantizeSpec) -> jax.Array:
-    """Online rotation of the down_proj input (QuaRot's R4 position)."""
-    if spec.r4_kind == "I":
+def apply_r4(x: jax.Array, spec: QuantizeSpec, site: str = "w_down") -> jax.Array:
+    """Online rotation of the down_proj input (QuaRot's R4 position).
+
+    ``site`` selects the per-site rotation when the spec carries a policy
+    table (``spec.r4_sites``); the default covers the flat-config case.
+    """
+    kind, group, seed = spec.r4_for(site)
+    if kind == "I":
         return x
-    rot = _r4_blocks(spec.r4_kind, x.shape[-1], spec.r4_group, spec.r4_seed)
+    rot = _r4_blocks(kind, x.shape[-1], group, seed)
     if spec.use_kernels and rot.kind.is_local:
         from repro.kernels import ops as kops
 
@@ -405,10 +437,10 @@ def decode_attention(
 
 
 def swiglu(x: jax.Array, wgate: jax.Array, wup: jax.Array, wdown: jax.Array,
-           spec: QuantizeSpec = NOQUANT) -> jax.Array:
+           spec: QuantizeSpec = NOQUANT, site: str = "w_down") -> jax.Array:
     xq = act_q(x, spec)
     hidden = jax.nn.silu(xq @ wgate) * (xq @ wup)
-    hidden = apply_r4(hidden, spec)  # online R4 before down projection
+    hidden = apply_r4(hidden, spec, site)  # online R4 before down projection
     hidden = act_q(hidden, spec)
     return hidden @ wdown
 

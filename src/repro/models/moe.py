@@ -21,6 +21,7 @@ Covers both assigned MoE archs:
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Dict
 
 import jax
@@ -31,6 +32,62 @@ from repro.configs.base import ModelConfig
 from repro.models import common
 from repro.models.common import QuantizeSpec, act_q, apply_r4
 from repro.quant.packed import dense_w
+
+# ---------------------------------------------------------------------------
+# Expert-FFN schedule selection (ROADMAP item: data-driven default flip)
+#
+# "gspmd": the historical path — pin the dispatch buffer to
+# P(dp, "model", ...) and let the partitioner infer collectives around the
+# expert einsums.  "explicit": the dist.collectives.expert_ffn_ep
+# shard_map schedule (batch-spread dispatch + two all-to-alls, provably
+# minimal wire volume).  launch.dryrun flips the default per cell from
+# the recorded per-layer HLO collective bytes (`moe_ep` in each MoE cell
+# record); off-mesh (CPU tests, single device) both select gspmd's plain
+# einsums because the explicit schedule needs a concrete mesh.
+# ---------------------------------------------------------------------------
+
+MOE_EP_IMPLS = ("gspmd", "explicit")
+_MOE_EP_IMPL = "gspmd"
+
+
+def get_moe_ep_impl() -> str:
+    return _MOE_EP_IMPL
+
+
+def set_moe_ep_impl(impl: str) -> str:
+    """Set the expert-FFN schedule; returns the previous setting."""
+    global _MOE_EP_IMPL
+    if impl not in MOE_EP_IMPLS:
+        raise ValueError(f"unknown MoE EP impl {impl!r}; want {MOE_EP_IMPLS}")
+    prev = _MOE_EP_IMPL
+    _MOE_EP_IMPL = impl
+    return prev
+
+
+@contextlib.contextmanager
+def moe_ep_impl(impl: str):
+    prev = set_moe_ep_impl(impl)
+    try:
+        yield
+    finally:
+        set_moe_ep_impl(prev)
+
+
+def _explicit_ep_mesh(b: int, e: int):
+    """The concrete mesh to run the explicit EP schedule on, or None when
+    infeasible (no mesh / no model axis / indivisible dispatch layout —
+    the same feasibility the dry-run records per cell)."""
+    if _MOE_EP_IMPL != "explicit":
+        return None
+    from jax.interpreters import pxla
+
+    mesh = pxla.thread_resources.env.physical_mesh
+    if mesh.empty or "model" not in mesh.axis_names:
+        return None
+    sizes = dict(zip(mesh.axis_names, np.shape(mesh.devices)))
+    if e % sizes["model"] or b % int(np.prod(list(sizes.values()))):
+        return None
+    return mesh
 
 
 def _ambient_mesh():
@@ -157,18 +214,33 @@ def moe_apply(lp: Dict, x: jax.Array, cfg: ModelConfig, spec: QuantizeSpec = com
         return jnp.zeros((e * cap + 1, d), vals.dtype).at[slots].set(vals)
 
     xe = jax.vmap(scatter_row)(slot, x_sel)[:, : e * cap].reshape(b, e, cap, d)
-    xe = _pin(xe, "data", "model", None, None)  # the expert all-to-all
 
-    # --- expert computation (batched over B and E; MXU einsums) ---
-    # einsum cannot dispatch on PackedWeight: materialize expert stacks
-    # explicitly (dequant-on-use; XLA fuses it into the contraction).
-    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, dense_w(lp["w_gate"]))) * jnp.einsum(
-        "becd,edf->becf", xe, dense_w(lp["w_up"])
-    )
-    h = apply_r4(h, spec)
-    h = act_q(h, spec)
-    ye = jnp.einsum("becf,efd->becd", h, dense_w(lp["w_down"]))  # (B, E, cap, D)
-    ye = _pin(ye, "data", "model", None, None)
+    ep_mesh = _explicit_ep_mesh(b, e)
+    if ep_mesh is not None:
+        # Explicit shard_map EP schedule: batch-spread dispatch + two
+        # all-to-alls, expert FFN purely local (W4A4 hooks applied
+        # inside) — selected per dry-run cell from the recorded
+        # collective bytes.  einsum cannot dispatch on PackedWeight, so
+        # expert stacks materialize before entering the shard_map.
+        from repro.dist.collectives import expert_ffn_ep
+
+        dp = tuple(n for n in ep_mesh.axis_names if n != "model")
+        ye = expert_ffn_ep(
+            xe, dense_w(lp["w_gate"]), dense_w(lp["w_up"]),
+            dense_w(lp["w_down"]), ep_mesh, data_axes=dp, spec=spec)
+    else:
+        xe = _pin(xe, "data", "model", None, None)  # the expert all-to-all
+
+        # --- expert computation (batched over B and E; MXU einsums) ---
+        # einsum cannot dispatch on PackedWeight: materialize expert stacks
+        # explicitly (dequant-on-use; XLA fuses it into the contraction).
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, dense_w(lp["w_gate"]))) * jnp.einsum(
+            "becd,edf->becf", xe, dense_w(lp["w_up"])
+        )
+        h = apply_r4(h, spec, "w_down")
+        h = act_q(h, spec)
+        ye = jnp.einsum("becf,efd->becd", h, dense_w(lp["w_down"]))  # (B, E, cap, D)
+        ye = _pin(ye, "data", "model", None, None)
 
     # --- combine (gather back, weight, unsort-scatter-add per sequence) ---
     ybuf = jnp.concatenate(
@@ -185,7 +257,7 @@ def moe_apply(lp: Dict, x: jax.Array, cfg: ModelConfig, spec: QuantizeSpec = com
     # --- shared experts (always-on dense path) ---
     if cfg.n_shared_experts:
         hs = jax.nn.silu(xq @ lp["shared_gate"]) * (xq @ lp["shared_up"])
-        hs = apply_r4(hs, spec)
+        hs = apply_r4(hs, spec, "shared_down")
         hs = act_q(hs, spec)
         y = y + hs @ lp["shared_down"]
     return y.reshape(b, s, d).astype(x.dtype)

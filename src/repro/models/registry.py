@@ -42,6 +42,11 @@ class Arch:
     prefill: Callable  # (params, batch, cache, spec) -> (logits, cache)
     decode: Callable  # (params, tokens, cache, spec) -> (logits, cache)
     init_cache: Callable  # (batch, max_seq, spec, dtype) -> cache pytree
+    # (params, batch, cache, true_length, spec) -> (logits at the *true*
+    # last token, cache with length=true_length) for right-padded prompts
+    # (prompt-length bucketing).  None for recurrent-state families whose
+    # scan integrates every padded token.
+    padded_prefill: Optional[Callable] = None
 
     # ------------------------------------------------------------------
     def input_specs(self, shape: ShapeConfig, *, per_device_batch: Optional[int] = None
@@ -91,6 +96,9 @@ def _build_transformer(cfg: ModelConfig) -> Arch:
         decode=lambda p, tok, c, spec=NOQUANT: t.decode(cfg, p, tok, c, spec),
         init_cache=lambda batch, max_seq, spec=NOQUANT, dtype=jnp.bfloat16: t.init_cache(
             cfg, batch, max_seq, spec, dtype
+        ),
+        padded_prefill=lambda p, b, c, n, spec=NOQUANT: t.prefill(
+            cfg, p, b, c, spec, true_length=n
         ),
     )
 

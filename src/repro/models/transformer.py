@@ -338,8 +338,21 @@ def _prefill_std_layer(cfg, lp, lc, h, positions, spec, kvq, b, s):
 
 
 def prefill(cfg: ModelConfig, params: Dict, batch: Dict, cache: Dict,
-            spec: QuantizeSpec = NOQUANT) -> Tuple[jax.Array, Dict]:
-    """Run the full prompt, returning last-position logits + filled cache."""
+            spec: QuantizeSpec = NOQUANT, *,
+            true_length: Optional[jax.Array] = None) -> Tuple[jax.Array, Dict]:
+    """Run the full prompt, returning last-position logits + filled cache.
+
+    ``true_length`` enables right-padded prompts (prompt-length
+    bucketing): the batch may be padded past the real prompt, logits are
+    taken at position ``true_length - 1`` (the *true* last token — a
+    padded prefill would otherwise sample the first generated token from
+    a padding position) and the cache length is set to ``true_length`` so
+    decode masks the padded garbage KV.  Causal attention means padding
+    can never influence positions before it, so the returned logits are
+    identical to an exact-length prefill.  (Per-sequence recurrent-state
+    families — xLSTM/Zamba — cannot use this: their state integrates
+    every scanned token; the engine gates on family.)
+    """
     h = embed_inputs(cfg, params, batch)
     b, s, _ = h.shape
     positions = jnp.arange(s)[None, :]
@@ -366,8 +379,8 @@ def prefill(cfg: ModelConfig, params: Dict, batch: Dict, cache: Dict,
 
         h, new_grp = jax.lax.scan(group_fn, h, (params["layers"], grp_caches))
         new_caches = jax.tree.map(lambda a: a.reshape(-1, *a.shape[2:]), new_grp)
-        logits = lm_logits(cfg, params, h[:, -1:], spec)
-        new_caches["length"] = jnp.asarray(s, jnp.int32)
+        logits = lm_logits(cfg, params, _last_positions(h, true_length), spec)
+        new_caches["length"] = _fill_length(s, true_length)
         return logits, new_caches
 
     def layer_fn(h, xs):
@@ -401,9 +414,23 @@ def prefill(cfg: ModelConfig, params: Dict, batch: Dict, cache: Dict,
         return h, lc
 
     h, new_caches = jax.lax.scan(layer_fn, h, (params["layers"], layer_caches))
-    logits = lm_logits(cfg, params, h[:, -1:], spec)
-    new_caches["length"] = jnp.asarray(s, jnp.int32)
+    logits = lm_logits(cfg, params, _last_positions(h, true_length), spec)
+    new_caches["length"] = _fill_length(s, true_length)
     return logits, new_caches
+
+
+def _last_positions(h: jax.Array, true_length) -> jax.Array:
+    """(B, S, D) -> (B, 1, D) at the true last token (S-1 when exact)."""
+    if true_length is None:
+        return h[:, -1:]
+    idx = jnp.asarray(true_length, jnp.int32) - 1
+    return jax.lax.dynamic_slice_in_dim(h, idx, 1, axis=1)
+
+
+def _fill_length(s: int, true_length) -> jax.Array:
+    if true_length is None:
+        return jnp.asarray(s, jnp.int32)
+    return jnp.asarray(true_length, jnp.int32)
 
 
 def _store(buf, val, s):

@@ -11,6 +11,15 @@ with r1_kind in {GH, GW, LH, GSR} as the paper's independent variable.
 Weights: asymmetric, MSE-clipped, grouped (128 at full scale); acts:
 symmetric RTN, clip 0.9; R4 online rotation ahead of down_proj.
 
+The real API underneath is the declarative
+:class:`repro.quant.policy.QuantPolicy`: an ordered list of per-site
+pattern rules plus a rotation plan, quantizing every matmul site under
+its own (bits, group, method, rotation) in one pass — heterogeneous
+precision, per-site online rotations, learned/loaded/composed R1.
+``PTQConfig`` lowers to a single-rule policy via :meth:`PTQConfig.
+to_policy`, so every flat-config call site rides the same path and
+produces byte-identical artifacts to what it always did.
+
 Every family quantizer returns *packed integer* weights - a params tree
 whose quantized leaves are :class:`repro.quant.packed.PackedWeight`
 (codes + scale + zero) rather than fake-quant floats.  The packed tree is
@@ -21,7 +30,7 @@ and is what :func:`quantize_model` still returns for existing callers.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -35,12 +44,26 @@ from repro.models import transformer as tmod
 from repro.models.common import QuantizeSpec, act_q, apply_r4, rmsnorm
 from repro.quant import gptq as gptq_mod
 from repro.quant import rtn
+from repro.quant import policy as policy_mod
 from repro.quant.packed import PackedWeight, dequantize_tree
+from repro.quant.policy import (
+    QuantPolicy, ResolvedPolicy, RotationPlan, RotationSpec, SiteRule,
+    _site_layer_map, lower_wakv, resolve_policy,
+)
 from repro.quant.qtypes import QuantConfig, WAKVConfig
+
+_R1_KINDS = ("I", "GH", "GW", "LH", "GSR")
+_LEARNED = ("none", "rotation", "rotation+scale")
 
 
 @dataclasses.dataclass(frozen=True)
 class PTQConfig:
+    """Flat one-rule convenience constructor; lowers to a QuantPolicy.
+
+    Validated at construction (bad ``wakv`` strings / groups / kinds used
+    to surface as shape errors deep inside ``pack.py``).
+    """
+
     r1_kind: str = "GSR"  # GH | GW | LH | GSR | I  (the paper's variable)
     r4_kind: str = "GH"  # QuaRot's default online rotation
     wakv: str = "W2A16"
@@ -51,6 +74,29 @@ class PTQConfig:
     learn_steps: int = 120
     n_calib: int = 8
     calib_seq: int = 256
+
+    def __post_init__(self):
+        if self.r1_kind not in _R1_KINDS:
+            raise ValueError(
+                f"PTQConfig.r1_kind {self.r1_kind!r} unknown  "
+                f"(expected one of {_R1_KINDS})")
+        if self.r4_kind not in _R1_KINDS:
+            raise ValueError(
+                f"PTQConfig.r4_kind {self.r4_kind!r} unknown  "
+                f"(expected one of {_R1_KINDS})")
+        if self.method not in ("rtn", "gptq"):
+            raise ValueError(
+                f"PTQConfig.method {self.method!r} unknown  "
+                f"(expected 'rtn' or 'gptq')")
+        if self.learned not in _LEARNED:
+            raise ValueError(
+                f"PTQConfig.learned {self.learned!r} unknown  "
+                f"(expected one of {_LEARNED})")
+        if self.group < 1:
+            raise ValueError(
+                f"PTQConfig.group must be >= 1, got {self.group}  "
+                f"(it is both the quant group and the GSR block size)")
+        lower_wakv(self.wakv, self.group)  # raises with the accepted format
 
     def spec(self) -> QuantizeSpec:
         w = WAKVConfig.parse(self.wakv, group=self.group)
@@ -65,6 +111,34 @@ class PTQConfig:
 
     def weight_cfg(self) -> QuantConfig:
         return WAKVConfig.parse(self.wakv, group=self.group).weight
+
+    def to_policy(self) -> QuantPolicy:
+        """Lower to the equivalent single-rule policy (the real API).
+
+        ``quantize_packed(arch, params, ptq)`` and ``quantize_packed(
+        arch, params, ptq.to_policy())`` produce byte-identical artifacts.
+        """
+        wcfg, act_bits, act_clip, kv_bits = lower_wakv(self.wakv, self.group)
+        if self.learned != "none":
+            r1 = RotationSpec(source="learn", kind=self.r1_kind,
+                              group=self.group, seed=self.seed,
+                              learn=self.learned,
+                              learn_steps=self.learn_steps)
+        else:
+            r1 = RotationSpec(source="construct", kind=self.r1_kind,
+                              group=self.group, seed=self.seed)
+        return QuantPolicy(
+            rules=(SiteRule(pattern="*", bits=wcfg.bits, group=self.group,
+                            method=self.method, symmetric=wcfg.symmetric,
+                            mse_clip=wcfg.mse_clip,
+                            clip_ratio=wcfg.clip_ratio),),
+            rotation=RotationPlan(r1=r1, r4_kind=self.r4_kind,
+                                  r4_group=self.group),
+            act_bits=act_bits, act_group=self.group, act_clip=act_clip,
+            kv_bits=kv_bits, seed=self.seed, n_calib=self.n_calib,
+            calib_seq=self.calib_seq,
+            name=f"ptq-{self.r1_kind}-{self.wakv}-{self.method}",
+        )
 
 
 def fit_group(c: int, group: int) -> int:
@@ -195,7 +269,8 @@ def gptq_quantize_dense(cfg: ModelConfig, params: Dict, hess: Dict,
 
 
 def _learned_rotation(cfg: ModelConfig, params: Dict, r_init: Rotation,
-                      ptq: PTQConfig) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+                      proxy_cfg: QuantConfig, *, learn_scale: bool,
+                      steps: int) -> Tuple[np.ndarray, Optional[np.ndarray]]:
     from repro.quant import spinquant
 
     layers = params["layers"]
@@ -211,11 +286,190 @@ def _learned_rotation(cfg: ModelConfig, params: Dict, r_init: Rotation,
         r_init.dense(),
         front,
         [],  # rear side is covered by orthogonal invariance; keep proxy light
-        ptq.weight_cfg().replace(mse_clip=False),
-        learn_scale=(ptq.learned == "rotation+scale"),
-        steps=ptq.learn_steps,
+        proxy_cfg.replace(mse_clip=False),
+        learn_scale=learn_scale,
+        steps=steps,
     )
     return res.rotation, res.scale
+
+
+def build_plan_rotations(cfg: ModelConfig, params: Dict, policy: QuantPolicy
+                         ) -> Tuple[Rotation, Optional[Rotation],
+                                    Optional[np.ndarray]]:
+    """Materialise the plan's fused slots: (R1, R2, learned smoothing).
+
+    R1 sources: ``construct`` keeps the factored
+    :class:`~repro.core.rotation.Rotation` (identical to the flat-config
+    path); ``learn`` runs SpinQuant-lite from the ``kind`` init;
+    ``load`` reads an orthogonal matrix from disk.  A ``compose`` kind
+    post-multiplies a constructed rotation onto the base — activations
+    see ``x @ R_base @ R_post`` — which is how GSR is layered over a
+    learned/loaded SpinQuant rotation (paper Sec. 4).
+    """
+    plan = policy.rotation
+    r1s = plan.r1
+    dim = cfg.d_model
+
+    if r1s.source == "construct":
+        r1 = make_rotation(r1s.kind, dim, group=fit_group(dim, r1s.group),
+                           seed=r1s.seed)
+    elif r1s.source == "identity":
+        r1 = make_rotation("I", dim)
+    else:
+        r1 = None  # learn / load build a dense matrix below
+
+    scale = None
+    base: Optional[np.ndarray] = None
+    if r1s.source == "learn":
+        r_init = make_rotation(r1s.kind, dim, group=fit_group(dim, r1s.group),
+                               seed=r1s.seed)
+        # Proxy quantizer = the first rule's config (for a lowered
+        # PTQConfig this is exactly the flat config's weight_cfg(), with
+        # the group fitted to d_model so reduced configs don't crash).
+        rule = policy.rules[0]
+        proxy = QuantConfig(bits=rule.bits, group=fit_group(dim, rule.group),
+                            symmetric=rule.symmetric, mse_clip=rule.mse_clip,
+                            clip_ratio=rule.clip_ratio)
+        base, scale = _learned_rotation(
+            cfg, params, r_init, proxy,
+            learn_scale=(r1s.learn == "rotation+scale"),
+            steps=r1s.learn_steps)
+    elif r1s.source == "load":
+        base = r1s.base_matrix(dim)
+
+    post = r1s.compose_matrix(dim)
+    if base is not None or post is not None:
+        if base is None:
+            base = r1.dense() if r1 is not None else np.eye(dim)
+        m = base if post is None else base @ post
+        # kind label irrelevant once the matrix is dense
+        r1 = Rotation(kind=RotationKind.GLOBAL_HADAMARD, dim=dim, matrix=m)
+
+    r2 = None
+    if plan.r2 is not None and plan.r2 != "I":
+        if cfg.family in ("mla", "ssm"):
+            raise ValueError(
+                f"RotationPlan.r2 is a per-head rotation for standard "
+                f"attention; family {cfg.family!r} has none  (drop r2 or "
+                f"use a dense/moe/hybrid arch)")
+        hd = cfg.hd
+        r2 = make_rotation(plan.r2, hd, group=fit_group(hd, r1s.group),
+                           seed=r1s.seed + 7)
+    return r1, r2, scale
+
+
+# ---------------------------------------------------------------------------
+# Policy-driven per-site quantization
+# ---------------------------------------------------------------------------
+
+
+def _tree_get(tree: Dict, path: Tuple[str, ...]):
+    node = tree
+    for p in path:
+        node = node[p]
+    return node
+
+
+def _tree_set(tree: Dict, path: Tuple[str, ...], value) -> Dict:
+    """Copy-on-write set along ``path`` (shares untouched siblings)."""
+    if len(path) == 1:
+        return dict(tree, **{path[0]: value})
+    return dict(tree, **{path[0]: _tree_set(tree[path[0]], path[1:], value)})
+
+
+def _gptq_site(w: jax.Array, hess: jax.Array, wcfg: QuantConfig
+               ) -> PackedWeight:
+    """GPTQ a stacked (L, C, H) dense-family site under one rule."""
+    quant_one = lambda wi, hi: gptq_mod.gptq_quantize(wi, hi, wcfg)[0]
+    qt = jax.vmap(quant_one)(
+        w.astype(jnp.float32), hess.astype(jnp.float32))
+    return PackedWeight.from_codes(
+        qt.codes, qt.scale, qt.zero, bits=wcfg.bits, group=wcfg.group,
+        symmetric=wcfg.symmetric, dtype=str(w.dtype),
+    )
+
+
+def _quantize_site_mixed(cfg: ModelConfig, w: jax.Array, site: str,
+                         path: Tuple[str, ...], rules_for_lead, rules,
+                         hess: Optional[Dict]) -> PackedWeight:
+    """Quantize one stacked site whose layers carry *different* rules.
+
+    Each layer slice quantizes on its own grid; the per-layer grids are
+    merged into one uniform leaf so the stacked weight still rides
+    ``lax.scan``: codes are stored at the widest rule's bit width (packed
+    when the channel count allows), scales/zeros at the finest rule's
+    group (coarser groups replicate their rows — numerically exact, the
+    dequant rule ``(codes - zero) * scale`` never consults the rule).
+    """
+    from repro.quant import pack as packmod
+
+    *lead, c, h = w.shape
+    flat = w.astype(jnp.float32).reshape(-1, c, h)
+    cfgs = {rid: rules[rid].weight_cfg(c) for rid in set(rules_for_lead)}
+    gmin = min(qc.group for qc in cfgs.values())
+    bits_max = max(qc.bits for qc in cfgs.values())
+    bare = path[-1]
+    hkey = _DENSE_HESS_FOR.get(bare) if cfg.family == "dense" else None
+
+    us, scs, zs = [], [], []
+    for i, rid in enumerate(rules_for_lead):
+        qc = cfgs[rid]
+        if rules[rid].method == "gptq" and hess is not None and hkey:
+            qt = gptq_mod.gptq_quantize(
+                flat[i], hess[hkey][i].astype(jnp.float32), qc)[0]
+        else:
+            qt = rtn.quantize_weight_grouped(flat[i], qc)
+        offset = (1 << (qc.bits - 1)) if qc.symmetric else 0
+        zero = jnp.zeros_like(qt.scale) if qt.zero is None else qt.zero
+        rep = qc.group // gmin
+        us.append(qt.codes.astype(jnp.int32) + offset)
+        scs.append(jnp.repeat(qt.scale.astype(jnp.float32), rep, axis=0))
+        zs.append(jnp.repeat(zero.astype(jnp.float32) + offset, rep, axis=0))
+    u = jnp.stack(us).reshape(*lead, c, h)
+    scale = jnp.stack(scs).reshape(*lead, c // gmin, h)
+    zero = jnp.stack(zs).reshape(*lead, c // gmin, h)
+    packed = packmod.packable(bits_max, c)
+    codes = packmod.pack_codes(u, bits_max) if packed else u.astype(jnp.uint8)
+    return PackedWeight(codes=codes, scale=scale, zero=zero, bits=bits_max,
+                        group=gmin, c=c, dtype=str(w.dtype), packed=packed)
+
+
+def quantize_by_policy(cfg: ModelConfig, fused: Dict,
+                       resolved: ResolvedPolicy,
+                       hess: Optional[Dict] = None) -> Dict:
+    """Quantize every resolved site of ``fused`` under its own rule.
+
+    Homogeneous sites (every layer on one rule — the flat-config case)
+    take exactly the historical path: vmapped RTN packing or the stacked
+    GPTQ loop, so lowered ``PTQConfig`` artifacts stay byte-identical.
+    Heterogeneous sites merge per-layer grids via
+    :func:`_quantize_site_mixed`.
+    """
+    rules = resolved.policy.rules
+    out = fused
+    for rs in resolved.sites:
+        if not rs.quantized:
+            continue
+        w = _tree_get(fused, rs.path)
+        lead = tuple(w.shape[:-2])
+        layer_map = _site_layer_map(cfg, rs.path, lead)
+        layer_ids = sorted(set(int(l) for l in layer_map))
+        rid_of = dict(zip(layer_ids, rs.rule_ids))
+        rules_for_lead = [rid_of[int(l)] for l in layer_map]
+        bare = rs.path[-1]
+        hkey = _DENSE_HESS_FOR.get(bare) if cfg.family == "dense" else None
+        if rs.homogeneous:
+            rule = rules[rs.rule_ids[0]]
+            wcfg = rule.weight_cfg(rs.in_channels)
+            if rule.method == "gptq" and hess is not None and hkey:
+                new = _gptq_site(w, hess[hkey], wcfg)
+            else:
+                new = PackedWeight.from_float(w, wcfg)
+        else:
+            new = _quantize_site_mixed(cfg, w, rs.site, rs.path,
+                                       rules_for_lead, rules, hess)
+        out = _tree_set(out, rs.path, new)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -223,51 +477,69 @@ def _learned_rotation(cfg: ModelConfig, params: Dict, r_init: Rotation,
 # ---------------------------------------------------------------------------
 
 
+def normalize_policy(ptq: Union[PTQConfig, QuantPolicy, str]) -> QuantPolicy:
+    """PTQConfig | QuantPolicy | preset-name/JSON -> QuantPolicy."""
+    if isinstance(ptq, QuantPolicy):
+        return ptq
+    if isinstance(ptq, PTQConfig):
+        return ptq.to_policy()
+    if isinstance(ptq, str):
+        return policy_mod.get_policy(ptq)
+    raise TypeError(
+        f"expected PTQConfig, QuantPolicy, or a policy name, got "
+        f"{type(ptq).__name__}")
+
+
 def quantize_packed(
     arch,
     params: Dict,
-    ptq: PTQConfig,
+    ptq: Union[PTQConfig, QuantPolicy, str],
     calib_batches: Optional[Iterator] = None,
 ) -> Tuple[Dict, QuantizeSpec]:
     """Full PTQ to the packed artifact form.
 
-    Returns ``(fused params with PackedWeight leaves, serving spec)`` -
-    the canonical representation; wrap it in ``repro.api.QuantizedModel``
-    (or call :func:`quantize_model` for the legacy fake-quant float view).
+    ``ptq`` may be the flat :class:`PTQConfig`, a declarative
+    :class:`~repro.quant.policy.QuantPolicy` (or preset name / JSON), in
+    which case every matmul site quantizes under its own rule.  Returns
+    ``(fused params with PackedWeight leaves, serving spec)`` - the
+    canonical representation; wrap it in ``repro.api.QuantizedModel`` (or
+    call :func:`quantize_model` for the legacy fake-quant float view).
     """
     cfg = arch.config
-    spec = ptq.spec()
-    wcfg = ptq.weight_cfg()
+    policy = normalize_policy(ptq)
+    spec = policy.spec()
+    resolved = _resolve_or_none(policy, cfg, params)
 
-    r1_group = fit_group(cfg.d_model, ptq.group)
-    r1 = make_rotation(ptq.r1_kind, cfg.d_model, group=r1_group, seed=ptq.seed)
-
-    scale = None
-    if ptq.learned != "none":
-        r_learn, scale = _learned_rotation(cfg, params, r1, ptq)
-        r1 = Rotation(kind=RotationKind.GLOBAL_HADAMARD, dim=cfg.d_model,
-                      matrix=r_learn)  # kind label irrelevant post-learning
-
-    fused = fuse_rotations(cfg, params, r1, spec=spec)
+    r1, r2, scale = build_plan_rotations(cfg, params, policy)
+    fused = fuse_rotations(cfg, params, r1, r2=r2, spec=spec)
     if scale is not None:
         # OSTQuant-lite smoothing in the rotated basis: norm gamma = 1/s,
         # front weights *= s - an exact equivalence (rms-normalize itself
         # is untouched), changing only what the quantizers see.
         fused = _apply_smoothing(cfg, fused, scale)
 
-    if not wcfg.enabled:
+    if resolved is None or not any(s.quantized for s in resolved.sites):
         return fused, spec
-    if ptq.method == "gptq" and cfg.family == "dense":
+
+    hess = None
+    needs_gptq = cfg.family == "dense" and any(
+        policy.rules[i].method == "gptq"
+        for s in resolved.sites for i in s.rule_ids if i is not None)
+    if needs_gptq:
         if calib_batches is None:
             from repro.data import calibration_batches
 
-            calib_batches = calibration_batches(cfg, ptq.n_calib, ptq.calib_seq,
-                                                seed=ptq.seed + 99)
+            calib_batches = calibration_batches(
+                cfg, policy.n_calib, policy.calib_seq, seed=policy.seed + 99)
         hess = collect_dense_hessians(cfg, fused, calib_batches, spec)
-        qparams = gptq_quantize_dense(cfg, fused, hess, wcfg)
-    else:
-        qparams = rtn_quantize_params(cfg, fused, wcfg)
-    return qparams, spec
+    return quantize_by_policy(cfg, fused, resolved, hess), spec
+
+
+def _resolve_or_none(policy: QuantPolicy, cfg, params):
+    """Resolve, treating an all-float policy (W16) as 'quantize nothing'."""
+    if all(r.bits >= 16 for r in policy.rules):
+        return None
+    return resolve_policy(policy, cfg, params)
 
 
 def quantize_model(

@@ -1,0 +1,611 @@
+"""Declarative per-site quantization policy: the PTQ front door.
+
+The paper's central observation is that *which* rotation sits at *which*
+site matters (GSR's block-diagonal Walsh isolates outliers per group, and
+layering GSR over learned rotations helps further), and production
+recipes need the same per-site freedom for precision: W2 everywhere
+except the sensitive ``down_proj`` at W4, GPTQ on attention but cheap RTN
+on experts, and so on.  A :class:`QuantPolicy` expresses all of that
+declaratively:
+
+* an ordered list of :class:`SiteRule` pattern rules — ``site glob x
+  layer range -> (bits, group, method, rotation)`` — resolved first-match
+  -wins against every quantizable matmul site of a registered arch;
+* a :class:`RotationPlan` naming each rotation slot: R1 (residual
+  stream, fused offline) from a pluggable :class:`RotationSpec` source —
+  constructed (GH/GW/LH/GSR), learned (SpinQuant-lite), loaded from disk,
+  optionally composed with a constructed post-rotation (the
+  "GSR-over-SpinQuant" recipe) — plus R2 (per-head, fused), R3 (online
+  q/k) and the online R4 slot ahead of each down projection, overridable
+  per site through ``SiteRule.rotation``.
+
+``PTQConfig`` (:mod:`repro.quant.pipeline`) remains the one-line
+front door; it now *lowers* to a single-rule policy via
+``PTQConfig.to_policy()``, so the policy is the real API and the flat
+config is a convenience constructor.
+
+Shipped presets (``get_policy``):
+
+==================  ======================================================
+``paper-table1``    the paper's main setting: GSR R1, W2 asymmetric MSE-
+                    clipped GPTQ group-128 everywhere, A16.
+``w2-sensitive-fp4``  W2 everywhere except the sensitive down projections
+                    (``*down*``) kept at 4-bit — the mixed-precision
+                    recipe unreachable from the flat config.
+``gsr-over-spinquant``  SpinQuant-lite learned R1 composed with a GSR
+                    post-rotation (paper Sec. 4: GSR layered over
+                    optimization-based rotations), W4 RTN.
+==================  ======================================================
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.models.common import QuantizeSpec
+from repro.quant.qtypes import QuantConfig, WAKVConfig
+
+_ROTATION_KINDS = ("I", "GH", "GW", "LH", "GSR")
+_ROTATION_SOURCES = ("construct", "learn", "load", "identity")
+_METHODS = ("rtn", "gptq")
+_BITS = (2, 3, 4, 8, 16)
+
+
+def _err(msg: str, *, hint: str = "") -> ValueError:
+    return ValueError(msg + (f"  ({hint})" if hint else ""))
+
+
+# ---------------------------------------------------------------------------
+# Rotation slots
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RotationSpec:
+    """One rotation slot's pluggable source (used for the fused R1 slot).
+
+    ``source``:
+      * ``construct`` — build ``kind`` (GH/GW/LH/GSR/I) at ``group``/``seed``;
+      * ``learn``     — SpinQuant-lite Cayley optimization initialised from
+        ``kind`` (``learn`` selects rotation vs rotation+scale);
+      * ``load``      — read an orthogonal ``(dim, dim)`` matrix from
+        ``path`` (``.npy``), e.g. a SpinQuant checkpoint;
+      * ``identity``  — no rotation.
+
+    ``compose`` post-composes a *constructed* rotation: the applied matrix
+    is ``R_base @ R_compose`` (activations see ``x R_base R_compose``) —
+    how "GSR over SpinQuant" is expressed.
+    """
+
+    source: str = "construct"
+    kind: str = "GSR"
+    group: int = 128
+    seed: int = 0
+    path: Optional[str] = None
+    compose: Optional[str] = None  # constructed post-rotation kind
+    compose_group: int = 128
+    learn: str = "rotation"  # rotation | rotation+scale
+    learn_steps: int = 120
+
+    def __post_init__(self):
+        if self.source not in _ROTATION_SOURCES:
+            raise _err(f"RotationSpec.source {self.source!r} unknown",
+                       hint=f"expected one of {_ROTATION_SOURCES}")
+        if self.kind not in _ROTATION_KINDS:
+            raise _err(f"RotationSpec.kind {self.kind!r} unknown",
+                       hint=f"expected one of {_ROTATION_KINDS}")
+        if self.compose is not None and self.compose not in _ROTATION_KINDS:
+            raise _err(f"RotationSpec.compose {self.compose!r} unknown",
+                       hint=f"expected one of {_ROTATION_KINDS}")
+        if self.source == "load" and not self.path:
+            raise _err("RotationSpec(source='load') requires a path",
+                       hint="point it at a .npy orthogonal (dim, dim) matrix")
+        if self.learn not in ("rotation", "rotation+scale"):
+            raise _err(f"RotationSpec.learn {self.learn!r} unknown",
+                       hint="expected 'rotation' or 'rotation+scale'")
+        if self.group < 1:
+            raise _err(f"RotationSpec.group must be >= 1, got {self.group}")
+
+    def base_matrix(self, dim: int) -> Optional[np.ndarray]:
+        """Dense base matrix for the non-learned sources (learned sources
+        are optimized inside the pipeline, which has model access)."""
+        from repro.core.rotation import make_rotation
+        from repro.quant.pipeline import fit_group
+
+        if self.source == "identity" or (self.source == "construct"
+                                         and self.kind == "I"):
+            return None
+        if self.source == "construct":
+            g = fit_group(dim, self.group)
+            return make_rotation(self.kind, dim, group=g, seed=self.seed).dense()
+        if self.source == "load":
+            if not os.path.exists(self.path):
+                raise _err(f"rotation matrix file not found: {self.path}")
+            m = np.load(self.path)
+            if m.ndim != 2 or m.shape[0] != m.shape[1]:
+                raise _err(f"loaded rotation must be square, got {m.shape}")
+            if m.shape[0] != dim:
+                raise _err(f"loaded rotation is {m.shape[0]}-dim but the "
+                           f"model residual stream is {dim}-dim")
+            if not np.allclose(m @ m.T, np.eye(dim), atol=1e-4):
+                raise _err(f"loaded matrix {self.path} is not orthogonal",
+                           hint="R @ R.T must be I (tolerance 1e-4)")
+            return m.astype(np.float64)
+        return None  # learn: handled by the pipeline
+
+    def compose_matrix(self, dim: int) -> Optional[np.ndarray]:
+        from repro.core.rotation import make_rotation
+        from repro.quant.pipeline import fit_group
+
+        if self.compose is None or self.compose == "I":
+            return None
+        g = fit_group(dim, self.compose_group)
+        return make_rotation(self.compose, dim, group=g, seed=self.seed).dense()
+
+
+@dataclasses.dataclass(frozen=True)
+class RotationPlan:
+    """Names every rotation slot of the stack.
+
+    R1 (residual stream) and R2 (per-head, standard attention) are fused
+    offline; R3 (post-RoPE q/k Hadamard) and R4 (ahead of each down
+    projection) run online and are carried by the serving
+    :class:`~repro.models.common.QuantizeSpec`.  Per-site R4 overrides
+    come from ``SiteRule.rotation``.
+    """
+
+    r1: RotationSpec = RotationSpec()
+    r2: Optional[str] = None  # per-head fused rotation kind (GH/GW), or None
+    r3: bool = False
+    r4_kind: str = "GH"
+    r4_group: int = 128
+    r4_seed: int = 1234
+
+    def __post_init__(self):
+        if self.r2 is not None and self.r2 not in _ROTATION_KINDS:
+            raise _err(f"RotationPlan.r2 {self.r2!r} unknown",
+                       hint=f"expected one of {_ROTATION_KINDS} or None")
+        if self.r4_kind not in _ROTATION_KINDS:
+            raise _err(f"RotationPlan.r4_kind {self.r4_kind!r} unknown",
+                       hint=f"expected one of {_ROTATION_KINDS}")
+
+
+# ---------------------------------------------------------------------------
+# Precision rules
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SiteRule:
+    """One pattern rule: ``site glob x layer range -> quantizer config``.
+
+    ``pattern`` globs (``fnmatch``) against both the bare leaf name
+    (``w_down``) and the slash-qualified site path (``moe_mlp/w_down``);
+    ``layers=(lo, hi)`` restricts the rule to stack layers lo..hi
+    inclusive (``hi=None`` = to the end).  ``rotation`` overrides the
+    plan's online R4 kind for down-projection sites this rule matches
+    (layer-restricted rules cannot carry a rotation override: the online
+    op inside the scanned layer body is layer-uniform).  Online rotation
+    lookups happen by *bare* site name — the layer body cannot know its
+    qualified tree path — so a slash-qualified pattern's last component
+    is what a rotation override resolves by (see
+    ``QuantizeSpec.r4_for``).
+    """
+
+    pattern: str = "*"
+    layers: Optional[Tuple[int, Optional[int]]] = None
+    bits: int = 4
+    group: int = 128
+    method: str = "rtn"
+    symmetric: bool = False
+    mse_clip: bool = True
+    clip_ratio: float = 1.0
+    rotation: Optional[str] = None  # per-site online R4 override
+
+    def __post_init__(self):
+        if not self.pattern:
+            raise _err("SiteRule.pattern must be a non-empty glob",
+                       hint="e.g. '*', 'w_down', 'moe_mlp/*'")
+        if self.bits not in _BITS:
+            raise _err(f"SiteRule.bits {self.bits} unsupported",
+                       hint=f"expected one of {_BITS}")
+        if self.group < 1:
+            raise _err(f"SiteRule.group must be >= 1, got {self.group}")
+        if self.method not in _METHODS:
+            raise _err(f"SiteRule.method {self.method!r} unknown",
+                       hint=f"expected one of {_METHODS}")
+        if self.rotation is not None and self.rotation not in _ROTATION_KINDS:
+            raise _err(f"SiteRule.rotation {self.rotation!r} unknown",
+                       hint=f"expected one of {_ROTATION_KINDS}")
+        if self.layers is not None:
+            lo, hi = self.layers
+            if lo < 0 or (hi is not None and hi < lo):
+                raise _err(f"SiteRule.layers {self.layers} invalid",
+                           hint="want (lo, hi) with 0 <= lo <= hi "
+                                "(hi=None = open-ended)")
+            if self.rotation is not None:
+                raise _err(
+                    "a layer-restricted SiteRule cannot override the online "
+                    "rotation", hint="online R4 runs inside the scanned "
+                    "layer body, so it must be layer-uniform per site; use "
+                    "an un-ranged rule for the rotation override")
+
+    # -- matching --------------------------------------------------------
+    def matches(self, site: str, layer: Optional[int]) -> bool:
+        name = site.rsplit("/", 1)[-1]
+        if not (fnmatch.fnmatchcase(site, self.pattern)
+                or fnmatch.fnmatchcase(name, self.pattern)):
+            return False
+        if self.layers is None or layer is None:
+            return True
+        lo, hi = self.layers
+        return layer >= lo and (hi is None or layer <= hi)
+
+    def weight_cfg(self, c: int) -> QuantConfig:
+        """Concrete quantizer config for a C-input-channel site."""
+        from repro.quant.pipeline import fit_group
+
+        return QuantConfig(bits=self.bits, group=fit_group(c, self.group),
+                           symmetric=self.symmetric, mse_clip=self.mse_clip,
+                           clip_ratio=self.clip_ratio)
+
+
+# ---------------------------------------------------------------------------
+# The policy
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """Ordered per-site precision rules + the rotation plan + the online
+    (activation / KV) settings — everything `repro.api.quantize` needs.
+
+    Rules resolve first-match-wins per ``(site, layer)``; a site no rule
+    matches stays unquantized (add a trailing ``SiteRule("*")`` for a
+    default).  ``act_bits``/``kv_bits`` are policy-global: activations
+    and KV quantize online with one spec for the whole model.
+    """
+
+    rules: Tuple[SiteRule, ...] = (SiteRule(),)
+    rotation: RotationPlan = RotationPlan()
+    act_bits: int = 16
+    act_group: int = 128
+    act_clip: float = 0.9
+    kv_bits: int = 16
+    seed: int = 0
+    n_calib: int = 8
+    calib_seq: int = 256
+    name: str = ""
+
+    def __post_init__(self):
+        if not self.rules:
+            raise _err("QuantPolicy needs at least one SiteRule")
+        if not all(isinstance(r, SiteRule) for r in self.rules):
+            raise _err("QuantPolicy.rules must be SiteRule instances")
+        if self.act_bits not in _BITS:
+            raise _err(f"QuantPolicy.act_bits {self.act_bits} unsupported",
+                       hint=f"expected one of {_BITS}")
+        if self.kv_bits not in _BITS:
+            raise _err(f"QuantPolicy.kv_bits {self.kv_bits} unsupported",
+                       hint=f"expected one of {_BITS}")
+        if self.act_group < 1:
+            raise _err(f"QuantPolicy.act_group must be >= 1")
+
+    # -- resolution ------------------------------------------------------
+    def rule_for(self, site: str, layer: Optional[int] = None
+                 ) -> Optional[SiteRule]:
+        """First rule matching ``(site, layer)``; None = leave in float."""
+        for r in self.rules:
+            if r.matches(site, layer):
+                return r
+        return None
+
+    def resolve(self, cfg) -> "ResolvedPolicy":
+        """Concrete per-site plan for a model config (validated)."""
+        return resolve_policy(self, cfg)
+
+    def spec(self) -> QuantizeSpec:
+        """The serving/online spec this policy implies (R3/R4/acts/KV)."""
+        plan = self.rotation
+        r4_sites = tuple(
+            (r.pattern, r.rotation, r.group, plan.r4_seed)
+            for r in self.rules if r.rotation is not None
+        )
+        return QuantizeSpec(
+            act_bits=self.act_bits, act_group=self.act_group,
+            act_clip=self.act_clip, r4_kind=plan.r4_kind,
+            r4_group=plan.r4_group, r4_seed=plan.r4_seed, r3=plan.r3,
+            kv_bits=self.kv_bits, r4_sites=r4_sites,
+        )
+
+    # -- serialization ---------------------------------------------------
+    def to_json_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["rules"] = [dataclasses.asdict(r) for r in self.rules]
+        d["rotation"] = dataclasses.asdict(self.rotation)
+        d["rotation"]["r1"] = dataclasses.asdict(self.rotation.r1)
+        return d
+
+    @classmethod
+    def from_json_dict(cls, d: Dict) -> "QuantPolicy":
+        d = dict(d)
+        rot = dict(d.pop("rotation", {}))
+        r1 = RotationSpec(**rot.pop("r1", {}))
+        rules = []
+        for r in d.pop("rules", []):
+            r = dict(r)
+            if r.get("layers") is not None:
+                r["layers"] = tuple(r["layers"])
+            rules.append(SiteRule(**r))
+        return cls(rules=tuple(rules), rotation=RotationPlan(r1=r1, **rot), **d)
+
+    def describe(self) -> str:
+        r1 = self.rotation.r1
+        src = {"construct": r1.kind, "identity": "I",
+               "learn": f"learned({r1.kind} init"
+                        + (f", {r1.compose} post)" if r1.compose else ")"),
+               "load": f"loaded({r1.path}"
+                       + (f", {r1.compose} post)" if r1.compose else ")"),
+               }[r1.source]
+        rules = "; ".join(
+            f"{r.pattern}"
+            + (f"[{r.layers[0]}:{'' if r.layers[1] is None else r.layers[1]}]"
+               if r.layers else "")
+            + f"->W{r.bits}g{r.group}/{r.method}"
+            + (f"/R4={r.rotation}" if r.rotation else "")
+            for r in self.rules)
+        return (f"policy[{self.name or 'custom'}] R1={src} "
+                f"A{self.act_bits}KV{self.kv_bits}: {rules}")
+
+
+# ---------------------------------------------------------------------------
+# Site enumeration + resolution
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedSite:
+    """One quantizable site of a concrete model: where it lives in the
+    params tree, its per-layer rule assignment, and its merged layout."""
+
+    site: str  # slash-qualified site path (e.g. "moe_mlp/w_down")
+    path: Tuple[str, ...]  # tree path under params
+    n_layers: int
+    rule_ids: Tuple[Optional[int], ...]  # per layer; None = float
+    in_channels: int
+
+    @property
+    def quantized(self) -> bool:
+        return any(i is not None for i in self.rule_ids)
+
+    @property
+    def homogeneous(self) -> bool:
+        return len(set(self.rule_ids)) == 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedPolicy:
+    policy: QuantPolicy
+    sites: Tuple[ResolvedSite, ...]
+
+    def site(self, name: str) -> ResolvedSite:
+        for s in self.sites:
+            if s.site == name or s.site.rsplit("/", 1)[-1] == name:
+                return s
+        raise KeyError(name)
+
+    def table(self) -> List[Dict]:
+        out = []
+        for s in self.sites:
+            for rid in sorted({i for i in s.rule_ids if i is not None}):
+                rule = self.policy.rules[rid]
+                layers = [l for l, i in enumerate(s.rule_ids) if i == rid]
+                out.append({
+                    "site": s.site, "layers": layers, "bits": rule.bits,
+                    "group": rule.group, "method": rule.method,
+                    "rotation": rule.rotation,
+                })
+        return out
+
+
+def _site_layer_map(cfg, path: Tuple[str, ...], lead: Tuple[int, ...]
+                    ) -> np.ndarray:
+    """Flat layer index for every entry of a leaf's leading stack axes.
+
+    Stacked leaves carry the layer on axis 0 (experts ride an extra E axis
+    that is *not* a layer axis); interleaved-MoE groups map ``(g, j)`` to
+    ``g * moe_every + j`` (``moe_mlp`` leaves sit in the group's last
+    slot); unstacked 2-D leaves (Zamba shared block) are layer 0.
+    """
+    interleaved = cfg.family == "moe" and cfg.moe_every > 1
+    if not lead:
+        return np.zeros((1,), np.int64)
+    if interleaved and ("dense_mlp" in path or "moe_mlp" in path or
+                        len(lead) >= 2):
+        every = cfg.moe_every
+        g = lead[0]
+        if "moe_mlp" in path:
+            # (G,) or (G, E): one MoE layer per group, experts ride along.
+            layers = np.arange(g) * every + (every - 1)
+            reps = int(np.prod(lead[1:], dtype=np.int64)) if len(lead) > 1 else 1
+            return np.repeat(layers, reps)
+        # attn (G, every, ...) / dense_mlp (G, every-1, ...)
+        j = lead[1] if len(lead) > 1 else 1
+        layers = (np.arange(g)[:, None] * every + np.arange(j)[None, :])
+        reps = int(np.prod(lead[2:], dtype=np.int64)) if len(lead) > 2 else 1
+        return np.repeat(layers.reshape(-1), reps)
+    # flat stack: axis 0 is the layer; extra axes (E) replicate the layer.
+    reps = int(np.prod(lead[1:], dtype=np.int64)) if len(lead) > 1 else 1
+    return np.repeat(np.arange(lead[0]), reps)
+
+
+def enumerate_sites(cfg, params) -> List[Tuple[str, Tuple[str, ...], object]]:
+    """All quantizable matmul sites of a params tree:
+    ``(qualified site name, tree path, leaf)`` triples.
+
+    Site names drop the uninformative ``layers`` tree level, so a dense
+    down projection is ``w_down`` while the interleaved-MoE expert stack
+    is ``moe_mlp/w_down`` and the xLSTM matrix block is ``mlstm/wq``.
+    """
+    from repro.quant.pipeline import _FAMILY_WEIGHTS
+
+    names = _FAMILY_WEIGHTS[cfg.family]
+    out = []
+
+    def walk(tree, path):
+        for k in sorted(tree):
+            v = tree[k]
+            if isinstance(v, dict):
+                walk(v, path + (k,))
+            elif k in names and getattr(v, "ndim", 0) >= 2 and k[0] != "b":
+                site = "/".join(p for p in path + (k,) if p != "layers")
+                out.append((site, path + (k,), v))
+
+    walk(params, ())
+    return out
+
+
+def resolve_policy(policy: QuantPolicy, cfg, params=None) -> ResolvedPolicy:
+    """Resolve rules against a model config (+ optional params tree).
+
+    Validates the resolution with actionable errors:
+      * a site must be quantized at every layer or at none (packed and
+        float layers cannot share one stacked leaf);
+      * heterogeneous per-layer groups must share a common refinement
+        (every group a multiple of the finest one);
+      * GPTQ rules outside the dense family fall back to RTN (recorded,
+        not an error — mirrors the flat-config behaviour).
+    """
+    if params is None:
+        import jax.numpy as jnp
+
+        from repro.models.registry import build_arch
+
+        params = build_arch(cfg).param_specs(dtype=jnp.bfloat16)
+    sites = []
+    for site, path, leaf in enumerate_sites(cfg, params):
+        lead = tuple(leaf.shape[:-2])
+        c = leaf.shape[-2]
+        layer_map = _site_layer_map(cfg, path, lead)
+        layer_ids = sorted(set(int(l) for l in layer_map))
+        per_layer: Dict[int, Optional[int]] = {}
+        for l in layer_ids:
+            rule = policy.rule_for(site, l)
+            per_layer[l] = None if rule is None or rule.bits >= 16 else (
+                policy.rules.index(rule))
+        rule_ids = tuple(per_layer[l] for l in layer_ids)
+        quant_layers = [l for l in layer_ids if per_layer[l] is not None]
+        if quant_layers and len(quant_layers) != len(layer_ids):
+            missing = [l for l in layer_ids if per_layer[l] is None]
+            raise _err(
+                f"site {site!r} is quantized at layers {quant_layers} but "
+                f"left in float at layers {missing}",
+                hint="a stacked leaf must be quantized everywhere or "
+                     "nowhere; add a rule covering the remaining layers "
+                     "(bits<16) or widen the float rule to the whole site")
+        if quant_layers:
+            groups = sorted({policy.rules[per_layer[l]].weight_cfg(c).group
+                             for l in quant_layers})
+            gmin = groups[0]
+            bad = [g for g in groups if g % gmin]
+            if bad:
+                raise _err(
+                    f"site {site!r}: per-layer groups {groups} have no "
+                    f"common refinement (finest is {gmin})",
+                    hint="pick group sizes that are multiples of the "
+                         "smallest one so scales can share a layout")
+        sites.append(ResolvedSite(site=site, path=path,
+                                  n_layers=len(layer_ids),
+                                  rule_ids=rule_ids, in_channels=c))
+    resolved = ResolvedPolicy(policy=policy, sites=tuple(sites))
+    if not any(s.quantized for s in resolved.sites) and any(
+            r.bits < 16 for r in policy.rules):
+        raise _err(
+            f"policy quantizes nothing on {cfg.name}: no rule pattern "
+            f"matched any site",
+            hint=f"sites are {[s.site for s in resolved.sites]}")
+    return resolved
+
+
+# ---------------------------------------------------------------------------
+# Presets + lookup
+# ---------------------------------------------------------------------------
+
+
+def _paper_table1() -> QuantPolicy:
+    return QuantPolicy(
+        name="paper-table1",
+        rules=(SiteRule(pattern="*", bits=2, group=128, method="gptq"),),
+        rotation=RotationPlan(r1=RotationSpec(kind="GSR", group=128)),
+        act_bits=16, kv_bits=16,
+    )
+
+
+def _w2_sensitive_fp4() -> QuantPolicy:
+    return QuantPolicy(
+        name="w2-sensitive-fp4",
+        rules=(
+            SiteRule(pattern="*down*", bits=4, group=128, method="rtn",
+                     rotation="GSR"),
+            SiteRule(pattern="*", bits=2, group=128, method="rtn"),
+        ),
+        rotation=RotationPlan(r1=RotationSpec(kind="GSR", group=128)),
+        act_bits=16, kv_bits=16,
+    )
+
+
+def _gsr_over_spinquant() -> QuantPolicy:
+    return QuantPolicy(
+        name="gsr-over-spinquant",
+        rules=(SiteRule(pattern="*", bits=4, group=128, method="rtn"),),
+        rotation=RotationPlan(
+            r1=RotationSpec(source="learn", kind="GH", compose="GSR",
+                            compose_group=128, learn_steps=60)),
+        act_bits=16, kv_bits=16,
+    )
+
+
+PRESETS = {
+    "paper-table1": _paper_table1,
+    "w2-sensitive-fp4": _w2_sensitive_fp4,
+    "gsr-over-spinquant": _gsr_over_spinquant,
+}
+
+
+def get_policy(name_or_json: str) -> QuantPolicy:
+    """Resolve a ``--policy`` argument: preset name, JSON string, or path
+    to a JSON file (e.g. one produced by ``policy.to_json_dict()``)."""
+    if name_or_json in PRESETS:
+        return PRESETS[name_or_json]()
+    if name_or_json.strip().startswith("{"):
+        return QuantPolicy.from_json_dict(json.loads(name_or_json))
+    if os.path.exists(name_or_json):
+        with open(name_or_json) as f:
+            return QuantPolicy.from_json_dict(json.load(f))
+    raise _err(f"unknown policy {name_or_json!r}",
+               hint=f"expected a preset ({sorted(PRESETS)}), a JSON "
+                    f"object, or a path to a JSON file")
+
+
+def lower_wakv(wakv: str, group: int) -> Tuple[QuantConfig, int, float, int]:
+    """Parse a WxAyKVz string into (weight cfg, act bits, act clip, kv bits)
+    with a construction-time error (the satellite: bad strings used to
+    fail deep inside pack.py with shape errors)."""
+    try:
+        w = WAKVConfig.parse(wakv, group=group)
+    except ValueError as e:
+        raise _err(
+            f"bad wakv spec {wakv!r}: {e}",
+            hint="expected 'W<bits>A<bits>[KV<bits>]', e.g. 'W4A8' or "
+                 "'W2A4KV16'") from None
+    for label, bits in (("weight", w.weight.bits), ("act", w.act.bits),
+                        ("kv", w.kv.bits)):
+        if bits not in _BITS:
+            raise _err(f"{label} bits {bits} unsupported in {wakv!r}",
+                       hint=f"supported widths: {_BITS}")
+    return w.weight, w.act.bits, w.act.clip_ratio, w.kv.bits

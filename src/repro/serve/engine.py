@@ -54,6 +54,13 @@ class ServeConfig:
     # --- continuous-batching / paged-KV pool geometry ---
     block_tokens: int = 16  # tokens per KV block
     pool_blocks: Optional[int] = None  # None: full provisioning (+1 scratch)
+    # Right-pad admission prefills to the next block boundary so a trace
+    # with N distinct prompt lengths compiles ceil(N / block) prefills
+    # instead of N.  Token-identical to exact-length prefill (logits are
+    # read at the *true* last token); only attention-cache families
+    # support it (recurrent state would integrate the padding) — the
+    # engine falls back to exact-length prefill elsewhere.
+    bucket_prompts: bool = False
 
 
 class ServeEngine:
@@ -110,6 +117,10 @@ class ServeEngine:
             self._cache_shardings = ns(cspec)
         self._prefill = jax.jit(lambda p, b, c: arch.prefill(p, b, c, spec))
         self._decode = jax.jit(lambda p, t, c: arch.decode(p, t, c, spec))
+        self._prefill_padded = None
+        if arch.padded_prefill is not None:
+            self._prefill_padded = jax.jit(
+                lambda p, b, c, n: arch.padded_prefill(p, b, c, n, spec))
         # continuous-batching machinery, built lazily on first submit()
         self._pool = None
         self._pool_step_fn = None
@@ -198,16 +209,18 @@ class ServeEngine:
 
     def prefill_one(self, prompt: np.ndarray, patch_embeds: Optional[np.ndarray]
                     ) -> tuple:
-        """Prefill a single request at its exact prompt length into a
-        batch=1 cache sized to whole pool blocks (so admit can copy it
-        block-for-block).  Returns (last_logits (V,)|(K,V), cache, n_tokens).
+        """Prefill a single request into a batch=1 cache sized to whole
+        pool blocks (so admit can copy it block-for-block).  Returns
+        (last_logits (V,)|(K,V), cache, n_tokens).
 
-        Exact-length prefill retraces the jitted prefill once per distinct
-        prompt length.  This is deliberate: the models' prefill returns
-        *last-position* logits, so padding the prompt to a bucket boundary
-        would sample the first token from a padding position — bucketing
-        needs a prefill variant that returns logits at the true last
-        token (ROADMAP open item) before it can be correct."""
+        By default the prompt runs at its exact length, retracing the
+        jitted prefill once per distinct prompt length.  With
+        ``ServeConfig.bucket_prompts`` (attention-cache families only)
+        the prompt is right-padded to the block boundary and run through
+        the padded-prefill variant — logits come from the *true* last
+        token and the cache length masks the padded KV, so tokens are
+        identical while compiles are bounded by the number of distinct
+        block counts."""
         pool = self.pool
         s_total = prompt.shape[0]
         if self.cfg.modality == "vlm" and patch_embeds is not None:
@@ -215,11 +228,24 @@ class ServeEngine:
         nb0 = max(1, math.ceil(s_total / pool.block_tokens))
         cache0 = self.arch.init_cache(1, nb0 * pool.block_tokens, self.spec,
                                       self.dtype)
-        batch = {"tokens": jnp.asarray(prompt[None])}
+        bucketed = (self.scfg.bucket_prompts
+                    and self._prefill_padded is not None)
+        tokens = prompt
+        if bucketed:
+            pad = nb0 * pool.block_tokens - s_total
+            if pad:
+                width = ((0, pad),) + ((0, 0),) * (prompt.ndim - 1)
+                tokens = np.pad(prompt, width)
+        batch = {"tokens": jnp.asarray(tokens[None])}
         if self.cfg.modality == "vlm" and patch_embeds is not None:
             batch["patch_embeds"] = jnp.asarray(patch_embeds[None])
         with self._mesh_ctx():
-            logits, cache = self._prefill(self.params, batch, cache0)
+            if bucketed:
+                logits, cache = self._prefill_padded(
+                    self.params, batch, cache0,
+                    jnp.asarray(s_total, jnp.int32))
+            else:
+                logits, cache = self._prefill(self.params, batch, cache0)
         last = np.asarray(logits)[0]
         if last.ndim >= 2 and last.shape[0] == 1:  # (1, V) / (1, K, V)
             last = last[0]

@@ -1,0 +1,487 @@
+"""Per-site quantization policy tests (the declarative PTQ front door).
+
+Covers the QuantPolicy redesign contract:
+
+  * pattern precedence (first match wins), layer-range overlap, and
+    construction-time validation with actionable errors;
+  * a mixed-precision policy (>= 2 distinct (bits, group, rotation)
+    rules) quantizes, saves, loads, and serves bit-exactly on dense and
+    MoE;
+  * ``PTQConfig`` lowered to its single-rule policy produces a
+    byte-identical artifact to the flat-config front door;
+  * layer-range heterogeneity inside one stacked leaf quantizes each
+    layer on its own grid, exactly matching per-layer quantization;
+  * per-site online R4 choices cancel their fused weight pre-rotation
+    (fp forward invariance);
+  * heterogeneous packed leaves co-shard (param_pspecs mirrors the
+    logical spec regardless of bits/group);
+  * the padded-prefill variant returns logits at the *true* last token
+    under right-padding, token-identical to exact-length prefill;
+  * the explicit shard_map EP schedule for ``moe_apply`` matches the
+    GSPMD einsum path on a mesh and falls back off-mesh.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import api
+from repro.models.common import NOQUANT
+from repro.models.registry import get_arch
+from repro.quant.packed import PackedWeight, is_packed
+from repro.quant.pipeline import PTQConfig, build_plan_rotations
+from repro.quant.policy import (
+    PRESETS, QuantPolicy, RotationPlan, RotationSpec, SiteRule, get_policy,
+)
+
+MIXED = QuantPolicy(
+    rules=(
+        SiteRule(pattern="*down*", bits=4, group=32, method="rtn",
+                 rotation="GSR"),
+        SiteRule(pattern="*", bits=2, group=16, method="rtn"),
+    ),
+    rotation=RotationPlan(r1=RotationSpec(kind="GSR", group=32)),
+)
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    arch = get_arch("smollm-135m", reduced=True)
+    params = arch.init(jax.random.PRNGKey(0), jnp.float32)
+    toks = np.random.default_rng(0).integers(
+        0, arch.config.vocab, (2, 12)).astype(np.int32)
+    return arch, params, toks
+
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    arch = get_arch("deepseek-moe-16b", reduced=True)
+    params = arch.init(jax.random.PRNGKey(0), jnp.float32)
+    toks = np.random.default_rng(0).integers(
+        0, arch.config.vocab, (2, 12)).astype(np.int32)
+    return arch, params, toks
+
+
+# ---------------------------------------------------------------------------
+# Rule matching / precedence / validation
+# ---------------------------------------------------------------------------
+
+
+def test_first_match_wins_over_overlapping_patterns():
+    pol = QuantPolicy(rules=(
+        SiteRule(pattern="w_down", bits=4),
+        SiteRule(pattern="*down*", bits=3),
+        SiteRule(pattern="*", bits=2),
+    ))
+    assert pol.rule_for("w_down", 0).bits == 4
+    assert pol.rule_for("shared_down", 0).bits == 3
+    assert pol.rule_for("moe_mlp/w_down", 0).bits == 4  # bare-name match
+    assert pol.rule_for("wq", 5).bits == 2
+
+
+def test_layer_range_matching():
+    pol = QuantPolicy(rules=(
+        SiteRule(pattern="*", layers=(0, 1), bits=4),
+        SiteRule(pattern="*", layers=(2, None), bits=2),
+    ))
+    assert pol.rule_for("wq", 0).bits == 4
+    assert pol.rule_for("wq", 1).bits == 4
+    assert pol.rule_for("wq", 2).bits == 2
+    assert pol.rule_for("wq", 99).bits == 2
+
+
+def test_unmatched_site_stays_float(dense_setup):
+    arch, params, _ = dense_setup
+    pol = QuantPolicy(rules=(SiteRule(pattern="w_down", bits=4, group=16),))
+    qm = api.quantize(arch, params, pol)
+    assert is_packed(qm.params["layers"]["w_down"])
+    assert not is_packed(qm.params["layers"]["wq"])
+
+
+@pytest.mark.parametrize("bad", [
+    lambda: SiteRule(bits=5),
+    lambda: SiteRule(pattern=""),
+    lambda: SiteRule(group=0),
+    lambda: SiteRule(method="awq"),
+    lambda: SiteRule(layers=(3, 1)),
+    lambda: SiteRule(layers=(0, 1), rotation="GSR"),  # ranged + online rot
+    lambda: SiteRule(rotation="XX"),
+    lambda: RotationSpec(source="download"),
+    lambda: RotationSpec(source="load"),  # load without a path
+    lambda: RotationSpec(kind="ZZ"),
+    lambda: RotationPlan(r4_kind="ZZ"),
+    lambda: QuantPolicy(rules=()),
+    lambda: QuantPolicy(act_bits=7),
+    lambda: PTQConfig(wakv="WXAY"),
+    lambda: PTQConfig(wakv="W4A8KVx"),
+    lambda: PTQConfig(group=0),
+    lambda: PTQConfig(method="awq"),
+    lambda: PTQConfig(r1_kind="nope"),
+    lambda: PTQConfig(learned="maybe"),
+])
+def test_construction_time_validation(bad):
+    with pytest.raises(ValueError):
+        bad()
+
+
+def test_resolve_rejects_partially_quantized_leaf(dense_setup):
+    arch, params, _ = dense_setup
+    pol = QuantPolicy(rules=(SiteRule(pattern="*", layers=(0, 0), bits=4),))
+    with pytest.raises(ValueError, match="quantized at layers"):
+        pol.resolve(arch.config)
+
+
+def test_resolve_rejects_policy_matching_nothing(dense_setup):
+    arch, _, _ = dense_setup
+    pol = QuantPolicy(rules=(SiteRule(pattern="no_such_site", bits=4),))
+    with pytest.raises(ValueError, match="matched any site"):
+        pol.resolve(arch.config)
+
+
+def test_get_policy_lookup_errors():
+    with pytest.raises(ValueError, match="preset"):
+        get_policy("not-a-preset")
+
+
+@pytest.mark.parametrize("name", sorted(PRESETS))
+def test_presets_parse_resolve_roundtrip(name):
+    pol = get_policy(name)
+    cfg = get_arch("deepseek-moe-16b", reduced=True).config
+    res = pol.resolve(cfg)
+    assert any(s.quantized for s in res.sites)
+    # JSON round trip is exact (the artifact manifest depends on it)
+    assert QuantPolicy.from_json_dict(pol.to_json_dict()) == pol
+    assert pol.describe()
+
+
+# ---------------------------------------------------------------------------
+# PTQConfig lowering: byte-identical artifacts
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family_arch", ["smollm-135m", "deepseek-moe-16b"])
+def test_ptqconfig_lowered_policy_byte_identical(family_arch):
+    arch = get_arch(family_arch, reduced=True)
+    params = arch.init(jax.random.PRNGKey(0), jnp.float32)
+    ptq = PTQConfig(r1_kind="GSR", wakv="W4A8", method="rtn", group=32)
+    qm1 = api.quantize(arch, params, ptq)
+    qm2 = api.quantize(arch, params, ptq.to_policy())
+    assert qm1.spec == qm2.spec
+    l1 = jax.tree.leaves(qm1.params, is_leaf=is_packed)
+    l2 = jax.tree.leaves(qm2.params, is_leaf=is_packed)
+    for a, b in zip(l1, l2):
+        if is_packed(a):
+            assert (a.bits, a.group, a.c, a.packed) == (
+                b.bits, b.group, b.c, b.packed)
+            np.testing.assert_array_equal(np.asarray(a.codes),
+                                          np.asarray(b.codes))
+            np.testing.assert_array_equal(np.asarray(a.scale),
+                                          np.asarray(b.scale))
+            np.testing.assert_array_equal(np.asarray(a.zero),
+                                          np.asarray(b.zero))
+        else:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Mixed precision: quantize -> save -> load -> serve, bit-exact
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("setup", ["dense_setup", "moe_setup"])
+def test_mixed_precision_roundtrip_bit_exact(setup, request, tmp_path):
+    arch, params, toks = request.getfixturevalue(setup)
+    qm = api.quantize(arch, params, MIXED)
+    # the policy really is mixed: down projections at W4, the rest W2
+    bits = {p[-1]: l.bits for p, l in _packed_items(qm.params)}
+    assert bits["w_down"] == 4 and bits["wq"] == 2
+
+    d = str(tmp_path / "mixed")
+    qm.save(d)
+    qm2 = api.load_quantized(d)
+    assert qm2.policy == qm.policy and qm2.spec == qm.spec
+    for (p1, l1), (p2, l2) in zip(_packed_items(qm.params),
+                                  _packed_items(qm2.params)):
+        assert p1 == p2
+        assert (l1.bits, l1.group, l1.c, l1.packed) == (
+            l2.bits, l2.group, l2.c, l2.packed)
+        np.testing.assert_array_equal(np.asarray(l1.codes),
+                                      np.asarray(l2.codes))
+        np.testing.assert_array_equal(np.asarray(l1.scale),
+                                      np.asarray(l2.scale))
+        np.testing.assert_array_equal(np.asarray(l1.zero),
+                                      np.asarray(l2.zero))
+
+    lf = arch.forward(qm.params, {"tokens": jnp.asarray(toks)}, qm.spec)
+    ll = qm2.arch.forward(qm2.params, {"tokens": jnp.asarray(toks)}, qm2.spec)
+    np.testing.assert_array_equal(np.asarray(lf), np.asarray(ll))
+
+    scfg = api.ServeConfig(max_seq=32, batch_slots=2)
+    out1 = qm.serve(scfg).generate(toks[:, :8], 3)
+    out2 = qm2.serve(scfg).generate(toks[:, :8], 3)
+    np.testing.assert_array_equal(out1["tokens"], out2["tokens"])
+
+
+def _packed_items(tree, prefix=()):
+    out = []
+    for k in sorted(tree):
+        v = tree[k]
+        if isinstance(v, dict):
+            out.extend(_packed_items(v, prefix + (k,)))
+        elif is_packed(v):
+            out.append((prefix + (k,), v))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Layer-range heterogeneity inside one stacked leaf
+# ---------------------------------------------------------------------------
+
+
+def test_layer_heterogeneous_leaf_matches_per_layer_quantization(dense_setup):
+    from repro.core.fuse import fuse_rotations
+
+    arch, params, toks = dense_setup
+    cfg = arch.config
+    assert cfg.n_layers >= 2
+    pol = QuantPolicy(
+        rules=(SiteRule(pattern="*", layers=(0, 0), bits=4, group=32),
+               SiteRule(pattern="*", bits=2, group=32)),
+        rotation=RotationPlan(r1=RotationSpec(kind="GSR", group=32)),
+    )
+    qm = api.quantize(arch, params, pol)
+    w = qm.params["layers"]["w_down"]
+    assert w.bits == 4  # merged storage at the widest rule
+
+    r1, r2, _ = build_plan_rotations(cfg, params, pol)
+    fused = fuse_rotations(cfg, params, r1, r2=r2, spec=pol.spec())
+    for layer, rule in ((0, pol.rules[0]), (cfg.n_layers - 1, pol.rules[1])):
+        ref = PackedWeight.from_float(fused["layers"]["w_down"][layer],
+                                      rule.weight_cfg(w.c))
+        np.testing.assert_array_equal(np.asarray(w.dequantize()[layer]),
+                                      np.asarray(ref.dequantize()))
+
+    # the merged leaf still rides the scanned forward + a save/load cycle
+    lg = arch.forward(qm.params, {"tokens": jnp.asarray(toks)}, qm.spec)
+    assert np.isfinite(np.asarray(lg)).all()
+
+
+def test_heterogeneous_groups_share_finest_refinement(dense_setup):
+    arch, params, _ = dense_setup
+    pol = QuantPolicy(
+        rules=(SiteRule(pattern="*", layers=(0, 0), bits=4, group=32),
+               SiteRule(pattern="*", bits=4, group=16)),
+    )
+    qm = api.quantize(arch, params, pol)
+    w = qm.params["layers"]["w_down"]
+    assert w.group == 16  # scales stored at the finest group
+
+
+# ---------------------------------------------------------------------------
+# Per-site online rotations (R4) + R2 slot
+# ---------------------------------------------------------------------------
+
+
+def test_per_site_r4_fp_invariance(moe_setup):
+    """W16 policy with different online rotations per down-proj site:
+    fusion pre-rotations must cancel the online apply_r4 exactly."""
+    arch, params, toks = moe_setup
+    pol = QuantPolicy(
+        rules=(
+            SiteRule(pattern="shared_down", bits=16, rotation="GH"),
+            SiteRule(pattern="w_down", bits=16, rotation="GSR", group=16),
+            SiteRule(pattern="*", bits=16),
+        ),
+        rotation=RotationPlan(r1=RotationSpec(kind="GSR", group=32),
+                              r4_kind="I"),
+    )
+    spec = pol.spec()
+    assert spec.r4_for("shared_down")[0] == "GH"
+    assert spec.r4_for("w_down")[0] == "GSR"
+    assert spec.r4_for("anything_else")[0] == "I"
+
+    from repro.core.fuse import fuse_rotations
+    from repro.quant.pipeline import build_plan_rotations
+
+    r1, r2, _ = build_plan_rotations(arch.config, params, pol)
+    fused = fuse_rotations(arch.config, params, r1, r2=r2, spec=spec)
+    ref = arch.forward(params, {"tokens": jnp.asarray(toks)}, NOQUANT)
+    got = arch.forward(fused, {"tokens": jnp.asarray(toks)}, spec)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_qualified_pattern_rotation_override_applies():
+    """A slash-qualified rule pattern must still drive the online R4 at
+    its bare site name (apply_r4 call sites cannot know the tree path)."""
+    pol = QuantPolicy(
+        rules=(SiteRule(pattern="moe_mlp/w_down", bits=4, rotation="GSR",
+                        group=16),
+               SiteRule(pattern="*", bits=2, group=16)),
+        rotation=RotationPlan(r4_kind="GH"),
+    )
+    spec = pol.spec()
+    assert spec.r4_for("w_down")[0] == "GSR"
+    assert spec.r4_for("shared_down")[0] == "GH"  # plan default
+
+
+def test_r2_slot_fp_invariance(dense_setup):
+    arch, params, toks = dense_setup
+    pol = QuantPolicy(
+        rules=(SiteRule(pattern="*", bits=16),),
+        rotation=RotationPlan(r1=RotationSpec(kind="GSR", group=32), r2="GH",
+                              r4_kind="I"),
+    )
+    from repro.core.fuse import fuse_rotations
+
+    r1, r2, _ = build_plan_rotations(arch.config, params, pol)
+    assert r2 is not None
+    fused = fuse_rotations(arch.config, params, r1, r2=r2, spec=pol.spec())
+    ref = arch.forward(params, {"tokens": jnp.asarray(toks)}, NOQUANT)
+    got = arch.forward(fused, {"tokens": jnp.asarray(toks)}, pol.spec())
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_r2_rejected_for_mla():
+    arch = get_arch("minicpm3-4b", reduced=True)
+    params = arch.init(jax.random.PRNGKey(0), jnp.float32)
+    pol = QuantPolicy(
+        rules=(SiteRule(pattern="*", bits=4, group=16),),
+        rotation=RotationPlan(r2="GH"),
+    )
+    with pytest.raises(ValueError, match="per-head"):
+        api.quantize(arch, params, pol)
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous packed co-sharding
+# ---------------------------------------------------------------------------
+
+
+def test_heterogeneous_packed_leaves_co_shard(dense_setup):
+    from repro.dist.sharding import param_pspecs
+
+    arch, params, _ = dense_setup
+    qm = api.quantize(arch, params, MIXED)
+    sds = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                       qm.params)
+    specs = param_pspecs(arch.config, sds)
+    layers = specs["layers"]
+    # every packed leaf mirrors its logical weight's spec onto all three
+    # children regardless of bits/group heterogeneity across leaves
+    for name in ("w_down", "wq"):
+        leaf = layers[name]
+        assert is_packed(leaf)
+        assert leaf.codes == leaf.scale == leaf.zero
+        assert leaf.codes is not None
+
+
+# ---------------------------------------------------------------------------
+# Padded prefill (prompt-length bucketing satellite)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["smollm-135m", "deepseek-moe-16b",
+                                  "minicpm3-4b"])
+def test_padded_prefill_true_last_token(name):
+    arch = get_arch(name, reduced=True)
+    cfg = arch.config
+    params = arch.init(jax.random.PRNGKey(0), jnp.float32)
+    rng = np.random.default_rng(0)
+    s, pad_to = 11, 16
+    toks = rng.integers(0, cfg.vocab, (2, s)).astype(np.int32)
+
+    cache = arch.init_cache(2, 32, NOQUANT, jnp.float32)
+    lg_e, c_e = arch.prefill(params, {"tokens": jnp.asarray(toks)}, cache,
+                             NOQUANT)
+    padded = np.pad(toks, ((0, 0), (0, pad_to - s)))
+    cache = arch.init_cache(2, 32, NOQUANT, jnp.float32)
+    lg_p, c_p = arch.padded_prefill(params, {"tokens": jnp.asarray(padded)},
+                                    cache, jnp.asarray(s, jnp.int32), NOQUANT)
+    np.testing.assert_array_equal(np.asarray(lg_e), np.asarray(lg_p))
+    assert int(c_p["length"]) == s
+
+    nxt = np.argmax(np.asarray(lg_p)[:, 0], -1).astype(np.int32)
+    d_e, _ = arch.decode(params, jnp.asarray(nxt), c_e, NOQUANT)
+    d_p, _ = arch.decode(params, jnp.asarray(nxt), c_p, NOQUANT)
+    np.testing.assert_array_equal(np.asarray(d_e), np.asarray(d_p))
+
+
+def test_recurrent_families_have_no_padded_prefill():
+    assert get_arch("xlstm-1.3b", reduced=True).padded_prefill is None
+    assert get_arch("zamba2-1.2b", reduced=True).padded_prefill is None
+
+
+def test_engine_bucketed_prompts_token_identical(dense_setup):
+    arch, params, _ = dense_setup
+    qm = api.quantize(arch, params,
+                      PTQConfig(r1_kind="GSR", wakv="W4A8", method="rtn",
+                                group=32))
+    prompts = np.random.default_rng(1).integers(
+        0, arch.config.vocab, (3, 13)).astype(np.int32)
+    o1 = qm.serve(api.ServeConfig(max_seq=48, batch_slots=3)
+                  ).generate(prompts, 6)
+    o2 = qm.serve(api.ServeConfig(max_seq=48, batch_slots=3,
+                                  bucket_prompts=True)).generate(prompts, 6)
+    np.testing.assert_array_equal(o1["tokens"], o2["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# Explicit shard_map EP schedule for moe_apply
+# ---------------------------------------------------------------------------
+
+
+def test_moe_explicit_ep_matches_gspmd_on_mesh(moe_setup):
+    from jax.sharding import Mesh
+
+    from repro.models import moe as moe_mod
+
+    arch, params, toks = moe_setup
+    # 4 fake devices when available (standalone run: a real (2,2) mesh
+    # with a live all-to-all); a (1,1) mesh otherwise (full-suite run in
+    # the single-device container) — the shard_map schedule still runs,
+    # its collectives short-circuiting at ep == 1.
+    devs = jax.devices()
+    shape = (2, 2) if len(devs) >= 4 else (1, 1)
+    n = shape[0] * shape[1]
+    mesh = Mesh(np.array(devs[:n]).reshape(shape), ("data", "model"))
+    batch = {"tokens": jnp.asarray(np.tile(toks, (2, 1)))}  # B=4 divisible
+    with mesh:
+        ref = jax.jit(lambda p, b: arch.forward(p, b, NOQUANT))(params, batch)
+        with moe_mod.moe_ep_impl("explicit"):
+            got = jax.jit(lambda p, b: arch.forward(p, b, NOQUANT))(
+                params, batch)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_moe_explicit_ep_falls_back_off_mesh(moe_setup):
+    from repro.models import moe as moe_mod
+
+    arch, params, toks = moe_setup
+    ref = arch.forward(params, {"tokens": jnp.asarray(toks)}, NOQUANT)
+    with moe_mod.moe_ep_impl("explicit"):
+        got = arch.forward(params, {"tokens": jnp.asarray(toks)}, NOQUANT)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_pick_moe_ep_default_is_data_driven():
+    from repro.launch.dryrun import pick_moe_ep_default
+
+    win = {"explicit_ep": {"wire_bytes_per_layer": 100},
+           "gspmd_einsum": {"wire_bytes_per_layer": 200}}
+    lose = {"explicit_ep": {"wire_bytes_per_layer": 300},
+            "gspmd_einsum": {"wire_bytes_per_layer": 200}}
+    infeasible = {"explicit_ep": {"error": "ValueError(...)"},
+                  "gspmd_einsum": {"wire_bytes_per_layer": 200}}
+    assert pick_moe_ep_default(win) == "explicit"
+    assert pick_moe_ep_default(lose) == "gspmd"
+    assert pick_moe_ep_default(infeasible) == "gspmd"
+    assert pick_moe_ep_default({"error": "boom"}) == "gspmd"
