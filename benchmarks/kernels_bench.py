@@ -91,6 +91,9 @@ def run(quiet: bool = False):
             "interpreted": backend == "pallas" and jax.default_backend() != "tpu",
         })
 
+    rows.extend(_paged_attention_rows())
+    rows.extend(_decode_tick_rows())
+
     if not quiet:
         for r in rows:
             ai = r["flops"] / r["hbm_bytes"]
@@ -99,6 +102,126 @@ def run(quiet: bool = False):
     os.makedirs("results", exist_ok=True)
     with open("results/kernels_bench.json", "w") as f:
         json.dump(rows, f, indent=1)
+    return rows
+
+
+def _paged_attention_rows():
+    """Paged decode attention: the fused block-table kernel vs the
+    gather-into-view baseline, float and KV4 pages.
+
+    The hardware-independent signal is ``copied_bytes`` — the per-tick
+    contiguous view the gather path materializes (and scatters back)
+    that the fused path never builds — plus ``kv_bytes_read``: the fused
+    kernel touches only the blocks holding real tokens."""
+    from repro.kernels import ops as kops
+    from repro.models import common
+
+    s, mb, t, kv, rep, hd = 8, 8, 16, 4, 4, 64
+    nb = s * mb + 1
+    h = kv * rep
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(s, kv, rep, hd)).astype(np.float32))
+    tables = jnp.asarray(1 + np.arange(s * mb).reshape(s, mb), jnp.int32)
+    lengths = jnp.asarray(
+        rng.integers(t, mb * t - 1, size=(s,)).astype(np.int32))
+    knew = jnp.asarray(rng.normal(size=(s, kv, hd)).astype(np.float32))
+    vnew = jnp.asarray(rng.normal(size=(s, kv, hd)).astype(np.float32))
+
+    def pages(dtype):
+        return jnp.asarray(
+            rng.normal(size=(1, nb, t, kv, hd)), jnp.float32).astype(dtype)
+
+    def scales():
+        return jnp.abs(jnp.asarray(
+            rng.normal(size=(1, nb, t, kv)), jnp.float32))
+
+    rows = []
+    flops = 4 * s * h * mb * t * hd  # qk + pv over the full view
+    for tag, kvq in (("float", False), ("kv4", True)):
+        per_tok = kv * hd * (1 if kvq else 4) + (kv * 8 if kvq else 0)
+        view_bytes = 2 * s * mb * t * per_tok  # k + v contiguous views
+        if kvq:
+            kp = ((pages(jnp.uint8), scales(), scales()),)
+            vp = ((pages(jnp.uint8), scales(), scales()),)
+            k_new = (knew.astype(jnp.uint8), jnp.ones((s, kv)),
+                     jnp.zeros((s, kv)))
+            v_new = (vnew.astype(jnp.uint8), jnp.ones((s, kv)),
+                     jnp.zeros((s, kv)))
+        else:
+            kp, vp = ((pages(jnp.float32),),), ((pages(jnp.float32),),)
+            k_new, v_new = (knew,), (vnew,)
+
+        fused = jax.jit(lambda kp=kp[0], vp=vp[0]: kops.paged_attention(
+            q, tables, lengths, 0, kp, vp, None, k_new, v_new, None)[0])
+        us = timeit(fused, iters=3)
+        valid_bytes = 2 * int(np.asarray(lengths).sum()) * per_tok
+        rows.append({
+            "name": f"paged_attention[fused]({tag})", "us": us,
+            "hbm_bytes": s * h * hd * 4 + valid_bytes + s * h * hd * 4,
+            "flops": flops, "copied_bytes": 0,
+            "kv_bytes_read": valid_bytes,
+            "interpreted": jax.default_backend() != "tpu"})
+
+        def gather(kp=kp[0], vp=vp[0]):
+            def view(pgs):
+                g = jnp.take(pgs[0][0], tables, axis=0)
+                g = g.reshape(s, mb * t, kv, hd)
+                if not kvq:
+                    return g.astype(jnp.float32)
+                sc = jnp.take(pgs[1][0], tables, axis=0).reshape(s, mb * t, kv)
+                zr = jnp.take(pgs[2][0], tables, axis=0).reshape(s, mb * t, kv)
+                return (g.astype(jnp.float32) - zr[..., None]) * sc[..., None]
+            return common.decode_attention(
+                q.reshape(s, 1, h, hd), view(kp), view(vp),
+                lengths[:, None, None, None])
+
+        us = timeit(jax.jit(gather), iters=3)
+        rows.append({
+            "name": f"paged_attention[gather]({tag})", "us": us,
+            "hbm_bytes": s * h * hd * 4 + 2 * view_bytes + s * h * hd * 4,
+            "flops": flops, "copied_bytes": view_bytes,
+            "kv_bytes_read": view_bytes})
+    return rows
+
+
+def _decode_tick_rows():
+    """End-to-end serving decode tick (all pool slots, smollm reduced):
+    fused paged path vs the gather/scatter baseline, float + KV4 pools.
+    ``copied_bytes`` is the per-tick gather+scatter traffic the fused
+    path removes (both directions, every paged leaf)."""
+    from repro.models.common import QuantizeSpec
+    from repro.models.registry import get_arch
+    from repro.serve.engine import ServeConfig, ServeEngine
+
+    arch = get_arch("smollm-135m", reduced=True)
+    params = arch.init(jax.random.PRNGKey(0), jnp.float32)
+    rng = np.random.default_rng(0)
+    rows = []
+    for tag, spec in (("float", None), ("kv4", QuantizeSpec(kv_bits=4))):
+        for mode, pk in (("fused", True), ("gather", False)):
+            scfg = ServeConfig(max_seq=64, batch_slots=4, block_tokens=8,
+                               paged_kernel=pk)
+            args = (spec,) if spec is not None else ()
+            eng = ServeEngine(arch, params, scfg, *args)
+            for _ in range(scfg.batch_slots):
+                eng.submit(rng.integers(0, arch.config.vocab, size=(12,)
+                                        ).astype(np.int32), 48)
+            eng.step()  # admit + one decode: compiles the tick
+            pool = eng.pool
+            view_bytes = sum(
+                2 * np.dtype(a.dtype).itemsize * pool.n_slots
+                * int(np.prod(a.shape)) // pool.n_blocks * pool.blocks_per_slot
+                for a in pool.paged.values())
+            tokens = np.zeros((pool.n_slots,), np.int32)
+            us = timeit(
+                lambda: eng.pool_step(tokens, pool.lengths, pool.tables),
+                iters=3)
+            rows.append({
+                "name": f"decode_tick[{mode}]({tag})", "us": us,
+                "hbm_bytes": max(view_bytes, 1),
+                "flops": 1,  # model flops dominated; bytes are the signal
+                "copied_bytes": 0 if pk else view_bytes,
+                "interpreted": pk and jax.default_backend() != "tpu"})
     return rows
 
 

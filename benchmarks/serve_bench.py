@@ -50,9 +50,11 @@ def _trace(cfg, n):
                            max_new_high=MAX_NEW)
 
 
-def _bench_continuous(qm, backend, n_requests):
+def _bench_continuous(qm, backend, n_requests, *, steps_per_sync=1,
+                      name=None):
     eng = qm.serve(api.ServeConfig(max_seq=MAX_SEQ, batch_slots=SLOTS,
-                                   block_tokens=BLOCK_TOKENS),
+                                   block_tokens=BLOCK_TOKENS,
+                                   steps_per_sync=steps_per_sync),
                    backend=backend)
     trace = _trace(qm.config, n_requests)
     # warm the compile caches outside the timed window, then reset counters
@@ -61,6 +63,7 @@ def _bench_continuous(qm, backend, n_requests):
     eng.scheduler.decode_steps = 0
     eng.scheduler.busy_slot_steps = 0
     eng.scheduler.tokens_generated = 0
+    eng.scheduler.host_syncs = 0
     t0 = time.perf_counter()
     for r in trace:
         eng.scheduler.submit(r)
@@ -69,13 +72,37 @@ def _bench_continuous(qm, backend, n_requests):
     agg = eng.scheduler.metrics()["aggregate"]
     tokens = sum(len(r.tokens) for r in trace)
     return {
-        "name": f"{backend}/continuous",
+        "name": name or f"{backend}/continuous",
         "tokens": tokens,
         "wall_s": wall,
         "tokens_per_s": tokens / wall,
         "utilisation": agg["slot_utilisation"],
         "decode_steps": agg["decode_steps"],
+        "host_syncs": agg["host_syncs"],
+        "steps_per_sync": steps_per_sync,
     }
+
+
+def sync_sweep(qm, backend="reference", n_requests=24,
+               intervals=(1, 2, 4, 8), quiet=False):
+    """tokens/s and host-sync count vs ``ServeConfig.steps_per_sync``.
+
+    ``steps_per_sync=1`` is the classic one-sync-per-token scheduler; the
+    in-graph window divides the decode-path host syncs by ~N at identical
+    tokens and decode steps.  On CPU the wall-clock delta understates the
+    TPU win (interpret-mode kernels dominate); ``host_syncs`` is the
+    hardware-independent signal."""
+    rows = []
+    for w in intervals:
+        r = _bench_continuous(qm, backend, n_requests, steps_per_sync=w,
+                              name=f"{backend}/sync{w}")
+        rows.append(r)
+        if not quiet:
+            print(f"  [serve_bench] steps_per_sync={w}: "
+                  f"{r['tokens_per_s']:.1f} tok/s, {r['host_syncs']} host "
+                  f"syncs / {r['decode_steps']} decode steps "
+                  f"({r['tokens']} tokens)")
+    return rows
 
 
 def _bench_static(qm, backend, n_requests):
@@ -121,6 +148,9 @@ def run(quiet: bool = False, fast: bool = False):
                       f"{r['tokens_per_s']:.1f} tok/s, "
                       f"utilisation {r['utilisation']:.2f} "
                       f"({r['decode_steps']} decode steps)")
+    rows.extend(sync_sweep(qm, "reference", n_requests,
+                           intervals=(1, 4) if fast else (1, 2, 4, 8),
+                           quiet=quiet))
     os.makedirs("results", exist_ok=True)
     with open("results/serve_bench.json", "w") as f:
         json.dump({"arch": ARCH, "slots": SLOTS, "trace_seed": TRACE_SEED,
@@ -128,7 +158,30 @@ def run(quiet: bool = False, fast: bool = False):
     return rows
 
 
-if __name__ == "__main__":
-    import sys
+def main(argv=None):
+    import argparse
 
-    run(fast="--fast" in sys.argv)
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--sync-interval", type=str, default=None, metavar="LIST",
+                    help="run only the steps_per_sync sweep over this "
+                    "comma-separated list (e.g. 1,2,4,8)")
+    args = ap.parse_args(argv)
+    if args.sync_interval is None:
+        run(fast=args.fast)
+        return
+    arch = get_arch(ARCH, reduced=True)
+    params = arch.init(jax.random.PRNGKey(0), jnp.float32)
+    qm = api.quantize(arch, params,
+                      api.PTQConfig(r1_kind="GSR", wakv="W4A8", method="rtn",
+                                    group=32))
+    intervals = tuple(int(x) for x in args.sync_interval.split(","))
+    rows = sync_sweep(qm, "reference", 24 if args.fast else 40,
+                      intervals=intervals)
+    os.makedirs("results", exist_ok=True)
+    with open("results/serve_bench_sync.json", "w") as f:
+        json.dump({"arch": ARCH, "slots": SLOTS, "rows": rows}, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

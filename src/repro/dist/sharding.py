@@ -238,6 +238,21 @@ def pool_pspecs(cfg, pool_sds, dp_axes: Sequence[str], *,
                         model_size=model_size)
 
 
+def step_input_pspecs(tree_sds):
+    """Replicated specs for the decode-tick control inputs.
+
+    The fused no-gather layout keeps KV *blocks* sharded in place
+    (:func:`pool_pspecs`) while the per-tick control state — tokens,
+    per-slot lengths, the block table, and the in-graph window's
+    stop/count/alive vectors — is tiny and consulted by every shard (the
+    paged kernel walks the table against its local block shard; the
+    sampler masks every slot).  Replicating it explicitly keeps the
+    fused step's placement deterministic instead of letting jit infer a
+    sharding from whatever device the host arrays landed on.
+    """
+    return jax.tree.map(lambda _: P(), tree_sds)
+
+
 # ---------------------------------------------------------------------------
 # Token batches
 # ---------------------------------------------------------------------------

@@ -20,6 +20,14 @@ pure-jnp oracle in :mod:`repro.kernels.ref`:
                           pass (half the HBM traffic of the two-kernel
                           pipeline; only possible because GSR's rotation
                           group coincides with the quantization group).
+  * ``paged_attention`` - fused paged decode attention over the serving
+                          pool's block table (in-place block reads,
+                          in-kernel KV dequant, in-kernel new-token
+                          append — the no-gather decode hot path).
+
+Block sizes are resolved through :mod:`repro.kernels.autotune` — a
+measure-and-cache JSON table keyed by shape x dtype x backend, with the
+shipped defaults as the interpret-mode fallback.
 
 All kernels are written against ``pl.pallas_call`` with explicit BlockSpec
 VMEM tiling for TPU as the *target*, and validated on CPU in interpret

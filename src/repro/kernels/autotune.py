@@ -1,0 +1,273 @@
+"""Measure-and-cache block-size autotuning for the Pallas kernels.
+
+The kernels ship with conservative default block sizes that are correct
+everywhere but tuned nowhere.  This harness closes the loop: on a real
+backend it times each candidate block configuration for the exact
+(shape, dtype) it is asked about, picks the fastest, and persists the
+choice in a JSON table so every later process (and every later PR) gets
+the tuned value for free.
+
+Key structure: ``op -> "shape|dtype|backend" -> {param: value}``, e.g.
+
+    {"dequant_matmul": {"(512, 4096, 1024)|f32|tpu":
+        {"block_m": 512, "block_n": 256, "us": 113.2}}}
+
+Lookup order (``best``):
+
+1. table hit -> use the cached choice: exact shape|dtype|backend first,
+   else the same shape|dtype measured on another backend (tpu preferred)
+   — which is how a table measured on TPU rides into CPU CI unchanged,
+   and how tests inject known values;
+2. no hit, measurable backend (``tpu``/``gpu``) -> time every candidate,
+   cache + persist the winner;
+3. no hit, interpret-mode backend (CPU) -> the caller's defaults —
+   interpret wall time reflects the emulator, not the hardware, so
+   measuring would poison the table.
+
+The cache file lives at ``$REPRO_AUTOTUNE_CACHE`` (default
+``~/.cache/repro/autotune.json``).  Regenerate on hardware with::
+
+    python -m repro.kernels.autotune            # tune all registered ops
+    python -m repro.kernels.autotune --op fwht  # one op
+"""
+from __future__ import annotations
+
+import itertools
+import json
+import os
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+_TABLE: Optional[Dict] = None  # lazy-loaded in-memory cache
+
+
+def cache_path() -> str:
+    return os.environ.get(
+        "REPRO_AUTOTUNE_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                     "autotune.json"),
+    )
+
+
+def _backend() -> str:
+    return jax.default_backend()
+
+
+def measurable() -> bool:
+    """Interpret-mode backends must not write measurements (see module doc)."""
+    return _backend() in ("tpu", "gpu")
+
+
+def load_table(path: Optional[str] = None) -> Dict:
+    global _TABLE
+    if _TABLE is None or path is not None:
+        p = path or cache_path()
+        try:
+            with open(p) as f:
+                _TABLE = json.load(f)
+        except (OSError, ValueError):
+            _TABLE = {}
+    return _TABLE
+
+
+def save_table(path: Optional[str] = None) -> str:
+    p = path or cache_path()
+    os.makedirs(os.path.dirname(p) or ".", exist_ok=True)
+    tmp = p + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(load_table(), f, indent=1, sort_keys=True)
+    os.replace(tmp, p)
+    return p
+
+
+def reset_cache() -> None:
+    """Drop the in-memory table (tests; env-var repoints the file)."""
+    global _TABLE
+    _TABLE = None
+
+
+def key_for(shapes: Sequence[int], dtype) -> str:
+    dt = jax.numpy.dtype(dtype).name if dtype is not None else "-"
+    return f"{tuple(int(s) for s in shapes)}|{dt}|{_backend()}"
+
+
+def _time_call(fn: Callable, iters: int = 5) -> float:
+    out = fn()
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def record(op: str, key: str, choice: Dict) -> None:
+    load_table().setdefault(op, {})[key] = dict(choice)
+
+
+def lookup(op: str, key: str) -> Optional[Dict]:
+    """Exact ``shape|dtype|backend`` hit, else the same shape|dtype entry
+    measured on another backend (tpu preferred) — this is what lets a
+    table regenerated on TPU ride into CPU CI unchanged."""
+    entries = load_table().get(op, {})
+    hit = entries.get(key)
+    if hit:
+        return dict(hit)
+    prefix = key.rsplit("|", 1)[0]
+    for backend in ("tpu", "gpu", "cpu"):
+        hit = entries.get(f"{prefix}|{backend}")
+        if hit:
+            return dict(hit)
+    return None
+
+
+def best(
+    op: str,
+    shapes: Sequence[int],
+    dtype,
+    defaults: Dict,
+    candidates: Optional[Sequence[Dict]] = None,
+    measure: Optional[Callable[[Dict], Callable]] = None,
+) -> Dict:
+    """The tuned block config for ``op`` at this shape/dtype/backend.
+
+    ``measure(params) -> thunk`` builds a zero-arg callable running the
+    kernel with candidate ``params``; it is only invoked on measurable
+    backends with no cached entry.  The returned dict always contains at
+    least the keys of ``defaults``.
+    """
+    key = key_for(shapes, dtype)
+    hit = lookup(op, key)
+    if hit is not None:
+        return {**defaults, **{k: v for k, v in hit.items() if k in defaults}}
+    if not measurable() or not candidates or measure is None:
+        return dict(defaults)
+    best_params, best_us = dict(defaults), float("inf")
+    for params in candidates:
+        try:
+            us = _time_call(measure(params))
+        except Exception:  # candidate doesn't fit (VMEM, divisibility): skip
+            continue
+        if us < best_us:
+            best_params, best_us = dict(params), us
+    choice = dict(best_params)
+    if best_us < float("inf"):
+        choice["us"] = round(best_us, 2)
+    record(op, key, choice)
+    save_table()
+    return {**defaults, **best_params}
+
+
+def grid(**axes: Sequence) -> List[Dict]:
+    """Cartesian candidate grid: ``grid(block_m=(128, 256), ...)``."""
+    names = list(axes)
+    return [dict(zip(names, vals))
+            for vals in itertools.product(*(axes[n] for n in names))]
+
+
+# ---------------------------------------------------------------------------
+# Registered tuning entry points (the CLI sweeps these on hardware)
+# ---------------------------------------------------------------------------
+
+
+def tune_fwht(shapes: Tuple[int, int] = (4096, 4096)) -> Dict:
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels.fwht import default_block_m, fwht_pallas
+
+    m, d = shapes
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(m, d)), jnp.float32)
+    return best(
+        "fwht", (m, d), x.dtype, {"block_m": default_block_m(d)},
+        candidates=grid(block_m=(64, 128, 256, 512)),
+        measure=lambda p: lambda: fwht_pallas(
+            x, block_m=p["block_m"], interpret=not measurable()),
+    )
+
+
+def tune_dequant_matmul(shapes: Tuple[int, int, int] = (512, 4096, 4096),
+                        bits: int = 4, group: int = 128) -> Dict:
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels.dequant_matmul import dequant_matmul_pallas
+    from repro.quant import pack, rtn
+    from repro.quant.qtypes import QuantConfig
+
+    m, c, h = shapes
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(m, c)), jnp.float32)
+    qt = pack.pack(rtn.quantize_weight_grouped(
+        jnp.asarray(rng.normal(size=(c, h)), jnp.float32),
+        QuantConfig(bits=bits, group=group, symmetric=False)))
+    return best(
+        "dequant_matmul", (m, c, h), x.dtype,
+        {"block_m": 256, "block_n": 256},
+        candidates=grid(block_m=(128, 256, 512), block_n=(128, 256, 512)),
+        measure=lambda p: lambda: dequant_matmul_pallas(
+            x, qt, block_m=p["block_m"], block_n=p["block_n"],
+            interpret=not measurable()),
+    )
+
+
+def tune_paged_attention(n_slots: int = 8, pages: int = 32,
+                         page_tokens: int = 16, kv: int = 4, rep: int = 4,
+                         hd: int = 64) -> Dict:
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels.paged_attention import paged_attention_pallas
+
+    rng = np.random.default_rng(0)
+    nb = n_slots * pages + 1
+    q = jnp.asarray(rng.normal(size=(n_slots, kv, rep, hd)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(1, nb, page_tokens, kv, hd)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(1, nb, page_tokens, kv, hd)), jnp.float32)
+    knew = jnp.asarray(rng.normal(size=(n_slots, kv, hd)), jnp.float32)
+    tables = jnp.asarray(
+        1 + np.arange(n_slots * pages).reshape(n_slots, pages), jnp.int32)
+    lengths = jnp.full((n_slots,), pages * page_tokens - 1, jnp.int32)
+
+    def run(p):
+        def thunk():
+            out, _ = paged_attention_pallas(
+                q, tables, lengths, 0, (kp,), (vp,), None, (knew,), (knew,),
+                None, block_pages=p["block_pages"],
+                interpret=not measurable())
+            return out
+        return thunk
+
+    return best(
+        "paged_attention", (n_slots, pages, page_tokens, kv, rep, hd),
+        q.dtype, {"block_pages": 1},
+        candidates=grid(block_pages=(1, 2, 4, 8)),
+        measure=run,
+    )
+
+
+TUNERS = {
+    "fwht": tune_fwht,
+    "dequant_matmul": tune_dequant_matmul,
+    "paged_attention": tune_paged_attention,
+}
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--op", choices=sorted(TUNERS), default=None,
+                    help="tune one op (default: all)")
+    args = ap.parse_args(argv)
+    if not measurable():
+        print(f"[autotune] backend {_backend()!r} is interpret-mode; "
+              "defaults apply and nothing is measured. Run on TPU/GPU.")
+    for name in ([args.op] if args.op else sorted(TUNERS)):
+        choice = TUNERS[name]()
+        print(f"[autotune] {name}: {choice}")
+    if measurable():
+        print(f"[autotune] table written to {save_table()}")
+
+
+if __name__ == "__main__":
+    main()

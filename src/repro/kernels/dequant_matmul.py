@@ -95,13 +95,26 @@ def dequant_matmul_pallas(
     x: jax.Array,
     qt: QuantizedTensor,
     *,
-    block_m: int = 256,
-    block_n: int = 256,
+    block_m: int | None = None,
+    block_n: int | None = None,
     interpret: bool = True,
 ) -> jax.Array:
-    """y = x @ dequant(qt); qt must be packed. Returns x.dtype."""
+    """y = x @ dequant(qt); qt must be packed. Returns x.dtype.
+
+    ``block_m``/``block_n`` default to the autotuned choice for this
+    (M, C, H) shape (measured table, see :mod:`repro.kernels.autotune`)
+    falling back to the conservative 256x256 tiles.
+    """
     if not qt.packed:
         raise ValueError("dequant_matmul_pallas requires packed codes")
+    if block_m is None or block_n is None:
+        from repro.kernels import autotune
+
+        tuned = autotune.best(
+            "dequant_matmul", (x.shape[0], x.shape[1], qt.codes.shape[1]),
+            x.dtype, {"block_m": 256, "block_n": 256})
+        block_m = block_m or tuned["block_m"]
+        block_n = block_n or tuned["block_n"]
     asym = qt.zero is not None
     zero = qt.zero if asym else jnp.zeros_like(qt.scale)
     out = _dequant_matmul_impl(

@@ -57,7 +57,14 @@ def fwht_pallas(
     m, d = x.shape
     if not is_pow2(d):
         raise ValueError(f"D must be a power of two, got {d}")
-    bm = block_m or min(default_block_m(d), m)
+    if block_m is None:
+        from repro.kernels import autotune
+
+        # measured-on-hardware row-stripe height; VMEM-budget heuristic
+        # default everywhere the table has no entry (trace-time lookup).
+        block_m = autotune.best("fwht", (m, d), x.dtype,
+                                {"block_m": default_block_m(d)})["block_m"]
+    bm = min(block_m, m)
     pad = (-m) % bm
     if pad:
         x = jnp.pad(x, ((0, pad), (0, 0)))

@@ -56,6 +56,33 @@ def rtn_fake_quant(
     return out.reshape(*lead, -1)
 
 
+def paged_attention(q, tables, lengths, layer, k_pages, v_pages, k2_pages,
+                    k_new, v_new, k2_new, *, window: int = 0,
+                    scale=None, v_is_k1: bool = False):
+    """Fused paged decode attention + new-token append over pool blocks.
+
+    See :func:`repro.kernels.paged_attention.paged_attention_pallas`;
+    this wrapper resolves quantization flags from the tuple arity and the
+    autotuned ``block_pages`` for the shape at hand.
+    """
+    from repro.kernels import autotune
+    from repro.kernels.paged_attention import paged_attention_pallas
+
+    s, kv, rep, dk = q.shape
+    mb = tables.shape[1]
+    t = k_pages[0].shape[2]
+    bp = autotune.best(
+        "paged_attention", (s, mb, t, kv, rep, dk), q.dtype,
+        {"block_pages": 1})["block_pages"]
+    return paged_attention_pallas(
+        q, tables, lengths, layer, tuple(k_pages),
+        None if v_pages is None else tuple(v_pages), k2_pages,
+        tuple(k_new), None if v_new is None else tuple(v_new), k2_new,
+        window=window, scale=scale, quant_k=len(k_pages) == 3,
+        quant_v=v_pages is not None and len(v_pages) == 3,
+        v_is_k1=v_is_k1, block_pages=min(bp, mb), interpret=INTERPRET)
+
+
 def gsr_rotate_quant(
     x: jax.Array, blocks: jax.Array, *, bits: int = 4, clip_ratio: float = 0.9
 ) -> jax.Array:

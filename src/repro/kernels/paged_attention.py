@@ -1,0 +1,324 @@
+"""Fused paged decode-attention Pallas kernel over the KV-pool block table.
+
+One grid program per decode slot.  The program walks the slot's block
+table directly: each KV block is loaded from pool storage *in place*
+(``pl.load`` at the table-indexed block id — no host-side gather into a
+contiguous per-slot view, no scatter back), the new token's K/V are
+appended to the right block through an aliased output, and attention
+runs as a flash-style running softmax over the valid tokens only
+(``ceil(length / T)`` blocks, not the worst-case view).
+
+Pool storage arrives *stacked over layers* — ``(L, n_blocks, T, KV, d)``
+— with the current layer index as a scalar input, so the caller's
+layer scan passes the whole pool through unchanged (XLA aliases the
+donated carry; the kernel touches only the blocks the table names).
+
+Quantized KV blocks (uint8 codes + per-token scale/zero, the
+``quant.kv_cache`` layout) are dequantized in-register right after the
+block load — the packed pool bytes are the only KV HBM traffic, which
+is the paper's low-bit-KV deployment story: R3/GSR-rotated KV lives in
+HBM at 4-8 bits and is consumed inside the attention kernel instead of
+being materialized twice per tick.  The new token arrives pre-quantized
+(codes+scale+zero) so the score it contributes matches the
+quantize→dequantize roundtrip the reference path computes.
+
+MLA's absorbed decode maps onto the same kernel: KV-heads = 1, the
+query is ``concat(q_latent, q_rope)`` per head, K is the latent block
+(optionally quantized) concatenated with a *second* float block source
+(the RoPE key, ``k2``), and V aliases the dequantized latent
+(``v_is_k1``) — so one kernel serves dense/GQA, MoE, Zamba's hybrid KV
+half, and MLA.
+
+TPU deployment note: block shapes here keep the full pool resident
+(interpret-mode semantics; fine on CPU and for pool sizes within VMEM).
+On a real TPU the pool refs move to ``pltpu.ANY`` memory space with
+explicit per-block DMA — the grid, table walk, and running-softmax body
+are unchanged.  ``block_pages`` (how many T-token blocks each inner
+iteration consumes) is the measured-autotune knob
+(:mod:`repro.kernels.autotune`).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _dequant(codes, scale, zero):
+    """codes (..., d) uint8, scale/zero (...,) f32 -> f32 values."""
+    return (codes.astype(jnp.float32) - zero[..., None]) * scale[..., None]
+
+
+def _paged_attn_kernel(
+    *refs,
+    n_pages: int,
+    page_tokens: int,
+    block_pages: int,
+    window: int,
+    scale: float,
+    quant_k: bool,
+    quant_v: bool,
+    has_k2: bool,
+    v_is_k1: bool,
+):
+    """Grid (n_slots,). See ``paged_attention_pallas`` for the ref layout."""
+    it = iter(refs)
+    nxt = lambda: next(it)
+    tbl_ref, len_ref, layer_ref, q_ref = nxt(), nxt(), nxt(), nxt()
+    k_ref = nxt()
+    ks_ref, kz_ref = (nxt(), nxt()) if quant_k else (None, None)
+    k2_ref = nxt() if has_k2 else None
+    if v_is_k1:
+        v_ref, vs_ref, vz_ref = None, None, None
+    else:
+        v_ref = nxt()
+        vs_ref, vz_ref = (nxt(), nxt()) if quant_v else (None, None)
+    kn_ref = nxt()
+    kns_ref, knz_ref = (nxt(), nxt()) if quant_k else (None, None)
+    k2n_ref = nxt() if has_k2 else None
+    if v_is_k1:
+        vn_ref, vns_ref, vnz_ref = None, None, None
+    else:
+        vn_ref = nxt()
+        vns_ref, vnz_ref = (nxt(), nxt()) if quant_v else (None, None)
+    o_ref = nxt()
+    out_writes = list(it)  # aliased page outputs, same order as page inputs
+
+    t = page_tokens
+    length = len_ref[0]
+    layer = layer_ref[0]
+    kv, rep, dk = q_ref.shape[1:]
+    d1 = k_ref.shape[-1]
+    dv = o_ref.shape[-1]
+    q = q_ref[0].astype(jnp.float32) * scale  # (KV, rep, dk)
+
+    def load_page(ref, blk):
+        """(L, NB, T, KV, d) | (L, NB, T, KV) at [layer, blk] -> block."""
+        idx = (pl.dslice(layer, 1), pl.dslice(blk, 1)) + tuple(
+            pl.dslice(0, s) for s in ref.shape[2:]
+        )
+        return pl.load(ref, idx)[0, 0]
+
+    def load_kv_page(blk):
+        """-> k (T, KV, dk) f32 (k2 concatenated), v (T, KV, dv) f32."""
+        if quant_k:
+            k = _dequant(load_page(k_ref, blk), load_page(ks_ref, blk),
+                         load_page(kz_ref, blk))
+        else:
+            k = load_page(k_ref, blk).astype(jnp.float32)
+        if v_is_k1:
+            v = k[..., :dv]
+        elif quant_v:
+            v = _dequant(load_page(v_ref, blk), load_page(vs_ref, blk),
+                         load_page(vz_ref, blk))
+        else:
+            v = load_page(v_ref, blk).astype(jnp.float32)
+        if has_k2:
+            k = jnp.concatenate([k, load_page(k2_ref, blk).astype(jnp.float32)],
+                                axis=-1)
+        return k, v
+
+    def accumulate(carry, sc, v, valid):
+        """One running-softmax update. sc (KV,rep,n) f32, v (n,KV,dv)."""
+        m, l, acc = carry
+        sc = jnp.where(valid[None, None, :], sc, NEG_INF)
+        m2 = jnp.maximum(m, sc.max(-1))
+        p = jnp.exp(sc - m2[..., None])
+        corr = jnp.exp(m - m2)
+        l2 = l * corr + p.sum(-1)
+        acc2 = acc * corr[..., None] + jnp.einsum(
+            "grt,tgd->grd", p, v, preferred_element_type=jnp.float32)
+        return m2, l2, acc2
+
+    init = (
+        jnp.full((kv, rep), NEG_INF, jnp.float32),
+        jnp.zeros((kv, rep), jnp.float32),
+        jnp.zeros((kv, rep, dv), jnp.float32),
+    )
+
+    pages_needed = (length + t - 1) // t  # only blocks holding real tokens
+    u = block_pages
+    n_iter = (pages_needed + u - 1) // u
+
+    def body(i, carry):
+        for uu in range(u):  # static unroll of block_pages pages
+            jj = i * u + uu
+            # overrun pages of the last unrolled chunk: clamp the table
+            # read in bounds but keep positions unclamped so the
+            # `kpos < length` mask discards the duplicate load entirely
+            blk = tbl_ref[0, jnp.minimum(jj, n_pages - 1)]
+            k, v = load_kv_page(blk)
+            sc = jnp.einsum("grd,tgd->grt", q, k,
+                            preferred_element_type=jnp.float32)
+            kpos = jj * t + jnp.arange(t)
+            valid = kpos < length
+            if window:
+                valid &= kpos >= length + 1 - window
+            carry = accumulate(carry, sc, v, valid)
+        return carry
+
+    m, l, acc = jax.lax.fori_loop(0, n_iter, body, init)
+
+    # --- the freshly produced token (position `length`) -------------------
+    # Float pages: round through the page dtype first — the baseline
+    # stores the token then attends over the *stored* value, so the
+    # fused score must see the same rounding (bf16 pools).
+    if quant_k:
+        knew = _dequant(kn_ref[0], kns_ref[0], knz_ref[0])  # (KV, d1)
+    else:
+        knew = kn_ref[0].astype(k_ref.dtype).astype(jnp.float32)
+    if v_is_k1:
+        vnew = knew[..., :dv]
+    elif quant_v:
+        vnew = _dequant(vn_ref[0], vns_ref[0], vnz_ref[0])
+    else:
+        vnew = vn_ref[0].astype(v_ref.dtype).astype(jnp.float32)
+    kq = jnp.concatenate(
+        [knew, k2n_ref[0].astype(k2_ref.dtype).astype(jnp.float32)], -1) \
+        if has_k2 else knew
+    sc = jnp.einsum("grd,gd->gr", q, kq,
+                    preferred_element_type=jnp.float32)[..., None]
+    m, l, acc = accumulate((m, l, acc), sc, vnew[None], jnp.ones((1,), bool))
+
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(o_ref.dtype)
+
+    # --- append the new token to its block (aliased in-place write) -------
+    blk = tbl_ref[0, length // t]
+    off = length % t
+
+    def store_page(out, val):
+        idx = (pl.dslice(layer, 1), pl.dslice(blk, 1), pl.dslice(off, 1)) + \
+            tuple(pl.dslice(0, s) for s in out.shape[3:])
+        pl.store(out, idx, val[None, None, None].astype(out.dtype))
+
+    writes = iter(out_writes)
+    store_page(next(writes), kn_ref[0])
+    if quant_k:
+        store_page(next(writes), kns_ref[0])
+        store_page(next(writes), knz_ref[0])
+    if has_k2:
+        store_page(next(writes), k2n_ref[0])
+    if not v_is_k1:
+        store_page(next(writes), vn_ref[0])
+        if quant_v:
+            store_page(next(writes), vns_ref[0])
+            store_page(next(writes), vnz_ref[0])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "scale", "quant_k", "quant_v", "v_is_k1",
+                     "block_pages", "interpret"),
+)
+def paged_attention_pallas(
+    q: jax.Array,
+    tables: jax.Array,
+    lengths: jax.Array,
+    layer: jax.Array,
+    k_pages: Tuple[jax.Array, ...],
+    v_pages: Optional[Tuple[jax.Array, ...]],
+    k2_pages: Optional[jax.Array],
+    k_new: Tuple[jax.Array, ...],
+    v_new: Optional[Tuple[jax.Array, ...]],
+    k2_new: Optional[jax.Array],
+    *,
+    window: int = 0,
+    scale: Optional[float] = None,
+    quant_k: bool = False,
+    quant_v: bool = False,
+    v_is_k1: bool = False,
+    block_pages: int = 1,
+    interpret: bool = True,
+):
+    """Fused append-and-attend over paged pool storage.
+
+    Args:
+      q: ``(S, KV, rep, dk)`` queries (one decode token per slot).
+      tables: ``(S, MB)`` int32 block table (scratch id 0 for unbacked).
+      lengths: ``(S,)`` int32 — tokens already cached per slot; the new
+        token is written at this position and included in attention.
+      layer: scalar int32 — which layer of the stacked pool to touch.
+      k_pages: ``(pages,)`` or ``(codes, scale, zero)`` when ``quant_k``;
+        pages ``(L, NB, T, KV, d1)``, scales ``(L, NB, T, KV)``.
+      v_pages: like ``k_pages`` (``quant_v``); None with ``v_is_k1``
+        (V = dequantized K source 1 truncated to the output feature dim).
+      k2_pages: optional second float K source ``(L, NB, T, KV, d2)``
+        concatenated to K on the feature axis (MLA RoPE keys); the query
+        must already carry ``dk = d1 + d2``.
+      k_new/v_new/k2_new: the new token in the same (possibly quantized)
+        layout, shapes ``(S, KV, d)`` / ``(S, KV)``.
+      window: sliding-window size (0 = full causal).
+      scale: score scale; default ``1/sqrt(dk)``.
+      block_pages: pages consumed per inner iteration (autotuned).
+
+    Returns ``(out, new_pages)``: out ``(S, KV, rep, dv)`` f32 and the
+    page arrays with the new token appended, in input order
+    ``k (+scale,zero) [, k2] [, v (+scale,zero)]`` — aliased to the
+    inputs, so donate them.
+    """
+    s, kv, rep, dk = q.shape
+    mb = tables.shape[1]
+    t = k_pages[0].shape[2]
+    d1 = k_pages[0].shape[-1]
+    if v_is_k1:
+        dv = d1
+    else:
+        dv = v_pages[0].shape[-1]
+    if scale is None:
+        scale = 1.0 / np.sqrt(dk)
+
+    page_inputs = list(k_pages)
+    new_inputs = list(k_new)
+    if k2_pages is not None:
+        page_inputs.append(k2_pages)
+        new_inputs.append(k2_new)
+    if not v_is_k1:
+        page_inputs.extend(v_pages)
+        new_inputs.extend(v_new)
+
+    full = lambda a: pl.BlockSpec(a.shape, lambda i: (0,) * a.ndim)
+    slot = lambda a: pl.BlockSpec((1,) + a.shape[1:],
+                                  lambda i: (i,) + (0,) * (a.ndim - 1))
+    layer_arr = jnp.asarray(layer, jnp.int32).reshape(1)
+
+    inputs = [tables, lengths, layer_arr, q] + page_inputs + new_inputs
+    in_specs = [slot(tables), slot(lengths), full(layer_arr), slot(q)]
+    in_specs += [full(a) for a in page_inputs]
+    in_specs += [slot(a) for a in new_inputs]
+
+    out_shape = [jax.ShapeDtypeStruct((s, kv, rep, dv), jnp.float32)]
+    out_specs = [pl.BlockSpec((1, kv, rep, dv), lambda i: (i, 0, 0, 0))]
+    aliases = {}
+    for pi, arr in enumerate(page_inputs):
+        aliases[4 + pi] = len(out_shape)
+        out_shape.append(jax.ShapeDtypeStruct(arr.shape, arr.dtype))
+        out_specs.append(full(arr))
+
+    kernel = functools.partial(
+        _paged_attn_kernel,
+        n_pages=mb,
+        page_tokens=t,
+        block_pages=block_pages,
+        window=window,
+        scale=float(scale),
+        quant_k=quant_k,
+        quant_v=quant_v,
+        has_k2=k2_pages is not None,
+        v_is_k1=v_is_k1,
+    )
+    outs = pl.pallas_call(
+        kernel,
+        grid=(s,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        input_output_aliases=aliases,
+        interpret=interpret,
+    )(*inputs)
+    return outs[0], tuple(outs[1:])

@@ -431,6 +431,54 @@ def decode_attention(
     return out.reshape(b, 1, h, d).astype(q.dtype)
 
 
+def paged_decode_attention(
+    q: jax.Array,
+    k_pages,
+    v_pages,
+    k2_pages,
+    k_new,
+    v_new,
+    k2_new,
+    tables: jax.Array,
+    lengths: jax.Array,
+    layer,
+    *,
+    window: int = 0,
+    scale: Optional[float] = None,
+    v_is_k1: bool = False,
+):
+    """Paged variant of :func:`decode_attention` over KV-pool block storage.
+
+    Instead of a contiguous ``(B, Smax, KV, D)`` cache view this reads the
+    pool's block-paged storage in place through the slot block table (see
+    :mod:`repro.kernels.paged_attention`) and *appends the new token* to
+    its block as part of the same fused kernel — the caller never gathers
+    blocks into a view or scatters one back.
+
+    q: ``(B, 1, H, dk)``.  ``k_pages``/``v_pages``: 1-tuple of float pages
+    ``(L, NB, T, KV, d)`` or 3-tuple ``(codes, scale, zero)`` for
+    quantized storage (scales ``(L, NB, T, KV)``); ``k2_pages`` an
+    optional extra float K source concatenated on the feature axis (MLA
+    RoPE keys) and ``v_is_k1`` makes V the first-source dequant (MLA
+    latent).  ``k_new``/``v_new``/``k2_new``: the new token in the same
+    layout, shapes ``(B, KV, d)`` / ``(B, KV)``.  ``lengths``: ``(B,)``
+    per-slot fill; ``layer``: scalar index into the stacked pool.
+
+    Returns ``(out (B, 1, H, dv) f32, new_pages)`` with ``new_pages`` the
+    updated page arrays in input order ``k(+s,z) [,k2] [,v(+s,z)]``.
+    """
+    from repro.kernels import ops as kops
+
+    b, _, h, dk = q.shape
+    kv = k_pages[0].shape[3]
+    rep = h // kv
+    qg = q.reshape(b, kv, rep, dk)
+    out, new_pages = kops.paged_attention(
+        qg, tables, lengths, layer, k_pages, v_pages, k2_pages, k_new, v_new,
+        k2_new, window=window, scale=scale, v_is_k1=v_is_k1)
+    return out.reshape(b, 1, h, out.shape[-1]), new_pages
+
+
 # ---------------------------------------------------------------------------
 # MLP
 # ---------------------------------------------------------------------------

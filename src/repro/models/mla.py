@@ -87,6 +87,62 @@ def mla_prefill_attention(
     return out @ lp["wo"], c_kv, k_rope
 
 
+def mla_paged_decode_attention(
+    lp: Dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    k1_pages,
+    krope_pages: jax.Array,
+    k1_new,
+    krope_new: jax.Array,
+    tables: jax.Array,
+    lengths: jax.Array,
+    layer,
+    spec: QuantizeSpec,
+):
+    """Absorbed-form decode against *paged* latent storage.
+
+    MLA maps onto the generic paged kernel as 1-KV-head attention: the
+    per-head query is ``concat(q_latent, q_rope)``, K source 1 is the
+    latent block (``k1_pages``: 1-tuple of float pages ``(L, NB, T,
+    rank)`` or 3-tuple codes/scale/zero), K source 2 the shared RoPE key
+    pages ``(L, NB, T, rope)``, and V *is* the dequantized latent
+    (``v_is_k1``).  ``k1_new``/``krope_new`` carry the new token in the
+    same layout (``(B, rank)`` / ``(B, rope)``, scales ``(B,)``).
+
+    Returns ``(attn_out (B, 1, D), new_pages)`` — new_pages in kernel
+    order ``latent(+scale,zero), krope`` with the KV axis stripped back
+    off.
+    """
+    b = x.shape[0]
+    h = cfg.n_heads
+    q_nope, q_rope = _project_q(lp, x, cfg, positions, spec)  # (B,1,H,*)
+    wkv_b = dense_w(lp["wkv_b"])
+    wk = wkv_b[..., : cfg.qk_nope_dim]  # (rank, H, nope)
+    q_lat = jnp.einsum("bqhe,rhe->bqhr", q_nope, wk)  # (B,1,H,rank)
+    q_cat = jnp.concatenate(
+        [q_lat.astype(jnp.float32), q_rope.astype(jnp.float32)], -1)
+    scale = 1.0 / np.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+
+    kv_ax = lambda a: a[..., None, :]  # (L,NB,T,d) -> (L,NB,T,1,d)
+    sc_ax = lambda a: a[..., None]  # (L,NB,T) -> (L,NB,T,1); (B,)->(B,1)
+    norm_pages = lambda tup: (kv_ax(tup[0]),) + tuple(sc_ax(a) for a in tup[1:])
+    norm_new = lambda tup: (tup[0][:, None, :],) + tuple(
+        sc_ax(a) for a in tup[1:])
+
+    out_lat, new_pages = common.paged_decode_attention(
+        q_cat, norm_pages(k1_pages), None, kv_ax(krope_pages),
+        norm_new(k1_new), None, krope_new[:, None, :],
+        tables, lengths, layer, scale=scale, v_is_k1=True)
+    # strip the synthetic KV axis back off: pages k1(+s,z) then krope
+    out_pages = tuple(jnp.squeeze(p, axis=3) for p in new_pages)
+    out = jnp.einsum("bqhr,rhv->bqhv", out_lat.astype(x.dtype),
+                     wkv_b[..., cfg.qk_nope_dim:])
+    out = act_q(out.reshape(b, 1, h * cfg.v_head_dim), spec)
+    return out @ lp["wo"], out_pages
+
+
 def mla_decode_attention(
     lp: Dict,
     x: jax.Array,

@@ -47,6 +47,12 @@ class Arch:
     # (prompt-length bucketing).  None for recurrent-state families whose
     # scan integrates every padded token.
     padded_prefill: Optional[Callable] = None
+    # (params, tokens, paged, state, tables, lengths, spec) ->
+    # (logits, paged, state): one decode tick straight over block-paged
+    # pool storage (fused serving path; per-slot lengths, the paged
+    # attention kernel walks the block table in place).  None for pure
+    # per-slot-state families (xLSTM), which keep the vmapped pool step.
+    decode_paged: Optional[Callable] = None
 
     # ------------------------------------------------------------------
     def input_specs(self, shape: ShapeConfig, *, per_device_batch: Optional[int] = None
@@ -100,6 +106,8 @@ def _build_transformer(cfg: ModelConfig) -> Arch:
         padded_prefill=lambda p, b, c, n, spec=NOQUANT: t.prefill(
             cfg, p, b, c, spec, true_length=n
         ),
+        decode_paged=lambda p, tok, pg, st, tb, ln, spec=NOQUANT:
+            t.decode_paged(cfg, p, tok, pg, st, tb, ln, spec),
     )
 
 
@@ -130,6 +138,8 @@ def _build_zamba(cfg: ModelConfig) -> Arch:
         init_cache=lambda batch, max_seq, spec=NOQUANT, dtype=jnp.bfloat16: z.init_state(
             cfg, batch, max_seq, dtype
         ),
+        decode_paged=lambda p, tok, pg, st, tb, ln, spec=NOQUANT:
+            z.decode_paged(cfg, p, tok, pg, st, tb, ln, spec),
     )
 
 

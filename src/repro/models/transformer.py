@@ -566,3 +566,107 @@ def decode(cfg: ModelConfig, params: Dict, tokens: jax.Array, cache: Dict,
     logits = lm_logits(cfg, params, h, spec)
     caches["length"] = length + 1
     return logits[:, 0], caches
+
+
+def decode_paged(cfg: ModelConfig, params: Dict, tokens: jax.Array,
+                 paged: Dict, state: Dict, tables: jax.Array,
+                 lengths: jax.Array, spec: QuantizeSpec = NOQUANT
+                 ) -> Tuple[jax.Array, Dict, Dict]:
+    """One decode step straight over block-paged pool storage (fused path).
+
+    The serving pool's gather->vmapped-decode->scatter step copies every
+    slot's whole cache view twice per tick; this variant never builds a
+    view: per layer, attention runs through the paged Pallas kernel
+    (:func:`repro.models.common.paged_decode_attention`) which walks
+    ``tables`` directly, dequantizes quantized KV blocks in place, and
+    appends the new token to its block inside the same kernel.
+
+    ``tokens``: (S,) int32 (audio: (S, K)); ``paged``: pool block storage
+    keyed by cache-leaf name, stacked over layers (e.g. ``k``:
+    ``(L, NB, T, KV, hd)``); ``state``: per-slot non-paged leaves (empty
+    for attention-cache families, returned unchanged); ``lengths``: (S,)
+    per-slot fill — RoPE positions and masks are per-slot, unlike
+    :func:`decode`'s shared scalar ``length``.
+
+    Returns ``(logits, paged, state)`` with the new token written at
+    ``lengths[s]`` in each slot's block chain.
+    """
+    if cfg.modality == "audio":
+        batch = {"tokens": tokens[:, None, :]}
+    else:
+        batch = {"tokens": tokens[:, None]}
+    h = embed_inputs(cfg, params, batch)  # (S, 1, D)
+    b = h.shape[0]
+    positions = lengths[:, None]  # (S, 1) per-slot RoPE positions
+    kvq = spec.kv_bits < 16
+
+    def _std_layer(lp, pg, i, h):
+        x = rmsnorm(h, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = _qkv(cfg, lp, x, positions, spec)  # (S,1,H,hd)/(S,1,KV,hd)
+        if kvq:
+            kc, ks_, kz = _quant_tokens(k, spec)
+            vc, vs_, vz = _quant_tokens(v, spec)
+            k_new = (kc[:, 0], ks_[:, 0], kz[:, 0])
+            v_new = (vc[:, 0], vs_[:, 0], vz[:, 0])
+            k_pages = (pg["k"], pg["k_scale"], pg["k_zero"])
+            v_pages = (pg["v"], pg["v_scale"], pg["v_zero"])
+            order = ("k", "k_scale", "k_zero", "v", "v_scale", "v_zero")
+        else:
+            k_new, v_new = (k[:, 0],), (v[:, 0],)
+            k_pages, v_pages = (pg["k"],), (pg["v"],)
+            order = ("k", "v")
+        attn, new_pages = common.paged_decode_attention(
+            q, k_pages, v_pages, None, k_new, v_new, None,
+            tables, lengths, i, window=cfg.sliding_window)
+        pg = dict(pg)
+        pg.update(zip(order, new_pages))
+        attn = act_q(attn.astype(h.dtype).reshape(b, 1, cfg.n_heads * cfg.hd),
+                     spec)
+        return h + attn @ lp["wo"], pg
+
+    def _mla_layer(lp, pg, i, h):
+        x = rmsnorm(h, lp["attn_norm"], cfg.norm_eps)
+        ckv_new, krope_new = mla_mod._project_latent(lp, x, cfg, positions,
+                                                     spec)
+        if kvq:
+            codes, scale, zero = _quant_tokens(ckv_new, spec)
+            k1_new = (codes[:, 0], scale[:, 0], zero[:, 0])
+            k1_pages = (pg["ckv"], pg["ckv_scale"], pg["ckv_zero"])
+            order = ("ckv", "ckv_scale", "ckv_zero", "krope")
+        else:
+            k1_new = (ckv_new[:, 0],)
+            k1_pages = (pg["ckv"],)
+            order = ("ckv", "krope")
+        out, new_pages = mla_mod.mla_paged_decode_attention(
+            lp, x, cfg, positions, k1_pages, pg["krope"], k1_new,
+            krope_new[:, 0], tables, lengths, i, spec)
+        pg = dict(pg)
+        pg.update(zip(order, new_pages))
+        return h + out, pg
+
+    if _interleaved(cfg):
+        every = cfg.moe_every
+
+        def group_fn(carry, grp):
+            h, pg, g = carry
+            for j, (lp, kind) in enumerate(_group_slices(cfg, grp)):
+                h, pg = _std_layer(lp, pg, g * every + j, h)
+                h = mlp_block(cfg, lp, h, spec, kind=kind)
+            return (h, pg, g + 1), None
+
+        (h, pg, _), _ = jax.lax.scan(
+            group_fn, (h, paged, jnp.asarray(0, jnp.int32)), params["layers"])
+    else:
+        def layer_fn(carry, lp):
+            h, pg, i = carry
+            if cfg.family == "mla":
+                h, pg = _mla_layer(lp, pg, i, h)
+            else:
+                h, pg = _std_layer(lp, pg, i, h)
+            h = mlp_block(cfg, lp, h, spec)
+            return (h, pg, i + 1), None
+
+        (h, pg, _), _ = jax.lax.scan(
+            layer_fn, (h, paged, jnp.asarray(0, jnp.int32)), params["layers"])
+    logits = lm_logits(cfg, params, h, spec)
+    return logits[:, 0], pg, state

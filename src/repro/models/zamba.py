@@ -359,3 +359,71 @@ def decode(cfg: ModelConfig, params: Dict, tokens: jax.Array, cache: Dict,
     logits = act_q(hn, spec) @ params["lm_head"]
     return logits[:, 0], dict(cache, ssm_s=ss2, ssm_n=nn2, conv=cv2, k=k2, v=v2,
                               length=length + 1)
+
+
+def decode_paged(cfg: ModelConfig, params: Dict, tokens: jax.Array,
+                 paged: Dict, state: Dict, tables: jax.Array,
+                 lengths: jax.Array, spec: QuantizeSpec = NOQUANT):
+    """Hybrid fused decode over the serving pool: the shared-block KV half
+    reads/writes block-paged storage through the paged attention kernel
+    (``paged``: ``k``/``v`` stacked over application sites, ``(G, NB, T,
+    KV, hd)``), while SSD/conv state stays per-slot (``state``:
+    ``ssm_s``/``ssm_n``/``conv`` with the slot axis where decode expects
+    batch).  ``lengths``: (S,) per-slot attention positions.  Returns
+    ``(logits, paged, state)``.
+    """
+    groups, trailing = _layout(cfg)
+    every = cfg.attn_every
+    h = jnp.take(params["embed"], tokens, axis=0)[:, None, :]
+    b = h.shape[0]
+    positions = lengths[:, None]
+    sp = params["shared"]
+    head, tail, _, _ = _split_layers(cfg, params["mamba"])
+    rs = lambda a: a[: groups * every].reshape(groups, every, *a.shape[1:])
+
+    def mstep(h, xs2):
+        lp, ss, nn, cv = xs2
+        h, ssm2, cv2 = mamba_block_step(cfg, lp, h, spec, (ss, nn), cv)
+        return h, (*ssm2, cv2)
+
+    def group_fn(carry, xs):
+        h, kpg, vpg, g = carry
+        mlp_g, ss_g, nn_g, cv_g = xs
+        h, (ss2, nn2, cv2) = jax.lax.scan(mstep, h, (mlp_g, ss_g, nn_g, cv_g))
+        x = rmsnorm(h, sp["attn_norm"], cfg.norm_eps)
+        q, k, v = _shared_qkv(cfg, sp, x, positions, spec)
+        attn, (kpg, vpg) = common.paged_decode_attention(
+            q, (kpg,), (vpg,), None, (k[:, 0],), (v[:, 0],), None,
+            tables, lengths, g)
+        attn = act_q(attn.astype(h.dtype).reshape(b, 1, cfg.n_heads * cfg.hd),
+                     spec)
+        h = h + attn @ sp["wo"]
+        x2 = rmsnorm(h, sp["mlp_norm"], cfg.norm_eps)
+        h = h + common.swiglu(x2, sp["w_gate"], sp["w_up"], sp["w_down"], spec)
+        return (h, kpg, vpg, g + 1), (ss2, nn2, cv2)
+
+    kpg, vpg = paged["k"], paged["v"]
+    if groups:
+        (h, kpg, vpg, _), (ss2, nn2, cv2) = jax.lax.scan(
+            group_fn, (h, kpg, vpg, jnp.asarray(0, jnp.int32)),
+            (head, rs(state["ssm_s"]), rs(state["ssm_n"]), rs(state["conv"])),
+        )
+        ss2 = ss2.reshape(-1, *ss2.shape[2:])
+        nn2 = nn2.reshape(-1, *nn2.shape[2:])
+        cv2 = cv2.reshape(-1, *cv2.shape[2:])
+    else:
+        ss2 = nn2 = cv2 = None
+    if trailing:
+        off = groups * every
+        h, (tss2, tnn2, tcv2) = jax.lax.scan(
+            mstep, h,
+            (tail, state["ssm_s"][off:], state["ssm_n"][off:],
+             state["conv"][off:]),
+        )
+        ss2 = jnp.concatenate([ss2, tss2]) if ss2 is not None else tss2
+        nn2 = jnp.concatenate([nn2, tnn2]) if nn2 is not None else tnn2
+        cv2 = jnp.concatenate([cv2, tcv2]) if cv2 is not None else tcv2
+    hn = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = act_q(hn, spec) @ params["lm_head"]
+    return (logits[:, 0], dict(paged, k=kpg, v=vpg),
+            dict(state, ssm_s=ss2, ssm_n=nn2, conv=cv2))

@@ -6,13 +6,17 @@ dry-run lowers):
 
 * **continuous** (the default production path): ``submit()`` enqueues
   requests, ``step()`` runs one scheduler tick (admission with
-  prefill-on-admit, one batched decode over per-slot block-paged cache
-  views, per-slot stop + immediate refill), ``drain()`` runs to
-  completion.  Cache storage lives in a :class:`repro.serve.kvpool.KVPool`
-  — fixed-size token blocks with a free list, quantized KV blocks
-  (packed codes + scales from ``quant.kv_cache``) dequantized at
-  attention time, per-slot views handed to the models' unmodified decode
-  so refill never re-allocates or copies surviving slots.
+  prefill-on-admit, one batched decode across all slots, per-slot stop +
+  immediate refill), ``drain()`` runs to completion.  Cache storage
+  lives in a :class:`repro.serve.kvpool.KVPool` — fixed-size token
+  blocks with a free list.  Decode runs **fused** by default
+  (``ServeConfig.paged_kernel``): the models' ``decode_paged`` reads KV
+  blocks in place through the Pallas paged-attention kernel (quantized
+  blocks dequantized in-kernel, new token appended in-kernel) with no
+  per-tick gather/scatter of pool storage; pure-state families and
+  ``paged_kernel=False`` take the vmapped contiguous-view baseline.
+  Sampling is on-device, and ``ServeConfig.steps_per_sync`` batches up
+  to N decode ticks into one in-graph window per host sync.
 
 * **static** (``generate_static()``): the original fixed-slot batch loop,
   kept as the baseline the serving bench and the token-identity tests
@@ -61,6 +65,19 @@ class ServeConfig:
     # support it (recurrent state would integrate the padding) — the
     # engine falls back to exact-length prefill elsewhere.
     bucket_prompts: bool = False
+    # --- fused decode hot path ---
+    # Route pool decode through the model's fused paged path (the Pallas
+    # paged-attention kernel walks each slot's block table in place —
+    # no per-tick gather/scatter of pool storage).  Families without a
+    # fused decode (pure-state xLSTM) keep the vmapped baseline; set
+    # False to force the baseline everywhere (A/B measurement).
+    paged_kernel: bool = True
+    # Decode ticks per host synchronization.  1 = classic behavior (one
+    # sample + stop check round-trip per token); N > 1 runs an in-graph
+    # while_loop of up to N ticks with on-device sampling, per-slot
+    # stop-token/length masks and a device-side done bitmap — the host
+    # only syncs to refill slots and flush streaming callbacks.
+    steps_per_sync: int = 1
 
 
 class ServeEngine:
@@ -124,7 +141,11 @@ class ServeEngine:
         # continuous-batching machinery, built lazily on first submit()
         self._pool = None
         self._pool_step_fn = None
+        self._tick_fn = None
+        self._window_jit = None
+        self._sample_jit = None
         self._sched = None
+        self.fused_decode = False
 
     def _mesh_ctx(self):
         return self.mesh if self.mesh is not None else contextlib.nullcontext()
@@ -133,6 +154,19 @@ class ServeEngine:
         if self._cache_shardings is None:
             return cache
         return jax.device_put(cache, self._cache_shardings)
+
+    def _place_step_inputs(self, *arrays):
+        """Host-side control inputs of a decode tick/window, placed with
+        ``dist.sharding.step_input_pspecs`` (replicated) under a mesh."""
+        arrays = tuple(jnp.asarray(a) for a in arrays)
+        if self.mesh is None:
+            return arrays
+        from repro.dist.sharding import step_input_pspecs
+
+        specs = step_input_pspecs(arrays)
+        return tuple(
+            jax.device_put(a, NamedSharding(self.mesh, s))
+            for a, s in zip(arrays, specs))
 
     def _sample(self, logits: jax.Array, key) -> jax.Array:
         if self.scfg.temperature <= 0:
@@ -176,9 +210,19 @@ class ServeEngine:
         )
         if self.mesh is not None:
             self._place_pool()
-        run = self._pool.build_step(
-            lambda p, t, c: self.arch.decode(p, t, c, self.spec))
-        self._pool_step_fn = run
+        self.fused_decode = bool(
+            scfg.paged_kernel
+            and self.arch.decode_paged is not None
+            and self._pool.has_paged)
+        if self.fused_decode:
+            tick = self._pool.make_fused_tick(
+                lambda p, tok, pg, st, tb, ln: self.arch.decode_paged(
+                    p, tok, pg, st, tb, ln, self.spec))
+        else:
+            tick = self._pool.make_tick(
+                lambda p, t, c: self.arch.decode(p, t, c, self.spec))
+        self._tick_fn = tick
+        self._pool_step_fn = self._pool.bind_step(tick)
         self._sched = ContinuousScheduler(self)
 
     def _place_pool(self):
@@ -204,8 +248,109 @@ class ServeEngine:
 
     def pool_step(self, tokens, lengths, tables):
         """One batched decode tick over every pool slot (scheduler hook)."""
+        tokens, lengths, tables = self._place_step_inputs(
+            tokens, lengths, tables)
         with self._mesh_ctx():
             return self._pool_step_fn(self.params, tokens, lengths, tables)
+
+    # ------------------------------------------------------------------
+    # On-device sampling + the in-graph multi-step decode window
+    # ------------------------------------------------------------------
+
+    def _make_sampler(self):
+        """(logits (S,V)|(S,K,V), rids (S,), counts (S,)) -> (S[,K]) int32.
+
+        Greedy argmax, or per-request categorical from the same
+        fold_in(seed, rid) -> fold_in(key, n_emitted) chain the host
+        sampler uses — on-device sampling is draw-for-draw identical."""
+        temp, seed = self.scfg.temperature, self.scfg.seed
+
+        def sample(logits, rids, counts):
+            if temp <= 0:
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            base = jax.random.PRNGKey(seed)
+
+            def one(lg, r, c):
+                key = jax.random.fold_in(jax.random.fold_in(base, r), c)
+                return jax.random.categorical(key, lg / temp).astype(jnp.int32)
+
+            return jax.vmap(one)(logits, rids, counts)
+
+        return sample
+
+    def sample_slots(self, logits, rids, counts):
+        """Sample every slot's next token on device; only the (S,) int ids
+        ever cross to the host (the scheduler's per-token sync)."""
+        if self._sample_jit is None:
+            self._sample_jit = jax.jit(self._make_sampler())
+        with self._mesh_ctx():
+            return self._sample_jit(logits, jnp.asarray(rids),
+                                    jnp.asarray(counts))
+
+    def _build_window(self):
+        """Jit the in-graph decode window: a while_loop of up to
+        ``steps_per_sync`` pool ticks with on-device sampling, per-slot
+        stop-token / max-length masks and a device-side ``alive`` bitmap
+        (early exit once every slot is done).  Pool storage rides the
+        loop carry (donated), so the whole window is one dispatch and one
+        host sync."""
+        w = self.scfg.steps_per_sync
+        tick = self._tick_fn
+        sample = self._make_sampler()
+        audio = self.cfg.modality == "audio"
+
+        def window(params, tokens, lengths, tables, counts, rids, stops,
+                   max_new, alive, paged, state):
+            s = tokens.shape[0]
+            wide = (lambda m: m[:, None]) if audio else (lambda m: m)
+            tok_buf = jnp.zeros((w,) + tokens.shape, jnp.int32)
+            emit_buf = jnp.zeros((w, s), bool)
+
+            def cond(c):
+                i, _, _, _, alive, _, _, _, _ = c
+                return (i < w) & alive.any()
+
+            def body(c):
+                i, tokens, lengths, counts, alive, paged, state, tb, eb = c
+                logits, paged, state, lengths2 = tick(
+                    params, tokens, lengths, tables, paged, state)
+                # done slots keep their length frozen (their lane decodes
+                # scratch garbage until the host releases them)
+                lengths = jnp.where(alive, lengths2, lengths)
+                nxt = sample(logits, rids, counts)
+                stop_hit = (jnp.zeros((s,), bool) if audio
+                            else nxt == stops)
+                tb = tb.at[i].set(jnp.where(wide(alive), nxt, 0))
+                eb = eb.at[i].set(alive)
+                counts = counts + alive.astype(jnp.int32)
+                alive = alive & ~stop_hit & (counts < max_new)
+                tokens = jnp.where(wide(alive), nxt, tokens)
+                return (i + 1, tokens, lengths, counts, alive, paged, state,
+                        tb, eb)
+
+            init = (jnp.asarray(0, jnp.int32), tokens, lengths, counts,
+                    alive, paged, state, tok_buf, emit_buf)
+            (_, _, lengths, _, _, paged, state, tok_buf, emit_buf) = (
+                jax.lax.while_loop(cond, body, init))
+            return tok_buf, emit_buf, paged, state
+
+        return jax.jit(window, donate_argnums=(9, 10))
+
+    def run_window(self, tokens, lengths, tables, counts, rids, stops,
+                   max_new, alive):
+        """Execute one in-graph decode window over the pool (scheduler
+        hook for ``steps_per_sync > 1``).  Returns the per-step token and
+        emission buffers; pool storage is updated in place."""
+        if self._window_jit is None:
+            self._window_jit = self._build_window()
+        pool = self.pool
+        inputs = self._place_step_inputs(
+            tokens, lengths, tables, counts, rids, stops, max_new, alive)
+        with self._mesh_ctx():
+            tok_buf, emit_buf, paged, state = self._window_jit(
+                self.params, *inputs, pool.paged, pool.state)
+        pool.paged, pool.state = paged, state
+        return tok_buf, emit_buf
 
     def prefill_one(self, prompt: np.ndarray, patch_embeds: Optional[np.ndarray]
                     ) -> tuple:
@@ -246,7 +391,9 @@ class ServeEngine:
                     jnp.asarray(s_total, jnp.int32))
             else:
                 logits, cache = self._prefill(self.params, batch, cache0)
-        last = np.asarray(logits)[0]
+        # stays on device: the scheduler samples it there and transfers
+        # only the token id (no (V,) logits round trip per admission)
+        last = logits[0]
         if last.ndim >= 2 and last.shape[0] == 1:  # (1, V) / (1, K, V)
             last = last[0]
         return last, cache, s_total

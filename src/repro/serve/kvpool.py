@@ -30,11 +30,24 @@ Block 0 is a reserved scratch block: free slots and unallocated table
 entries point at it, so the gather/scatter decode step runs with fully
 static shapes and inactive lanes read and write only scratch.
 
-The decode step itself (:meth:`KVPool.build_step`) gathers each slot's
-blocks into a contiguous per-slot view, runs the model's unmodified
-``decode`` under ``jax.vmap`` (one lane per slot, per-slot lengths), and
-scatters the updated blocks back — one jitted function for the whole
-pool, compiled once per pool geometry.
+Two decode steps share one signature (``tick(params, tokens, lengths,
+tables, paged, state)``):
+
+* the **fused path** (:meth:`KVPool.make_fused_tick`, the default for
+  every family with a paged cache) hands pool storage to the model's
+  ``decode_paged``: the Pallas paged-attention kernel walks each slot's
+  block table in place and appends the new token inside the kernel —
+  zero per-tick gather/scatter of pool storage;
+* the **baseline** (:meth:`KVPool.make_tick`) gathers each slot's blocks
+  into a contiguous per-slot view, runs the model's unmodified
+  ``decode`` under ``jax.vmap`` (one lane per slot, per-slot lengths),
+  and scatters the updated blocks back.  Pure-state families (xLSTM)
+  always use it; it is also the fused path's A/B reference
+  (``ServeConfig(paged_kernel=False)``).
+
+Either tick is jitted+bound by :meth:`KVPool.bind_step` for the
+single-step scheduler loop, or embedded unjitted in the engine's
+in-graph multi-step decode window (``ServeConfig.steps_per_sync``).
 """
 from __future__ import annotations
 
@@ -241,12 +254,20 @@ class KVPool:
         """Grow ``slot`` so the next decode write position is backed by a
         real block (conservative admission guarantees the free list can
         serve it)."""
+        self.ensure_until(slot, int(self.lengths[slot]))
+
+    def ensure_until(self, slot: int, last_pos: int) -> None:
+        """Back every position up to ``last_pos`` inclusive with real
+        blocks — the multi-step in-graph decode window writes up to
+        ``steps_per_sync`` tokens between host syncs, so its blocks must
+        all exist before the window launches (table entries are fixed for
+        the window's duration).  Stays within the slot's conservative
+        admission reservation by construction (``last_pos <= worst - 1``)."""
         if not self.has_paged:
             return
-        pos = int(self.lengths[slot])  # next write position
-        if pos >= self.view_tokens:
-            raise RuntimeError(f"slot {slot} exceeded pool view ({pos})")
-        while len(self.slot_blocks[slot]) * self.block_tokens <= pos:
+        if last_pos >= self.view_tokens:
+            raise RuntimeError(f"slot {slot} exceeded pool view ({last_pos})")
+        while len(self.slot_blocks[slot]) * self.block_tokens <= last_pos:
             self._alloc(slot)
 
     def advance(self, slot: int) -> None:
@@ -284,18 +305,23 @@ class KVPool:
     # The jitted gather -> vmapped decode -> scatter step
     # ------------------------------------------------------------------
 
-    def build_step(self, decode_fn: Callable) -> Callable:
+    def make_tick(self, decode_fn: Callable) -> Callable:
         """``decode_fn(params, tokens_1d, cache) -> (logits, cache)`` is the
-        model's unmodified single-step decode; the returned callable runs
-        it once per slot (per-slot lengths) over block-gathered views:
+        model's unmodified single-step decode; the returned *pure* tick
+        runs it once per slot (per-slot lengths) over block-gathered views:
 
-            logits, paged, state, lengths = step(
+            logits, paged, state, lengths = tick(
                 params, tokens, lengths, tables, paged, state)
 
         ``tokens``: (n_slots,) int32 (audio: (n_slots, K)); ``lengths``:
         (n_slots,) int32; ``tables``: (n_slots, blocks_per_slot) int32.
         Inactive lanes run on scratch-backed views and only ever write the
         scratch block / their own state row.
+
+        This is the gather/scatter *baseline*: every tick copies each
+        slot's blocks into a contiguous view and scatters them back.  The
+        fused path (:meth:`make_fused_tick`) has the same signature and
+        never builds a view.
         """
         meta, paths, treedef = self.meta, self.paths, self.treedef
         t, mb = self.block_tokens, self.blocks_per_slot
@@ -367,7 +393,30 @@ class KVPool:
                 new_state.setdefault(path, state[path])
             return logits, new_paged, new_state, new_lengths
 
-        jitted = jax.jit(step, donate_argnums=(4, 5))
+        return step
+
+    def make_fused_tick(self, decode_paged_fn: Callable) -> Callable:
+        """Tick built on the model's fused paged decode — same signature
+        as :meth:`make_tick` but with **zero** per-tick gather/scatter of
+        pool storage: ``decode_paged_fn(params, tokens, paged, state,
+        tables, lengths) -> (logits, paged, state)`` reads KV blocks in
+        place through the block table (paged attention kernel) and
+        appends each slot's new token inside the kernel."""
+
+        def step(params, tokens, lengths, tables, paged, state):
+            logits, new_paged, new_state = decode_paged_fn(
+                params, tokens, paged, state, tables, lengths)
+            return logits, new_paged, new_state, lengths + 1
+
+        return step
+
+    def bind_step(self, tick: Callable) -> Callable:
+        """Jit ``tick`` (donating pool storage) and bind it to this pool's
+        device fragments:
+
+            logits, lengths = run(params, tokens, lengths, tables)
+        """
+        jitted = jax.jit(tick, donate_argnums=(4, 5))
 
         def run(params, tokens, lengths, tables):
             logits, paged, state, new_lengths = jitted(
@@ -377,3 +426,7 @@ class KVPool:
             return logits, new_lengths
 
         return run
+
+    def build_step(self, decode_fn: Callable) -> Callable:
+        """Back-compat wrapper: gather/scatter tick, jitted and bound."""
+        return self.bind_step(self.make_tick(decode_fn))

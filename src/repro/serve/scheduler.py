@@ -14,8 +14,18 @@ FIFO request queue and drives the engine slot-by-slot instead:
 * **stop + refill**: a slot that hits its ``max_new_tokens`` (or stop
   token) releases its blocks and is refilled on the same tick — no
   reallocation or copying of surviving slots;
+* **sync cadence**: sampling runs *on device* (greedy argmax or the
+  per-request categorical key chain) so only token ids cross to the
+  host — one (n_slots,) transfer per tick, never the (n_slots, V)
+  logits.  With ``ServeConfig(steps_per_sync=N)`` the per-token
+  round-trip disappears entirely: the engine runs an in-graph window of
+  up to N decode ticks with per-slot stop/length masks and a device-side
+  done bitmap, and the host syncs once per window to flush callbacks and
+  refill freed slots (``metrics()["aggregate"]["host_syncs"]`` counts
+  the decode-path transfers);
 * **streaming**: every sampled token is pushed through the request's
-  ``on_token`` callback the tick it is produced;
+  ``on_token`` callback the tick (or window flush) it is produced, in
+  token order per request;
 * **metrics**: per-request queue wait / TTFT / latency and aggregate
   decode-slot utilisation (busy slot-ticks over total slot-ticks) and
   tokens/s.
@@ -34,7 +44,6 @@ import time
 from collections import deque
 from typing import Callable, Dict, List, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -98,6 +107,7 @@ class ContinuousScheduler:
         self.decode_steps = 0
         self.busy_slot_steps = 0
         self.tokens_generated = 0
+        self.host_syncs = 0  # device->host transfers on the decode path
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
 
@@ -143,15 +153,16 @@ class ContinuousScheduler:
 
     # ------------------------------------------------------------------
     def _sample(self, logits: np.ndarray, req: Request) -> np.ndarray:
-        """logits: (V,) or (K, V) float. Greedy unless temperature > 0."""
-        scfg = self.engine.scfg
-        if scfg.temperature <= 0:
-            return np.argmax(logits, axis=-1).astype(np.int32)
-        key = jax.random.fold_in(jax.random.PRNGKey(scfg.seed), req.rid)
-        key = jax.random.fold_in(key, len(req.tokens))
-        tok = jax.random.categorical(
-            key, jnp.asarray(logits) / scfg.temperature)
-        return np.asarray(tok, np.int32)
+        """logits: (V,) or (K, V) float. Greedy unless temperature > 0.
+
+        Delegates to the engine's one sampler (the same jitted function
+        the decode tick and the in-graph window use), so the per-request
+        fold_in(seed, rid) -> fold_in(key, n_emitted) draw chain has a
+        single implementation."""
+        tok = self.engine.sample_slots(
+            jnp.asarray(logits)[None], np.asarray([req.rid], np.int32),
+            np.asarray([len(req.tokens)], np.int32))
+        return np.asarray(tok)[0].astype(np.int32)
 
     def _emit(self, slot: int, req: Request, tok: np.ndarray) -> bool:
         """Record one sampled token; returns True when the request stops."""
@@ -203,33 +214,87 @@ class ContinuousScheduler:
             admitted += 1
         return admitted
 
+    def _token_buf(self) -> np.ndarray:
+        cfg = self.engine.cfg
+        if cfg.modality == "audio":
+            return np.zeros((self.pool.n_slots, cfg.n_codebooks), np.int32)
+        return np.zeros((self.pool.n_slots,), np.int32)
+
     def step(self) -> bool:
-        """One scheduler tick: admit into free slots, then one batched
-        decode across all active slots.  Returns False when idle."""
+        """One scheduler tick: admit into free slots, then decode across
+        all active slots — one batched pool step (``steps_per_sync <= 1``)
+        or one in-graph multi-step window.  Returns False when idle."""
         admitted = self._admit()
         active = [s for s, r in enumerate(self.slot_req) if r is not None]
         if not active:
             return admitted > 0
+        w = int(getattr(self.engine.scfg, "steps_per_sync", 1))
+        if w > 1:
+            self._step_window(active, w)
+            return True
         pool = self.pool
         for s in active:
             pool.ensure(s)
-
-        cfg = self.engine.cfg
-        if cfg.modality == "audio":
-            tokens = np.zeros((pool.n_slots, cfg.n_codebooks), np.int32)
-        else:
-            tokens = np.zeros((pool.n_slots,), np.int32)
+        tokens = self._token_buf()
+        rids = np.zeros((pool.n_slots,), np.int32)
+        counts = np.zeros((pool.n_slots,), np.int32)
         for s in active:
             tokens[s] = self.slot_next[s]
+            rids[s] = self.slot_req[s].rid
+            counts[s] = len(self.slot_req[s].tokens)
         logits, _ = self.engine.pool_step(tokens, pool.lengths, pool.tables)
         self.decode_steps += 1
         self.busy_slot_steps += len(active)
-        logits_np = np.asarray(logits)
+        # sample on device: only the token ids cross to the host (the full
+        # (n_slots, V) logits never materialize host-side)
+        toks = np.asarray(self.engine.sample_slots(logits, rids, counts))
+        self.host_syncs += 1
         for s in active:
             req = self.slot_req[s]
             pool.advance(s)  # the decode wrote this slot's KV at `length`
-            self._emit(s, req, self._sample(logits_np[s], req))
+            self._emit(s, req, toks[s].astype(np.int32))
         return True
+
+    def _step_window(self, active: List[int], w: int) -> None:
+        """One in-graph decode window: up to ``w`` ticks on device with
+        on-device sampling and a done bitmap; the host syncs once, then
+        replays the emission buffers in step order so streaming callbacks
+        still fire in token order per request."""
+        pool = self.pool
+        n = pool.n_slots
+        tokens = self._token_buf()
+        counts = np.zeros((n,), np.int32)
+        rids = np.zeros((n,), np.int32)
+        stops = np.full((n,), -1, np.int32)
+        max_new = np.zeros((n,), np.int32)
+        alive = np.zeros((n,), bool)
+        for s in active:
+            req = self.slot_req[s]
+            tokens[s] = self.slot_next[s]
+            counts[s] = len(req.tokens)
+            rids[s] = req.rid
+            if req.stop_token is not None:
+                stops[s] = req.stop_token
+            max_new[s] = req.max_new_tokens
+            alive[s] = True
+            # pre-allocate every block this slot can write inside the
+            # window (its table entries are frozen while the loop runs)
+            future = min(w, req.max_new_tokens - len(req.tokens))
+            pool.ensure_until(s, int(pool.lengths[s]) + future - 1)
+        tok_buf, emit_buf = self.engine.run_window(
+            tokens, pool.lengths, pool.tables, counts, rids, stops, max_new,
+            alive)
+        tok_buf, emit_buf = np.asarray(tok_buf), np.asarray(emit_buf)
+        self.host_syncs += 1
+        for i in range(emit_buf.shape[0]):
+            if not emit_buf[i].any():
+                break  # the device loop exited early (all slots done)
+            self.decode_steps += 1
+            for s in active:
+                if emit_buf[i, s]:
+                    pool.advance(s)
+                    self.busy_slot_steps += 1
+                    self._emit(s, self.slot_req[s], tok_buf[i, s])
 
     def drain(self, max_steps: Optional[int] = None) -> List[Request]:
         steps = 0
@@ -265,6 +330,7 @@ class ContinuousScheduler:
             "slot_utilisation": (self.busy_slot_steps / slot_steps
                                  if slot_steps else None),
             "tokens_generated": self.tokens_generated,
+            "host_syncs": self.host_syncs,
             "tokens_per_s": (self.tokens_generated / elapsed
                              if elapsed else None),
             "mean_queue_wait_s": _mean([r["queue_wait_s"] for r in reqs]),
