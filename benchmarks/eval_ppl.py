@@ -1,0 +1,113 @@
+"""Teacher-forced PPL per policy preset: the end-metric for policy work.
+
+``quant_error`` measures per-rule tensor error; this closes the loop with
+the quality metric the paper actually reports — held-out perplexity (+
+top-1 next-token accuracy) on the synthetic data layer — for the float
+baseline, every shipped :mod:`repro.quant.policy` preset, and a per-site
+activation pair that isolates the tentpole question: global A8 versus A8
+spent only on the R4-rotated down projections.
+
+  PYTHONPATH=src python -m benchmarks.eval_ppl [--fast]
+
+Writes one JSON record per policy to ``results/eval_ppl.json``; wired
+into ``benchmarks.run`` and the nightly workflow.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import GROUP, evaluate, get_trained_model
+
+# (name, policy factory): factories defer imports so --fast stays light.
+
+
+def _policies(fast: bool):
+    from repro.quant.pipeline import PTQConfig
+    from repro.quant.policy import (
+        PRESETS, QuantPolicy, RotationPlan, RotationSpec, SiteRule,
+        get_policy,
+    )
+
+    def fit(policy):
+        """Presets assume full-scale groups; refit to bench width."""
+        return QuantPolicy(
+            rules=tuple(
+                SiteRule(**{**{f.name: getattr(r, f.name)
+                               for f in r.__dataclass_fields__.values()},
+                            "group": GROUP})
+                for r in policy.rules),
+            rotation=RotationPlan(
+                r1=RotationSpec(
+                    source=policy.rotation.r1.source,
+                    kind=policy.rotation.r1.kind, group=GROUP,
+                    seed=policy.rotation.r1.seed,
+                    compose=policy.rotation.r1.compose,
+                    compose_group=GROUP,
+                    learn=policy.rotation.r1.learn,
+                    learn_steps=min(policy.rotation.r1.learn_steps, 30)),
+                r2=policy.rotation.r2, r3=policy.rotation.r3,
+                r4_kind=policy.rotation.r4_kind, r4_group=GROUP,
+                r4_seed=policy.rotation.r4_seed),
+            act_bits=policy.act_bits, act_group=GROUP,
+            act_clip=policy.act_clip, kv_bits=policy.kv_bits,
+            seed=policy.seed, n_calib=policy.n_calib,
+            calib_seq=policy.calib_seq, name=policy.name,
+        )
+
+    out = [("float16", None)]
+    for name in sorted(PRESETS):
+        if fast and name == "gsr-over-spinquant":
+            continue  # Cayley optimization: the one slow preset
+        out.append((name, lambda n=name: fit(get_policy(n))))
+    # the tentpole pair: same W4 everywhere, A8 global vs A8 only where
+    # the online R4 rotation has tamed the activation outliers
+    out.append(("w4-global-a8", lambda: PTQConfig(
+        r1_kind="GSR", wakv="W4A8", method="rtn", group=GROUP).to_policy()))
+    out.append(("w4-a8-down-only", lambda: QuantPolicy(
+        rules=(SiteRule(pattern="*down*", bits=4, group=GROUP, method="rtn",
+                        act_bits=8, act_group=GROUP),
+               SiteRule(pattern="*", bits=4, group=GROUP, method="rtn")),
+        rotation=RotationPlan(r1=RotationSpec(kind="GSR", group=GROUP),
+                              r4_kind="GH", r4_group=GROUP),
+        act_bits=16, act_group=GROUP, name="w4-a8-down-only")))
+    return out
+
+
+def run(quiet: bool = False, fast: bool = False):
+    from repro import api
+    from repro.models.common import NOQUANT
+
+    arch, params = get_trained_model(quiet=quiet)
+    rows = []
+    for name, factory in _policies(fast):
+        if factory is None:
+            rec = dict(evaluate(arch, params, NOQUANT), policy="float16",
+                       packed_mib=0.0)
+        else:
+            qm = api.quantize(arch, params, factory())
+            rec = dict(evaluate(arch, qm.params, qm.spec), policy=name,
+                       packed_mib=round(qm.packed_bytes() / 2**20, 3))
+        rows.append(rec)
+        if not quiet:
+            print(f"  {name:22s} ppl={rec['ppl']:.3f} "
+                  f"top1={rec['top1']:.2f} ({rec['packed_mib']:.3f} MiB)")
+    os.makedirs("results", exist_ok=True)
+    with open("results/eval_ppl.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+def main():
+    import sys
+
+    rows = run(quiet=False, fast="--fast" in sys.argv)
+    base = rows[0]["ppl"]
+    worst = max(r["ppl"] for r in rows)
+    print(f"eval_ppl: float16 {base:.3f}, worst policy {worst:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -117,8 +117,35 @@ def _policy_r1(policy, dim: int) -> np.ndarray:
     return base if post is None else base @ post
 
 
+def make_activations(seed: int = 0) -> np.ndarray:
+    """Synthetic GEMM-input activations with massive-outlier channels —
+    the regime per-site A8 rules exist for (LLM.int8 / SpinQuant)."""
+    rng = np.random.default_rng(seed + 17)
+    x = rng.normal(size=(256, DIM)).astype(np.float32)
+    idx = rng.choice(DIM, size=6, replace=False)
+    x[:, idx] *= 25.0
+    return x
+
+
+def _act_rel_mse(bits: int, group: int, clip: float, seed: int) -> float:
+    from repro.quant.rtn import fake_quant_act_grouped
+
+    if bits >= 16:
+        return 0.0
+    x = make_activations(seed)
+    cfg = QuantConfig(bits=bits, group=min(group, DIM), symmetric=True,
+                      clip_ratio=clip)
+    dq = np.asarray(fake_quant_act_grouped(jnp.asarray(x), cfg))
+    return float(((dq - x) ** 2).sum() / (x ** 2).sum())
+
+
 def run_policies(names, quiet: bool = False):
-    """Weight-quant error of every distinct rule of each policy preset."""
+    """Weight- and activation-quant error of every distinct rule of each
+    policy preset.  Each row carries the rule's *resolved* activation
+    quantizer (rule override or policy default — exactly what
+    ``QuantizeSpec.act_for`` serves at that site), so a per-site A8 rule
+    (``*down*`` act_bits=8) produces a strictly different row than a
+    policy-global A8."""
     from repro.quant.policy import PRESETS, get_policy
 
     rows = []
@@ -128,6 +155,15 @@ def run_policies(names, quiet: bool = False):
         rot = Rotation(kind=RotationKind.GLOBAL_HADAMARD, dim=DIM, matrix=r1)
         for ri, rule in enumerate(policy.rules):
             cfg = rule.weight_cfg(DIM)
+            act_bits = (policy.act_bits if rule.act_bits is None
+                        else rule.act_bits)
+            act_group = (policy.act_group if rule.act_group is None
+                         else rule.act_group)
+            act_clip = (policy.act_clip if rule.act_clip is None
+                        else rule.act_clip)
+            act_err = float(np.mean([
+                _act_rel_mse(act_bits, act_group, act_clip, s)
+                for s in range(3)]))
             for wkind in ("gaussian", "outlier", "structured"):
                 errs = []
                 errs_id = []
@@ -141,15 +177,19 @@ def run_policies(names, quiet: bool = False):
                 rows.append({
                     "policy": name, "rule": ri, "pattern": rule.pattern,
                     "bits": rule.bits, "group": cfg.group,
+                    "act_bits": act_bits, "act_group": act_group,
                     "weights": wkind,
                     "rel_mse": float(np.mean(errs)),
                     "rel_mse_identity": float(np.mean(errs_id)),
+                    "act_rel_mse": act_err,
                 })
                 if not quiet:
                     r = rows[-1]
-                    print(f"{name:20s} rule{ri} ({rule.pattern:8s} W{rule.bits}) "
+                    print(f"{name:20s} rule{ri} ({rule.pattern:8s} "
+                          f"W{rule.bits}A{act_bits}) "
                           f"{wkind:10s}: {r['rel_mse']:.5f} "
-                          f"(identity {r['rel_mse_identity']:.5f})")
+                          f"(identity {r['rel_mse_identity']:.5f}, "
+                          f"act {r['act_rel_mse']:.5f})")
     os.makedirs("results", exist_ok=True)
     with open("results/quant_error_policy.json", "w") as f:
         json.dump(rows, f, indent=1)
@@ -168,7 +208,8 @@ def main():
         for r in run_policies(args.policy, quiet=True):
             print(f"quant_error_policy/{r['policy']}/rule{r['rule']}/"
                   f"{r['weights']},0,W{r['bits']}={r['rel_mse']:.5f};"
-                  f"I={r['rel_mse_identity']:.5f}")
+                  f"I={r['rel_mse_identity']:.5f};"
+                  f"A{r['act_bits']}={r['act_rel_mse']:.5f}")
         return
     for r in run():
         vals = ";".join(f"{k}={r[k]:.5f}" for k in KINDS)

@@ -45,6 +45,13 @@ def main() -> None:
         print(f"serve/{r['name']},0,tok_s={r['tokens_per_s']:.1f};"
               f"util={r['utilisation']:.3f};steps={r['decode_steps']}")
 
+    print("# === eval_ppl (policy presets on the trained bench model) ===")
+    from benchmarks import eval_ppl
+
+    for r in eval_ppl.run(quiet=True, fast=fast):
+        print(f"eval_ppl/{r['policy']},0,ppl={r['ppl']:.3f};"
+              f"top1={r['top1']:.2f};mib={r['packed_mib']:.3f}")
+
     if not fast:
         print("# === table1 (paper Table 1) ===")
         from benchmarks import table1

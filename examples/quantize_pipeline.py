@@ -19,14 +19,20 @@
    quantize once, save, re-serve forever.
 
 Custom recipes are plain data — e.g. GSR rotation with GPTQ attention
-but cheap RTN experts, W2 except the first layer:
+but cheap RTN experts, W2 except the first layer, and A8 activations
+spent only on the R4-rotated down projections (``act_bits`` on a rule
+overrides the policy-global activation default at the sites it
+matches):
 
     policy = api.QuantPolicy(
         rules=(api.SiteRule(pattern="*", layers=(0, 0), bits=4, group=32),
                api.SiteRule(pattern="w[qkv]", bits=2, group=32,
                             method="gptq"),
+               api.SiteRule(pattern="*down*", bits=2, group=32,
+                            act_bits=8),  # per-site activation rule
                api.SiteRule(pattern="*", bits=2, group=32)),
         rotation=api.RotationPlan(r1=api.RotationSpec(kind="GSR", group=32)),
+        act_bits=16,  # everywhere a rule doesn't say otherwise
     )
     qm = api.quantize(arch, params, policy)
 """

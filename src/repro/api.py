@@ -62,7 +62,11 @@ __all__ = [
     "load_quantized", "quantize",
 ]
 
-_FORMAT_VERSION = 2  # 2: manifest carries the resolved QuantPolicy
+# 2: manifest carries the resolved QuantPolicy
+# 3: + the resolved per-site activation table ("act_sites": the
+#    pattern -> (bits, group, clip) entries QuantizeSpec.act_for serves);
+#    format-2 artifacts (no act rules by construction) still load.
+_FORMAT_VERSION = 3
 
 
 # ---------------------------------------------------------------------------
@@ -165,6 +169,9 @@ class QuantizedModel:
             "format": _FORMAT_VERSION,
             "config": dataclasses.asdict(self.config),
             "policy": self.policy.to_json_dict(),
+            # resolved activation table (provenance; the policy above is
+            # canonical and re-derives it on load)
+            "act_sites": [list(entry) for entry in self.spec.act_sites],
             "packed": packed_meta,
             "dtypes": dtypes,
         }

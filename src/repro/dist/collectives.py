@@ -94,7 +94,7 @@ def expert_ffn_ep(
             "becd,edf->becf", xl, wu
         )
         h = apply_r4(h, spec, "w_down")
-        h = act_q(h, spec)
+        h = act_q(h, spec, site="w_down")
         yl = jnp.einsum("becf,efd->becd", h, wd)
         return all_to_all_combine(yl, expert_axis)
 

@@ -172,10 +172,21 @@ def main():
 
     from repro import api
 
+    from repro.models.registry import ARCH_IDS, get_arch
+
     ap = argparse.ArgumentParser(
         description="Serve a saved QuantizedModel artifact (no requantization)."
     )
-    ap.add_argument("--artifact", required=True, help="QuantizedModel.save dir")
+    ap.add_argument("--artifact", default=None, help="QuantizedModel.save dir")
+    ap.add_argument("--policy", default=None,
+                    help="no --artifact: quantize --arch under this "
+                         "QuantPolicy (preset name / JSON / path — per-site "
+                         "weight, rotation, and activation rules) and serve "
+                         "the result")
+    ap.add_argument("--arch", default="smollm-135m", choices=ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--save-artifact", default=None,
+                    help="persist the (policy-)quantized model to this dir")
     ap.add_argument("--backend", default="reference",
                     choices=("reference", "pallas"))
     ap.add_argument("--prompts", type=int, default=2)
@@ -190,13 +201,26 @@ def main():
                     help="KV pool block size (continuous mode)")
     args = ap.parse_args()
 
-    qm = api.load_quantized(args.artifact, backend=args.backend)
-    cfg = qm.config
-    n_packed = sum(1 for l in jax.tree.leaves(qm.params, is_leaf=is_packed)
-                   if is_packed(l))
-    print(f"[quant_serve] loaded {cfg.name}: {n_packed} packed weight stacks, "
-          f"{qm.packed_bytes()/2**20:.2f} MiB packed "
-          f"({qm.policy.describe()})")
+    if args.artifact:
+        qm = api.load_quantized(args.artifact, backend=args.backend)
+        cfg = qm.config
+        n_packed = sum(1 for l in jax.tree.leaves(qm.params, is_leaf=is_packed)
+                       if is_packed(l))
+        print(f"[quant_serve] loaded {cfg.name}: {n_packed} packed weight "
+              f"stacks, {qm.packed_bytes()/2**20:.2f} MiB packed "
+              f"({qm.policy.describe()})")
+    elif args.policy:
+        arch = get_arch(args.arch, reduced=args.reduced)
+        params = arch.init(jax.random.PRNGKey(0), jnp.float32)
+        qm = api.quantize(arch, params, api.get_policy(args.policy))
+        cfg = qm.config
+        print(f"[quant_serve] PTQ done: {qm.policy.describe()} "
+              f"({qm.packed_bytes()/2**20:.2f} MiB packed)")
+    else:
+        ap.error("one of --artifact or --policy is required")
+    if args.save_artifact:
+        path = qm.save(args.save_artifact)
+        print(f"[quant_serve] artifact saved to {path}")
 
     eng = qm.serve(api.ServeConfig(max_seq=args.max_seq,
                                    batch_slots=args.prompts,

@@ -84,6 +84,13 @@ class QuantizeSpec:
     The offline fusion (:mod:`repro.core.fuse`) consults the same table,
     so the weight pre-rotation and the online activation rotation always
     cancel site-for-site.
+
+    ``act_sites`` is the activation-side analogue: ``(site glob, bits,
+    group, clip)`` entries matched first-wins against the site tag each
+    ``act_q`` call passes (``wq``, ``w_down``, ``lm_head``, ...); sites
+    with no match fall back to the global ``act_bits``/``act_group``/
+    ``act_clip``.  Both tables share one lookup idiom so per-site
+    activation precision and per-site online rotation compose.
     """
 
     act_bits: int = 16
@@ -96,10 +103,27 @@ class QuantizeSpec:
     kv_bits: int = 16
     use_kernels: bool = False
     r4_sites: Tuple[Tuple[str, str, int, int], ...] = ()
+    act_sites: Tuple[Tuple[str, int, int, float], ...] = ()
 
     @property
     def act_enabled(self) -> bool:
-        return self.act_bits < 16
+        return self.act_bits < 16 or any(b < 16 for _, b, _, _ in self.act_sites)
+
+    def act_for(self, site: str) -> Tuple[int, int, float]:
+        """(bits, group, clip_ratio) of the activation quantizer at ``site``.
+
+        Same resolution idiom as :meth:`r4_for`: ``act_q`` call sites pass
+        *bare* site tags, so a slash-qualified rule pattern falls back to
+        matching by its last path component; first match wins; no match =
+        the spec's global activation settings.
+        """
+        import fnmatch
+
+        for pattern, bits, group, clip in self.act_sites:
+            if (fnmatch.fnmatchcase(site, pattern)
+                    or fnmatch.fnmatchcase(site, pattern.rsplit("/", 1)[-1])):
+                return bits, group, clip
+        return self.act_bits, self.act_group, self.act_clip
 
     def r4_for(self, site: str) -> Tuple[str, int, int]:
         """(kind, group, seed) of the online R4 rotation at ``site``.
@@ -122,21 +146,31 @@ class QuantizeSpec:
 NOQUANT = QuantizeSpec()
 
 
-def act_q(x: jax.Array, spec: QuantizeSpec) -> jax.Array:
-    """Grouped symmetric activation fake-quant (no-op at 16 bits)."""
+def act_q(x: jax.Array, spec: QuantizeSpec, site: str) -> jax.Array:
+    """Grouped symmetric activation fake-quant (no-op at 16 bits).
+
+    ``site`` tags which GEMM input this activation feeds (``wq``,
+    ``w_down``, ``lm_head``, ...) so a policy's per-site activation rules
+    (``spec.act_sites``) can spend low-bit precision only where it
+    matters; every call site is statically tagged and linted
+    (``tests/test_act_sites_lint.py``).
+    """
     if not spec.act_enabled:
         return x
-    group = min(spec.act_group, x.shape[-1])
+    bits, act_group, clip = spec.act_for(site)
+    if bits >= 16:
+        return x
+    group = min(act_group, x.shape[-1])
     if x.shape[-1] % group:
         group = x.shape[-1]
     if spec.use_kernels:
         from repro.kernels import ops as kops
 
-        return kops.rtn_fake_quant(x, bits=spec.act_bits, group=group, clip_ratio=spec.act_clip)
+        return kops.rtn_fake_quant(x, bits=bits, group=group, clip_ratio=clip)
     from repro.quant.qtypes import QuantConfig
     from repro.quant.rtn import fake_quant_act_grouped
 
-    cfg = QuantConfig(bits=spec.act_bits, group=group, symmetric=True, clip_ratio=spec.act_clip)
+    cfg = QuantConfig(bits=bits, group=group, symmetric=True, clip_ratio=clip)
     return fake_quant_act_grouped(x, cfg)
 
 
@@ -486,10 +520,13 @@ def paged_decode_attention(
 
 def swiglu(x: jax.Array, wgate: jax.Array, wup: jax.Array, wdown: jax.Array,
            spec: QuantizeSpec = NOQUANT, site: str = "w_down") -> jax.Array:
-    xq = act_q(x, spec)
+    # the gate/up input tag is derived from the down-projection site so
+    # shared-expert blocks resolve their own rules (shared_down ->
+    # shared_gate)
+    xq = act_q(x, spec, site=site.replace("down", "gate"))
     hidden = jax.nn.silu(xq @ wgate) * (xq @ wup)
     hidden = apply_r4(hidden, spec, site)  # online R4 before down projection
-    hidden = act_q(hidden, spec)
+    hidden = act_q(hidden, spec, site=site)
     return hidden @ wdown
 
 

@@ -49,17 +49,17 @@ def _project_q(lp, x, cfg: ModelConfig, positions, spec):
     b, s, _ = x.shape
     h = cfg.n_heads
     qk_head = cfg.qk_nope_dim + cfg.qk_rope_dim
-    xq = act_q(x, spec)
+    xq = act_q(x, spec, site="wq_a")
     q_lat = xq @ lp["wq_a"]
     q_lat = common.rmsnorm(q_lat, lp["q_norm"], cfg.norm_eps)
-    q = (act_q(q_lat, spec) @ lp["wq_b"]).reshape(b, s, h, qk_head)
+    q = (act_q(q_lat, spec, site="wq_b") @ lp["wq_b"]).reshape(b, s, h, qk_head)
     q_nope, q_rope = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim :]
     q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
     return q_nope, q_rope
 
 
 def _project_latent(lp, x, cfg: ModelConfig, positions, spec):
-    xq = act_q(x, spec)
+    xq = act_q(x, spec, site="wkv_a")
     kv = xq @ lp["wkv_a"]  # (B, S, rank + rope)
     c_kv = common.rmsnorm(kv[..., : cfg.kv_lora_rank], lp["kv_norm"], cfg.norm_eps)
     k_rope = kv[..., cfg.kv_lora_rank :][:, :, None, :]  # shared single head
@@ -83,7 +83,7 @@ def mla_prefill_attention(
         [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, cfg.qk_rope_dim))], -1
     )
     out = common.flash_attention(q, k, v, causal=True)  # (B,S,H,v)
-    out = act_q(out.reshape(b, s, h * cfg.v_head_dim), spec)
+    out = act_q(out.reshape(b, s, h * cfg.v_head_dim), spec, site="wo")
     return out @ lp["wo"], c_kv, k_rope
 
 
@@ -139,7 +139,7 @@ def mla_paged_decode_attention(
     out_pages = tuple(jnp.squeeze(p, axis=3) for p in new_pages)
     out = jnp.einsum("bqhr,rhv->bqhv", out_lat.astype(x.dtype),
                      wkv_b[..., cfg.qk_nope_dim:])
-    out = act_q(out.reshape(b, 1, h * cfg.v_head_dim), spec)
+    out = act_q(out.reshape(b, 1, h * cfg.v_head_dim), spec, site="wo")
     return out @ lp["wo"], out_pages
 
 
@@ -177,5 +177,5 @@ def mla_decode_attention(
     out_lat = jnp.einsum("bhqs,bsr->bqhr", p, ckv_cache.astype(jnp.float32))  # (B,1,H,rank)
     wv = wkv_b[..., cfg.qk_nope_dim :]  # (rank, H, v)
     out = jnp.einsum("bqhr,rhv->bqhv", out_lat.astype(x.dtype), wv)
-    out = act_q(out.reshape(b, 1, h * cfg.v_head_dim), spec)
+    out = act_q(out.reshape(b, 1, h * cfg.v_head_dim), spec, site="wo")
     return out @ lp["wo"]

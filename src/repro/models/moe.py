@@ -182,7 +182,7 @@ def moe_apply(lp: Dict, x: jax.Array, cfg: ModelConfig, spec: QuantizeSpec = com
         return ys.swapaxes(0, 1).reshape(b, s, d)
 
     cap = capacity(cfg, s)  # per-sequence capacity (k <= cap by construction)
-    xq = act_q(x, spec)  # (B, S, D)
+    xq = act_q(x, spec, site="router")  # (B, S, D): feeds router + experts
 
     # --- routing (per sequence) ---
     logits = xq.astype(jnp.float32) @ lp["router"].astype(jnp.float32)  # (B,S,E)
@@ -238,7 +238,7 @@ def moe_apply(lp: Dict, x: jax.Array, cfg: ModelConfig, spec: QuantizeSpec = com
             "becd,edf->becf", xe, dense_w(lp["w_up"])
         )
         h = apply_r4(h, spec, "w_down")
-        h = act_q(h, spec)
+        h = act_q(h, spec, site="w_down")
         ye = jnp.einsum("becf,efd->becd", h, dense_w(lp["w_down"]))  # (B, E, cap, D)
         ye = _pin(ye, "data", "model", None, None)
 
@@ -258,7 +258,7 @@ def moe_apply(lp: Dict, x: jax.Array, cfg: ModelConfig, spec: QuantizeSpec = com
     if cfg.n_shared_experts:
         hs = jax.nn.silu(xq @ lp["shared_gate"]) * (xq @ lp["shared_up"])
         hs = apply_r4(hs, spec, "shared_down")
-        hs = act_q(hs, spec)
+        hs = act_q(hs, spec, site="shared_down")
         y = y + hs @ lp["shared_down"]
     return y.reshape(b, s, d).astype(x.dtype)
 

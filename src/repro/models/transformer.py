@@ -123,7 +123,7 @@ def embed_inputs(cfg: ModelConfig, params: Dict, batch: Dict) -> jax.Array:
 
 def lm_logits(cfg: ModelConfig, params: Dict, h: jax.Array, spec: QuantizeSpec) -> jax.Array:
     h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
-    h = act_q(h, spec)
+    h = act_q(h, spec, site="lm_head")
     if cfg.modality == "audio":
         return jnp.einsum("bsd,kdv->bskv", h, params["lm_head"])
     return h @ params["lm_head"]
@@ -137,7 +137,7 @@ def lm_logits(cfg: ModelConfig, params: Dict, h: jax.Array, spec: QuantizeSpec) 
 def _qkv(cfg: ModelConfig, lp: Dict, x: jax.Array, positions, spec: QuantizeSpec):
     b, s, _ = x.shape
     hd = cfg.hd
-    xq = act_q(x, spec)
+    xq = act_q(x, spec, site="wq")
     q = xq @ lp["wq"]
     k = xq @ lp["wk"]
     v = xq @ lp["wv"]
@@ -160,7 +160,7 @@ def attn_block_train(cfg, lp, h, positions, spec) -> jax.Array:
     q, k, v = _qkv(cfg, lp, x, positions, spec)
     attn = common.flash_attention(q, k, v, causal=True, window=cfg.sliding_window)
     b, s = x.shape[:2]
-    attn = act_q(attn.reshape(b, s, cfg.n_heads * cfg.hd), spec)
+    attn = act_q(attn.reshape(b, s, cfg.n_heads * cfg.hd), spec, site="wo")
     return h + attn @ lp["wo"]
 
 
@@ -232,7 +232,8 @@ def forward(
             f = jax.checkpoint(group_fn, policy=jax.checkpoint_policies.nothing_saveable)
         h, caps = jax.lax.scan(f, h, params["layers"])
         if return_hidden:
-            return act_q(rmsnorm(h, params["final_norm"], cfg.norm_eps), spec)
+            return act_q(rmsnorm(h, params["final_norm"], cfg.norm_eps),
+                         spec, site="lm_head")
         return lm_logits(cfg, params, h, spec)
 
     def layer_fn(h, lp):
@@ -251,7 +252,8 @@ def forward(
         f = jax.checkpoint(layer_fn, policy=jax.checkpoint_policies.nothing_saveable)
     h, caps = jax.lax.scan(f, h, params["layers"])
     if return_hidden:
-        return act_q(rmsnorm(h, params["final_norm"], cfg.norm_eps), spec)
+        return act_q(rmsnorm(h, params["final_norm"], cfg.norm_eps),
+                     spec, site="lm_head")
     logits = lm_logits(cfg, params, h, spec)
     if capture:
         return logits, caps
@@ -323,7 +325,7 @@ def _prefill_std_layer(cfg, lp, lc, h, positions, spec, kvq, b, s):
     x = rmsnorm(h, lp["attn_norm"], cfg.norm_eps)
     q, k, v = _qkv(cfg, lp, x, positions, spec)
     attn = common.flash_attention(q, k, v, causal=True, window=cfg.sliding_window)
-    attn = act_q(attn.reshape(b, s, cfg.n_heads * cfg.hd), spec)
+    attn = act_q(attn.reshape(b, s, cfg.n_heads * cfg.hd), spec, site="wo")
     h = h + attn @ lp["wo"]
     if kvq:
         kc, ks_, kz = _quant_tokens(k, spec)
@@ -399,7 +401,8 @@ def prefill(cfg: ModelConfig, params: Dict, batch: Dict, cache: Dict,
         else:
             q, k, v = _qkv(cfg, lp, x, positions, spec)
             attn = common.flash_attention(q, k, v, causal=True, window=cfg.sliding_window)
-            attn = act_q(attn.reshape(b, s, cfg.n_heads * cfg.hd), spec)
+            attn = act_q(attn.reshape(b, s, cfg.n_heads * cfg.hd), spec,
+                         site="wo")
             h = h + attn @ lp["wo"]
             if kvq:
                 kc, ks_, kz = _quant_tokens(k, spec)
@@ -500,7 +503,8 @@ def decode(cfg: ModelConfig, params: Dict, tokens: jax.Array, cache: Dict,
             lc = _layer(caches, i)
             k_all, v_all = lc["k"], lc["v"]
         attn = common.decode_attention(q, k_all, v_all, length + 1, window=cfg.sliding_window)
-        attn = act_q(attn.reshape(b, 1, cfg.n_heads * cfg.hd), spec)
+        attn = act_q(attn.reshape(b, 1, cfg.n_heads * cfg.hd), spec,
+                     site="wo")
         return h + attn @ lp["wo"], caches
 
     def _mla_layer(lp, caches, i, h):
@@ -621,7 +625,7 @@ def decode_paged(cfg: ModelConfig, params: Dict, tokens: jax.Array,
         pg = dict(pg)
         pg.update(zip(order, new_pages))
         attn = act_q(attn.astype(h.dtype).reshape(b, 1, cfg.n_heads * cfg.hd),
-                     spec)
+                     spec, site="wo")
         return h + attn @ lp["wo"], pg
 
     def _mla_layer(lp, pg, i, h):

@@ -88,7 +88,7 @@ def _mlstm_qkvg(cfg, lp, x, spec):
     b, s, d = x.shape
     h = cfg.n_heads
     dh = d // h
-    xq = act_q(x, spec)
+    xq = act_q(x, spec, site="wq")
     q = (xq @ lp["wq"]).reshape(b, s, h, dh)
     k = (xq @ lp["wk"]).reshape(b, s, h, dh) / np.sqrt(dh)
     v = (xq @ lp["wv"]).reshape(b, s, h, dh)
@@ -107,7 +107,7 @@ def mlstm_block(cfg, lp, hres, spec, state=None, *, chunk=128):
     )
     b, s, d = x.shape
     y = y.reshape(b, s, d) * ogate
-    y = act_q(y, spec)
+    y = act_q(y, spec, site="out_proj")
     return hres + y @ lp["out_proj"], new_state
 
 
@@ -121,7 +121,7 @@ def mlstm_block_step(cfg, lp, hres, spec, state):
     )
     b, _, d = x.shape
     y = y.reshape(b, 1, d) * ogate
-    y = act_q(y, spec)
+    y = act_q(y, spec, site="out_proj")
     return hres + y @ lp["out_proj"], new_state
 
 
@@ -149,7 +149,7 @@ def slstm_block(cfg, lp, hres, spec, state=None):
     h_heads = cfg.n_heads
     dh = d // h_heads
     x = rmsnorm(hres, lp["norm"], cfg.norm_eps)
-    gx = act_q(x, spec) @ lp["wx"]  # (B,S,4D)
+    gx = act_q(x, spec, site="wx") @ lp["wx"]  # (B,S,4D)
     if state is None:
         z = jnp.zeros((b, h_heads, dh), jnp.float32)
         state = (z, z, z)
@@ -160,17 +160,17 @@ def slstm_block(cfg, lp, hres, spec, state=None):
 
     state, ys = jax.lax.scan(step, state, gx.astype(jnp.float32).swapaxes(0, 1))
     y = ys.swapaxes(0, 1).reshape(b, s, d).astype(hres.dtype)
-    y = act_q(y, spec)
+    y = act_q(y, spec, site="out_proj")
     return hres + y @ lp["out_proj"], state
 
 
 def slstm_block_step(cfg, lp, hres, spec, state):
     b, _, d = hres.shape
     x = rmsnorm(hres, lp["norm"], cfg.norm_eps)
-    gx = (act_q(x, spec) @ lp["wx"])[:, 0].astype(jnp.float32)
+    gx = (act_q(x, spec, site="wx") @ lp["wx"])[:, 0].astype(jnp.float32)
     h_new, state = _slstm_cell(cfg, lp, gx, state)
     y = h_new.reshape(b, 1, d).astype(hres.dtype)
-    y = act_q(y, spec)
+    y = act_q(y, spec, site="out_proj")
     return hres + y @ lp["out_proj"], state
 
 
@@ -236,7 +236,7 @@ def forward(cfg: ModelConfig, params: Dict, batch: Dict, spec: QuantizeSpec = NO
     h, _, _ = _group_scan(cfg, params, h, spec, st["m"], st["s"], chunk=chunk,
                           emit_state=False)
     h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
-    h = act_q(h, spec)
+    h = act_q(h, spec, site="lm_head")
     if return_hidden:
         return h
     return h @ params["lm_head"]
@@ -247,7 +247,7 @@ def prefill(cfg: ModelConfig, params: Dict, batch: Dict, cache: Dict,
     h = jnp.take(params["embed"], batch["tokens"], axis=0)
     h, m2, s2 = _group_scan(cfg, params, h, spec, cache["m"], cache["s"], chunk=chunk)
     hn = rmsnorm(h[:, -1:], params["final_norm"], cfg.norm_eps)
-    logits = act_q(hn, spec) @ params["lm_head"]
+    logits = act_q(hn, spec, site="lm_head") @ params["lm_head"]
     return logits, {"m": m2, "s": s2, "length": jnp.asarray(h.shape[1], jnp.int32)}
 
 
@@ -272,5 +272,5 @@ def decode(cfg: ModelConfig, params: Dict, tokens: jax.Array, cache: Dict,
 
     h, (m2, s2) = jax.lax.scan(group_fn, h, (ml, params["slstm"], cache["m"], cache["s"]))
     hn = rmsnorm(h, params["final_norm"], cfg.norm_eps)
-    logits = act_q(hn, spec) @ params["lm_head"]
+    logits = act_q(hn, spec, site="lm_head") @ params["lm_head"]
     return logits[:, 0], {"m": m2, "s": s2, "length": cache["length"] + 1}

@@ -87,7 +87,7 @@ def _ssd_inputs(cfg, lp, x, spec, conv_state=None):
     di = _di(cfg)
     nh, st = cfg.ssm_heads, cfg.ssm_state
     dh = di // nh
-    xq = act_q(x, spec)
+    xq = act_q(x, spec, site="in_proj")
     proj = xq @ lp["in_proj"]  # (B,S,2di+2st+nh)
     z, xin, bmat, cmat, dt_raw = jnp.split(
         proj, [di, 2 * di, 2 * di + st, 2 * di + 2 * st], axis=-1
@@ -116,7 +116,7 @@ def mamba_block(cfg, lp, hres, spec, ssm_state=None, conv_state=None, *, chunk=1
     )
     y = y + lp["D_skip"].astype(jnp.float32)[None, None, :, None] * xh
     y = (y.reshape(b, s, di) * jax.nn.silu(z)).astype(hres.dtype)
-    y = act_q(y, spec)
+    y = act_q(y, spec, site="out_proj")
     return hres + y @ lp["out_proj"], (ssm_s, ssm_n), conv_state
 
 
@@ -132,7 +132,7 @@ def mamba_block_step(cfg, lp, hres, spec, ssm_state, conv_state):
     )
     y = y + lp["D_skip"].astype(jnp.float32)[None, :, None] * sq(xh)
     y = (y.reshape(b, 1, di) * jax.nn.silu(z)).astype(hres.dtype)
-    y = act_q(y, spec)
+    y = act_q(y, spec, site="out_proj")
     return hres + y @ lp["out_proj"], ssm_state, conv_state
 
 
@@ -144,7 +144,7 @@ def mamba_block_step(cfg, lp, hres, spec, ssm_state, conv_state):
 def _shared_qkv(cfg, sp, x, positions, spec):
     b, s, _ = x.shape
     hd = cfg.hd
-    xq = act_q(x, spec)
+    xq = act_q(x, spec, site="wq")
     q = (xq @ sp["wq"]).reshape(b, s, cfg.n_heads, hd)
     k = (xq @ sp["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
     v = (xq @ sp["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
@@ -159,7 +159,7 @@ def shared_block(cfg, sp, hres, positions, spec, kv=None, length=None):
     x = rmsnorm(hres, sp["attn_norm"], cfg.norm_eps)
     q, k, v = _shared_qkv(cfg, sp, x, positions, spec)
     attn = common.flash_attention(q, k, v, causal=True)
-    attn = act_q(attn.reshape(b, s, cfg.n_heads * cfg.hd), spec)
+    attn = act_q(attn.reshape(b, s, cfg.n_heads * cfg.hd), spec, site="wo")
     h = hres + attn @ sp["wo"]
     x2 = rmsnorm(h, sp["mlp_norm"], cfg.norm_eps)
     h = h + common.swiglu(x2, sp["w_gate"], sp["w_up"], sp["w_down"], spec)
@@ -175,7 +175,7 @@ def shared_block_step(cfg, sp, hres, position, spec, k_cache, v_cache, length):
     k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype), (0, position, 0, 0))
     v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype), (0, position, 0, 0))
     attn = common.decode_attention(q, k_cache, v_cache, length + 1)
-    attn = act_q(attn.reshape(b, 1, cfg.n_heads * cfg.hd), spec)
+    attn = act_q(attn.reshape(b, 1, cfg.n_heads * cfg.hd), spec, site="wo")
     h = hres + attn @ sp["wo"]
     x2 = rmsnorm(h, sp["mlp_norm"], cfg.norm_eps)
     h = h + common.swiglu(x2, sp["w_gate"], sp["w_up"], sp["w_down"], spec)
@@ -281,7 +281,7 @@ def forward(cfg: ModelConfig, params: Dict, batch: Dict, spec: QuantizeSpec = NO
     state = init_state(cfg, b, max_attn_seq=1, dtype=h.dtype)
     h, *_ = _run(cfg, params, h, positions, spec, state, chunk=chunk, collect_kv=False)
     h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
-    h = act_q(h, spec)
+    h = act_q(h, spec, site="lm_head")
     if return_hidden:
         return h
     return h @ params["lm_head"]
@@ -304,7 +304,7 @@ def prefill(cfg: ModelConfig, params: Dict, batch: Dict, cache: Dict,
     cache = dict(cache, ssm_s=ss2, ssm_n=nn2, conv=cv2,
                  length=jnp.asarray(s, jnp.int32))
     hn = rmsnorm(h[:, -1:], params["final_norm"], cfg.norm_eps)
-    return act_q(hn, spec) @ params["lm_head"], cache
+    return act_q(hn, spec, site="lm_head") @ params["lm_head"], cache
 
 
 def decode(cfg: ModelConfig, params: Dict, tokens: jax.Array, cache: Dict,
@@ -356,7 +356,7 @@ def decode(cfg: ModelConfig, params: Dict, tokens: jax.Array, cache: Dict,
         nn2 = jnp.concatenate([nn2, tnn2]) if nn2 is not None else tnn2
         cv2 = jnp.concatenate([cv2, tcv2]) if cv2 is not None else tcv2
     hn = rmsnorm(h, params["final_norm"], cfg.norm_eps)
-    logits = act_q(hn, spec) @ params["lm_head"]
+    logits = act_q(hn, spec, site="lm_head") @ params["lm_head"]
     return logits[:, 0], dict(cache, ssm_s=ss2, ssm_n=nn2, conv=cv2, k=k2, v=v2,
                               length=length + 1)
 
@@ -396,7 +396,7 @@ def decode_paged(cfg: ModelConfig, params: Dict, tokens: jax.Array,
             q, (kpg,), (vpg,), None, (k[:, 0],), (v[:, 0],), None,
             tables, lengths, g)
         attn = act_q(attn.astype(h.dtype).reshape(b, 1, cfg.n_heads * cfg.hd),
-                     spec)
+                     spec, site="wo")
         h = h + attn @ sp["wo"]
         x2 = rmsnorm(h, sp["mlp_norm"], cfg.norm_eps)
         h = h + common.swiglu(x2, sp["w_gate"], sp["w_up"], sp["w_down"], spec)
@@ -424,6 +424,6 @@ def decode_paged(cfg: ModelConfig, params: Dict, tokens: jax.Array,
         nn2 = jnp.concatenate([nn2, tnn2]) if nn2 is not None else tnn2
         cv2 = jnp.concatenate([cv2, tcv2]) if cv2 is not None else tcv2
     hn = rmsnorm(h, params["final_norm"], cfg.norm_eps)
-    logits = act_q(hn, spec) @ params["lm_head"]
+    logits = act_q(hn, spec, site="lm_head") @ params["lm_head"]
     return (logits[:, 0], dict(paged, k=kpg, v=vpg),
             dict(state, ssm_s=ss2, ssm_n=nn2, conv=cv2))

@@ -217,18 +217,20 @@ def collect_dense_hessians(cfg: ModelConfig, params: Dict, batches,
         for i in range(l):
             lp = jax.tree.map(lambda a: a[i], params["layers"])
             x = rmsnorm(h, lp["attn_norm"], cfg.norm_eps)
-            acc["attn_in"].append(gptq_mod.collect_hessian(act_q(x, spec)))
+            acc["attn_in"].append(
+                gptq_mod.collect_hessian(act_q(x, spec, site="wq")))
             q, k, v = tmod._qkv(cfg, lp, x, positions, spec)
             attn = mcommon.flash_attention(q, k, v, causal=True,
                                            window=cfg.sliding_window)
-            ao = act_q(attn.reshape(b, s, cfg.n_heads * cfg.hd), spec)
+            ao = act_q(attn.reshape(b, s, cfg.n_heads * cfg.hd), spec,
+                       site="wo")
             acc["wo_in"].append(gptq_mod.collect_hessian(ao))
             h = h + ao @ lp["wo"]
             x2 = rmsnorm(h, lp["mlp_norm"], cfg.norm_eps)
-            xq = act_q(x2, spec)
+            xq = act_q(x2, spec, site="w_gate")
             acc["mlp_in"].append(gptq_mod.collect_hessian(xq))
             hidden = jax.nn.silu(xq @ lp["w_gate"]) * (xq @ lp["w_up"])
-            hidden = act_q(apply_r4(hidden, spec), spec)
+            hidden = act_q(apply_r4(hidden, spec), spec, site="w_down")
             acc["down_in"].append(gptq_mod.collect_hessian(hidden))
             h = h + hidden @ lp["w_down"]
         cur = {k: jnp.stack(v) for k, v in acc.items()}

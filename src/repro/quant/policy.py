@@ -30,8 +30,9 @@ Shipped presets (``get_policy``):
 ``paper-table1``    the paper's main setting: GSR R1, W2 asymmetric MSE-
                     clipped GPTQ group-128 everywhere, A16.
 ``w2-sensitive-fp4``  W2 everywhere except the sensitive down projections
-                    (``*down*``) kept at 4-bit — the mixed-precision
-                    recipe unreachable from the flat config.
+                    (``*down*``) kept at 4-bit with A8 activations on
+                    those same sites — the mixed-precision recipe
+                    unreachable from the flat config.
 ``gsr-over-spinquant``  SpinQuant-lite learned R1 composed with a GSR
                     post-rotation (paper Sec. 4: GSR layered over
                     optimization-based rotations), W4 RTN.
@@ -195,6 +196,15 @@ class SiteRule:
     qualified tree path — so a slash-qualified pattern's last component
     is what a rotation override resolves by (see
     ``QuantizeSpec.r4_for``).
+
+    ``act_bits``/``act_group``/``act_clip`` override the policy-global
+    activation quantizer for the GEMM inputs this rule matches — the
+    activation-side mirror of the weight fields, resolved by the same
+    first-match-wins machinery (``QuantizeSpec.act_for``), with the same
+    layer-uniformity constraint as ``rotation``: the ``act_q`` op runs
+    inside the scanned layer body.  ``None`` inherits the policy global;
+    a rule with no act override set contributes nothing to the resolved
+    activation table.
     """
 
     pattern: str = "*"
@@ -206,6 +216,9 @@ class SiteRule:
     mse_clip: bool = True
     clip_ratio: float = 1.0
     rotation: Optional[str] = None  # per-site online R4 override
+    act_bits: Optional[int] = None  # per-site activation precision override
+    act_group: Optional[int] = None
+    act_clip: Optional[float] = None
 
     def __post_init__(self):
         if not self.pattern:
@@ -222,6 +235,15 @@ class SiteRule:
         if self.rotation is not None and self.rotation not in _ROTATION_KINDS:
             raise _err(f"SiteRule.rotation {self.rotation!r} unknown",
                        hint=f"expected one of {_ROTATION_KINDS}")
+        if self.act_bits is not None and self.act_bits not in _BITS:
+            raise _err(f"SiteRule.act_bits {self.act_bits} unsupported",
+                       hint=f"expected one of {_BITS} or None (inherit)")
+        if self.act_group is not None and self.act_group < 1:
+            raise _err(f"SiteRule.act_group must be >= 1, got "
+                       f"{self.act_group}")
+        if self.act_clip is not None and not (0.0 < self.act_clip <= 1.0):
+            raise _err(f"SiteRule.act_clip must be in (0, 1], got "
+                       f"{self.act_clip}")
         if self.layers is not None:
             lo, hi = self.layers
             if lo < 0 or (hi is not None and hi < lo):
@@ -234,6 +256,17 @@ class SiteRule:
                     "rotation", hint="online R4 runs inside the scanned "
                     "layer body, so it must be layer-uniform per site; use "
                     "an un-ranged rule for the rotation override")
+            if self.has_act_override:
+                raise _err(
+                    "a layer-restricted SiteRule cannot override activation "
+                    "quantization", hint="act_q runs inside the scanned "
+                    "layer body, so it must be layer-uniform per site; use "
+                    "an un-ranged rule for the act override")
+
+    @property
+    def has_act_override(self) -> bool:
+        return (self.act_bits is not None or self.act_group is not None
+                or self.act_clip is not None)
 
     # -- matching --------------------------------------------------------
     def matches(self, site: str, layer: Optional[int]) -> bool:
@@ -267,8 +300,11 @@ class QuantPolicy:
 
     Rules resolve first-match-wins per ``(site, layer)``; a site no rule
     matches stays unquantized (add a trailing ``SiteRule("*")`` for a
-    default).  ``act_bits``/``kv_bits`` are policy-global: activations
-    and KV quantize online with one spec for the whole model.
+    default).  ``act_bits``/``act_group``/``act_clip`` are the
+    *default* activation quantizer — a rule carrying
+    ``act_bits``/``act_group``/``act_clip`` overrides them for the GEMM
+    inputs it matches (the first act-carrying rule wins; see
+    ``QuantizeSpec.act_for``).  ``kv_bits`` stays policy-global.
     """
 
     rules: Tuple[SiteRule, ...] = (SiteRule(),)
@@ -310,17 +346,31 @@ class QuantPolicy:
         return resolve_policy(self, cfg)
 
     def spec(self) -> QuantizeSpec:
-        """The serving/online spec this policy implies (R3/R4/acts/KV)."""
+        """The serving/online spec this policy implies (R3/R4/acts/KV).
+
+        Rules with activation overrides lower into the spec's resolved
+        ``act_sites`` table (pattern -> (bits, group, clip), unset fields
+        inheriting the policy globals) exactly as rotation overrides
+        lower into ``r4_sites``; a policy with no act overrides lowers to
+        an empty table, so every pre-existing config is untouched.
+        """
         plan = self.rotation
         r4_sites = tuple(
             (r.pattern, r.rotation, r.group, plan.r4_seed)
             for r in self.rules if r.rotation is not None
         )
+        act_sites = tuple(
+            (r.pattern,
+             self.act_bits if r.act_bits is None else r.act_bits,
+             self.act_group if r.act_group is None else r.act_group,
+             self.act_clip if r.act_clip is None else r.act_clip)
+            for r in self.rules if r.has_act_override
+        )
         return QuantizeSpec(
             act_bits=self.act_bits, act_group=self.act_group,
             act_clip=self.act_clip, r4_kind=plan.r4_kind,
             r4_group=plan.r4_group, r4_seed=plan.r4_seed, r3=plan.r3,
-            kv_bits=self.kv_bits, r4_sites=r4_sites,
+            kv_bits=self.kv_bits, r4_sites=r4_sites, act_sites=act_sites,
         )
 
     # -- serialization ---------------------------------------------------
@@ -358,6 +408,9 @@ class QuantPolicy:
                if r.layers else "")
             + f"->W{r.bits}g{r.group}/{r.method}"
             + (f"/R4={r.rotation}" if r.rotation else "")
+            + (f"/A{self.act_bits if r.act_bits is None else r.act_bits}"
+               + (f"g{r.act_group}" if r.act_group is not None else "")
+               if r.has_act_override else "")
             for r in self.rules)
         return (f"policy[{self.name or 'custom'}] R1={src} "
                 f"A{self.act_bits}KV{self.kv_bits}: {rules}")
@@ -442,6 +495,21 @@ def _site_layer_map(cfg, path: Tuple[str, ...], lead: Tuple[int, ...]
     # flat stack: axis 0 is the layer; extra axes (E) replicate the layer.
     reps = int(np.prod(lead[1:], dtype=np.int64)) if len(lead) > 1 else 1
     return np.repeat(np.arange(lead[0]), reps)
+
+
+def act_site_names() -> frozenset:
+    """Every site tag an ``act_q`` call may carry: the union of all
+    families' quantizable leaf names plus ``lm_head`` (activation-only —
+    the final-norm hidden ahead of the output projection; the projection
+    weight itself stays float).  The AST lint test
+    (``tests/test_act_sites_lint.py``) checks every literal tag in the
+    model code against this vocabulary, so policy act rules written
+    against ``resolve_policy``'s site names always have a matching tag.
+    """
+    from repro.quant.pipeline import _FAMILY_WEIGHTS
+
+    names = frozenset().union(*_FAMILY_WEIGHTS.values())
+    return names | {"lm_head"}
 
 
 def enumerate_sites(cfg, params) -> List[Tuple[str, Tuple[str, ...], object]]:
@@ -550,8 +618,11 @@ def _w2_sensitive_fp4() -> QuantPolicy:
     return QuantPolicy(
         name="w2-sensitive-fp4",
         rules=(
+            # the sensitive down projections also carry the only low-bit
+            # activations: A8 where the R4 rotation has tamed the
+            # outliers, A16 (the policy default) everywhere else
             SiteRule(pattern="*down*", bits=4, group=128, method="rtn",
-                     rotation="GSR"),
+                     rotation="GSR", act_bits=8),
             SiteRule(pattern="*", bits=2, group=128, method="rtn"),
         ),
         rotation=RotationPlan(r1=RotationSpec(kind="GSR", group=128)),

@@ -1,0 +1,213 @@
+"""Per-site activation rule exactness (the act side of SiteRule).
+
+The contract mirrored from the weight/rotation sides of the policy
+redesign, made bit-exact:
+
+  * ``QuantizeSpec.act_for`` resolves first-match-wins with the same
+    bare-name fallback as ``r4_for``;
+  * a wildcard per-site A8 rule is *bit-identical* to the policy-global
+    ``act_bits=8`` path (the refactor changed plumbing, not numerics);
+  * act rules at 16 bits are exact no-ops against the no-rule policy;
+  * act rules never touch packed weight bytes (activation quant is
+    online-only);
+  * mixed act precision (A8 only on ``*down*``) saves, loads, and serves
+    bit-exactly on dense + MoE via a format-3 manifest, and behaves
+    strictly differently from global A8;
+  * a format-2 manifest (no ``act_sites`` provenance) still loads.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import api
+from repro.models.common import QuantizeSpec
+from repro.models.registry import get_arch
+from repro.quant.packed import is_packed
+from repro.quant.policy import QuantPolicy, RotationPlan, RotationSpec, SiteRule
+
+ROT = RotationPlan(r1=RotationSpec(kind="GSR", group=32), r4_kind="GH",
+                   r4_group=32)
+
+
+def _rules(**act):
+    return (SiteRule(pattern="*down*", bits=4, group=32, method="rtn", **act),
+            SiteRule(pattern="*", bits=4, group=32, method="rtn"))
+
+
+MIXED_ACT = QuantPolicy(rules=_rules(act_bits=8), rotation=ROT,
+                        act_bits=16, act_group=32)
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    arch = get_arch("smollm-135m", reduced=True)
+    params = arch.init(jax.random.PRNGKey(0), jnp.float32)
+    toks = np.random.default_rng(0).integers(
+        0, arch.config.vocab, (2, 12)).astype(np.int32)
+    return arch, params, toks
+
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    arch = get_arch("deepseek-moe-16b", reduced=True)
+    params = arch.init(jax.random.PRNGKey(0), jnp.float32)
+    toks = np.random.default_rng(0).integers(
+        0, arch.config.vocab, (2, 12)).astype(np.int32)
+    return arch, params, toks
+
+
+# ---------------------------------------------------------------------------
+# Resolution semantics
+# ---------------------------------------------------------------------------
+
+
+def test_act_for_first_match_wins_with_bare_name_fallback():
+    spec = QuantizeSpec(act_bits=16, act_group=128, act_clip=0.9,
+                        act_sites=(("moe_mlp/w_down", 4, 32, 1.0),
+                                   ("*down*", 8, 64, 0.8)))
+    # act_q call sites pass bare names: a slash-qualified pattern falls
+    # back to matching by its last path component (like r4_for)
+    assert spec.act_for("w_down") == (4, 32, 1.0)
+    assert spec.act_for("shared_down") == (8, 64, 0.8)
+    assert spec.act_for("wq") == (16, 128, 0.9)  # global default
+    assert spec.act_enabled  # site table alone can enable act quant
+
+
+def test_policy_lowers_only_act_carrying_rules():
+    spec = MIXED_ACT.spec()
+    assert spec.act_sites == (("*down*", 8, 32, 0.9),)
+    assert spec.act_for("w_down")[0] == 8
+    assert spec.act_for("wq")[0] == 16
+
+
+# ---------------------------------------------------------------------------
+# Exactness: the refactor changed plumbing, not numerics
+# ---------------------------------------------------------------------------
+
+
+def test_wildcard_act_rule_bit_identical_to_global_a8(dense_setup):
+    """SiteRule("*", act_bits=8) == policy-global act_bits=8, bit-exact."""
+    arch, params, toks = dense_setup
+    per_site = QuantPolicy(
+        rules=(SiteRule(pattern="*", bits=4, group=32, method="rtn",
+                        act_bits=8, act_group=32),),
+        rotation=ROT, act_bits=16, act_group=32)
+    global_a8 = QuantPolicy(
+        rules=(SiteRule(pattern="*", bits=4, group=32, method="rtn"),),
+        rotation=ROT, act_bits=8, act_group=32)
+    q1 = api.quantize(arch, params, per_site)
+    q2 = api.quantize(arch, params, global_a8)
+    l1 = arch.forward(q1.params, {"tokens": jnp.asarray(toks)}, q1.spec)
+    l2 = arch.forward(q2.params, {"tokens": jnp.asarray(toks)}, q2.spec)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_act16_rules_are_exact_noops(dense_setup):
+    """act_bits=16 rules resolve to the fp passthrough: logits identical
+    to the same policy with no act fields at all."""
+    arch, params, toks = dense_setup
+    with_rule = QuantPolicy(rules=_rules(act_bits=16), rotation=ROT,
+                            act_bits=16, act_group=32)
+    without = QuantPolicy(rules=_rules(), rotation=ROT,
+                          act_bits=16, act_group=32)
+    q1 = api.quantize(arch, params, with_rule)
+    q2 = api.quantize(arch, params, without)
+    assert q1.spec.act_sites == (("*down*", 16, 32, 0.9),)
+    assert not q1.spec.act_enabled
+    l1 = arch.forward(q1.params, {"tokens": jnp.asarray(toks)}, q1.spec)
+    l2 = arch.forward(q2.params, {"tokens": jnp.asarray(toks)}, q2.spec)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_act_rules_do_not_touch_packed_bytes(dense_setup):
+    """Activation quant is online-only: identical weight rules produce
+    byte-identical packed leaves with or without act overrides."""
+    arch, params, _ = dense_setup
+    q1 = api.quantize(arch, params, MIXED_ACT)
+    q2 = api.quantize(arch, params,
+                      QuantPolicy(rules=_rules(), rotation=ROT,
+                                  act_bits=16, act_group=32))
+    l1 = jax.tree.leaves(q1.params, is_leaf=is_packed)
+    l2 = jax.tree.leaves(q2.params, is_leaf=is_packed)
+    assert len(l1) == len(l2)
+    for a, b in zip(l1, l2):
+        if is_packed(a):
+            np.testing.assert_array_equal(np.asarray(a.codes),
+                                          np.asarray(b.codes))
+            np.testing.assert_array_equal(np.asarray(a.scale),
+                                          np.asarray(b.scale))
+        else:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_per_site_a8_strictly_differs_from_global_a8(dense_setup):
+    """A8-on-down-only is a genuinely different quantizer than global A8
+    (if these were logit-equal the site table would be dead plumbing)."""
+    arch, params, toks = dense_setup
+    global_a8 = QuantPolicy(rules=_rules(), rotation=ROT,
+                            act_bits=8, act_group=32)
+    q1 = api.quantize(arch, params, MIXED_ACT)
+    q2 = api.quantize(arch, params, global_a8)
+    l1 = arch.forward(q1.params, {"tokens": jnp.asarray(toks)}, q1.spec)
+    l2 = arch.forward(q2.params, {"tokens": jnp.asarray(toks)}, q2.spec)
+    assert not np.array_equal(np.asarray(l1), np.asarray(l2))
+
+
+# ---------------------------------------------------------------------------
+# Artifact round trip (format-3 manifest)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("setup", ["dense_setup", "moe_setup"])
+def test_mixed_act_precision_roundtrip_bit_exact(setup, request, tmp_path):
+    arch, params, toks = request.getfixturevalue(setup)
+    qm = api.quantize(arch, params, MIXED_ACT)
+    d = str(tmp_path / "mixed-act")
+    stepdir = qm.save(d)
+    with open(os.path.join(stepdir, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["format"] >= 3
+    assert man["act_sites"] == [["*down*", 8, 32, 0.9]]
+
+    qm2 = api.load_quantized(d)
+    assert qm2.policy == qm.policy and qm2.spec == qm.spec
+    assert qm2.spec.act_for("w_down")[0] == 8
+
+    lf = arch.forward(qm.params, {"tokens": jnp.asarray(toks)}, qm.spec)
+    ll = qm2.arch.forward(qm2.params, {"tokens": jnp.asarray(toks)}, qm2.spec)
+    np.testing.assert_array_equal(np.asarray(lf), np.asarray(ll))
+
+    scfg = api.ServeConfig(max_seq=32, batch_slots=2)
+    out1 = qm.serve(scfg).generate(toks[:, :8], 3)
+    out2 = qm2.serve(scfg).generate(toks[:, :8], 3)
+    np.testing.assert_array_equal(out1["tokens"], out2["tokens"])
+
+
+def test_format2_manifest_still_loads(dense_setup, tmp_path):
+    """Artifacts written before the act-site table (format 2, no
+    ``act_sites`` key) must keep loading: the policy is canonical and
+    pre-format-3 policies carry no act overrides by construction."""
+    arch, params, toks = dense_setup
+    qm = api.quantize(arch, params,
+                      QuantPolicy(rules=_rules(), rotation=ROT,
+                                  act_bits=8, act_group=32))
+    d = str(tmp_path / "fmt2")
+    stepdir = qm.save(d)
+    path = os.path.join(stepdir, "manifest.json")
+    with open(path) as f:
+        man = json.load(f)
+    man["format"] = 2
+    del man["act_sites"]
+    with open(path, "w") as f:
+        json.dump(man, f)
+
+    qm2 = api.load_quantized(d)
+    assert qm2.spec == qm.spec
+    lf = arch.forward(qm.params, {"tokens": jnp.asarray(toks)}, qm.spec)
+    ll = qm2.arch.forward(qm2.params, {"tokens": jnp.asarray(toks)}, qm2.spec)
+    np.testing.assert_array_equal(np.asarray(lf), np.asarray(ll))

@@ -1,0 +1,109 @@
+"""Static-analysis guard: every ``act_q`` call must carry a site tag.
+
+Per-site activation rules (``SiteRule.act_bits`` ->
+``QuantizeSpec.act_sites`` -> ``act_q(x, spec, site)``) only work if
+every activation-quant call site in the model code is tagged, and tagged
+with a name a policy rule can actually match.  This AST walk fails the
+suite if anyone adds an anonymous ``act_q(x, spec)`` call back to
+``src/repro/models/`` or ``dist/collectives.py``, and checks every
+string-literal tag against the site vocabulary ``resolve_policy``
+accepts (``quant.policy.act_site_names``).  Computed tags (e.g.
+``swiglu`` deriving its gate site from the down site) pass the presence
+check only.
+"""
+import ast
+import os
+from typing import List, Tuple
+
+import repro.models as models_pkg
+from repro.quant.policy import act_site_names
+
+MODELS_DIR = os.path.dirname(models_pkg.__file__)
+COLLECTIVES = os.path.join(MODELS_DIR, os.pardir, "dist", "collectives.py")
+
+
+def _is_act_q(func: ast.expr) -> bool:
+    return (isinstance(func, ast.Name) and func.id == "act_q") or (
+        isinstance(func, ast.Attribute) and func.attr == "act_q")
+
+
+def lint_act_q_calls(source: str, filename: str = "<str>"
+                     ) -> Tuple[List[str], List[Tuple[str, str]]]:
+    """Return (untagged call descriptions, (literal tag, location) pairs).
+
+    A call is tagged when it passes a third positional argument or a
+    ``site=`` keyword.  Definitions of ``act_q`` itself are ignored.
+    """
+    untagged, tags = [], []
+    for node in ast.walk(ast.parse(source, filename=filename)):
+        if not isinstance(node, ast.Call) or not _is_act_q(node.func):
+            continue
+        where = f"{os.path.basename(filename)}:{node.lineno}"
+        site = None
+        if len(node.args) >= 3:
+            site = node.args[2]
+        for kw in node.keywords:
+            if kw.arg == "site":
+                site = kw.value
+        if site is None:
+            untagged.append(where)
+        elif isinstance(site, ast.Constant) and isinstance(site.value, str):
+            tags.append((site.value, where))
+    return untagged, tags
+
+
+def _source_files():
+    files = [os.path.join(MODELS_DIR, f) for f in sorted(os.listdir(MODELS_DIR))
+             if f.endswith(".py")]
+    files.append(os.path.normpath(COLLECTIVES))
+    return files
+
+
+def test_every_act_q_call_is_site_tagged():
+    problems = []
+    n_calls = 0
+    for path in _source_files():
+        with open(path) as f:
+            untagged, tags = lint_act_q_calls(f.read(), path)
+        problems.extend(untagged)
+        n_calls += len(untagged) + len(tags)
+    assert not problems, (
+        f"act_q calls without a site tag: {problems} — pass "
+        f"site=\"<name>\" so per-site activation rules can resolve")
+    # the walk really covers the model code (all five families + the EP
+    # collective): a refactor that moves act_q out from under this lint
+    # should fail loudly, not silently pass on zero calls
+    assert n_calls >= 40, f"expected >= 40 act_q call sites, found {n_calls}"
+
+
+def test_literal_tags_match_policy_site_vocabulary():
+    vocab = act_site_names()
+    bad = []
+    for path in _source_files():
+        with open(path) as f:
+            _, tags = lint_act_q_calls(f.read(), path)
+        bad.extend((t, w) for t, w in tags if t not in vocab)
+    assert not bad, (
+        f"act_q site tags outside the resolve_policy vocabulary: {bad} "
+        f"(known sites: {sorted(vocab)})")
+
+
+def test_vocabulary_covers_all_families():
+    vocab = act_site_names()
+    # spot-check one tag per family plus the act-only lm_head site
+    for name in ("wq", "w_down", "shared_down", "wq_a", "wkv_a", "wx",
+                 "out_proj", "in_proj", "lm_head"):
+        assert name in vocab, name
+
+
+def test_lint_fails_on_untagged_call():
+    """The guard demonstrably catches the regression it exists for."""
+    snippet = (
+        "def forward(x, spec):\n"
+        "    x = act_q(x, spec)\n"          # untagged: must be flagged
+        "    y = act_q(x, spec, site=\"wq\")\n"   # tagged keyword: fine
+        "    z = common.act_q(y, spec, \"wo\")\n"  # tagged positional: fine
+        "    return z\n")
+    untagged, tags = lint_act_q_calls(snippet, "snippet.py")
+    assert untagged == ["snippet.py:2"]
+    assert sorted(t for t, _ in tags) == ["wo", "wq"]

@@ -88,6 +88,29 @@ def test_r4_online_cancels_fused_prerotation(r4):
     np.testing.assert_allclose(got, base, rtol=2e-3, atol=2e-3)
 
 
+def test_act_rules_compose_with_per_site_r4_fp_invariant():
+    """A populated act-site table at 16 bits must not perturb the R4
+    cancellation: site-tagged act_q resolves to the fp passthrough at
+    every site while per-site online rotations still cancel their fused
+    pre-rotation."""
+    arch = get_arch("smollm-135m", reduced=True)
+    cfg = arch.config
+    params = arch.init(jax.random.PRNGKey(0), jnp.float32)
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+    base = np.asarray(arch.forward(params, batch), np.float32)
+    spec = QuantizeSpec(
+        r4_kind="I", r4_group=32,
+        r4_sites=(("w_down", "GSR", 32, 7),),
+        act_sites=(("*down*", 16, 32, 1.0), ("wq", 16, 64, 0.9)),
+    )
+    assert spec.r4_for("w_down")[0] == "GSR"
+    assert not spec.act_enabled
+    r1 = make_rotation("I", cfg.d_model)
+    fused = fuse_rotations(cfg, params, r1, spec=spec)
+    got = np.asarray(arch.forward(fused, batch, spec), np.float32)
+    np.testing.assert_allclose(got, base, rtol=2e-3, atol=2e-3)
+
+
 def test_prefill_decode_invariance_after_fusion():
     """Fused serving path stays consistent with fused training forward."""
     arch = get_arch("smollm-135m", reduced=True)

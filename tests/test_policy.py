@@ -111,6 +111,10 @@ def test_unmatched_site_stays_float(dense_setup):
     lambda: SiteRule(layers=(3, 1)),
     lambda: SiteRule(layers=(0, 1), rotation="GSR"),  # ranged + online rot
     lambda: SiteRule(rotation="XX"),
+    lambda: SiteRule(act_bits=7),
+    lambda: SiteRule(act_group=0),
+    lambda: SiteRule(act_clip=1.5),
+    lambda: SiteRule(layers=(0, 1), act_bits=8),  # ranged + act override
     lambda: RotationSpec(source="download"),
     lambda: RotationSpec(source="load"),  # load without a path
     lambda: RotationSpec(kind="ZZ"),
