@@ -22,6 +22,7 @@ dry-run records).
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import time
@@ -42,6 +43,12 @@ MAX_NEW = 16
 BLOCK_TOKENS = 8
 MAX_SEQ = 48
 TRACE_SEED = 7
+# shared-prefix cell: every prompt carries one of PREFIX_GROUPS common
+# 192-token prefixes (24 full blocks) ahead of its private 10-token tail —
+# long enough that the saved prefix prefill dominates admission cost
+SHARED_PREFIX_TOKENS = 192
+PREFIX_GROUPS = 2
+PREFIX_MAX_SEQ = 224
 
 
 def _trace(cfg, n):
@@ -105,6 +112,81 @@ def sync_sweep(qm, backend="reference", n_requests=24,
     return rows
 
 
+def _bench_prefix(qm, backend, n_requests, *, prefix_cache, name=None):
+    eng = qm.serve(api.ServeConfig(max_seq=PREFIX_MAX_SEQ, batch_slots=SLOTS,
+                                   block_tokens=BLOCK_TOKENS,
+                                   prefix_cache=prefix_cache),
+                   backend=backend)
+    trace = synthetic_trace(qm.config, n_requests, seed=TRACE_SEED,
+                            prompt_len=PROMPT_LEN,
+                            max_new_low=max(1, MAX_NEW // 4),
+                            max_new_high=MAX_NEW,
+                            shared_prefix_tokens=SHARED_PREFIX_TOKENS,
+                            n_prefix_groups=PREFIX_GROUPS)
+    # warm the compiles (full prefill, decode, and the continuation
+    # prefill the shared tail takes) outside the timed window, then flush
+    # the cache and counters so the measured run starts cold
+    for r in synthetic_trace(qm.config, 2, seed=TRACE_SEED + 1,
+                             prompt_len=PROMPT_LEN,
+                             shared_prefix_tokens=SHARED_PREFIX_TOKENS,
+                             n_prefix_groups=1):
+        eng.scheduler.submit(r)
+    eng.drain()
+    if eng.prefix_cache is not None:
+        eng.prefix_cache.flush()
+    eng.scheduler.reset_metrics()
+    t0 = time.perf_counter()
+    for r in trace:
+        eng.scheduler.submit(r)
+    eng.drain()
+    wall = time.perf_counter() - t0
+    agg = eng.scheduler.metrics()["aggregate"]
+    eng.pool.check_invariants()
+    tokens = sum(len(r.tokens) for r in trace)
+    digest = hashlib.sha1(b"".join(
+        np.ascontiguousarray(r.token_array()).tobytes()
+        for r in trace)).hexdigest()[:16]
+    return {
+        "name": name or f"{backend}/prefix_{'on' if prefix_cache else 'off'}",
+        "tokens": tokens,
+        "wall_s": wall,
+        "tokens_per_s": tokens / wall,
+        "prefill_tokens_computed": agg["prefill_tokens_computed"],
+        "prefill_tokens_saved": agg["prefill_tokens_saved"],
+        "prefix_hit_rate": agg["prefix_hit_rate"],
+        "blocks_shared": agg["blocks_shared"],
+        "cow_copies": agg["cow_copies"],
+        "mean_ttft_s": agg["mean_ttft_s"],
+        "tokens_sha1": digest,
+        "shared_prefix_tokens": SHARED_PREFIX_TOKENS,
+        "n_prefix_groups": PREFIX_GROUPS,
+    }
+
+
+def prefix_sweep(qm, backend="reference", n_requests=24, quiet=False):
+    """Prefix cache off vs on over the same shared-prefix trace.
+
+    ``prefill_tokens_computed`` is the hardware-independent signal: with
+    the cache on, only the first request of each prefix group prefills
+    its prefix — everyone after continuation-prefills the private tail.
+    The rows must agree on ``tokens_sha1`` (sharing is bit-exact)."""
+    rows = []
+    for on in (False, True):
+        r = _bench_prefix(qm, backend, n_requests, prefix_cache=on)
+        rows.append(r)
+        if not quiet:
+            hr = r["prefix_hit_rate"]
+            print(f"  [serve_bench] {r['name']}: "
+                  f"{r['prefill_tokens_computed']} prefill tokens computed "
+                  f"({r['prefill_tokens_saved']} saved, hit rate "
+                  f"{'n/a' if hr is None else f'{hr:.2f}'}), mean TTFT "
+                  f"{r['mean_ttft_s'] * 1e3:.2f} ms, "
+                  f"tokens sha1 {r['tokens_sha1']}")
+    assert rows[0]["tokens_sha1"] == rows[1]["tokens_sha1"], \
+        "prefix cache changed the emitted tokens"
+    return rows
+
+
 def _bench_static(qm, backend, n_requests):
     eng = qm.serve(api.ServeConfig(max_seq=MAX_SEQ, batch_slots=SLOTS),
                    backend=backend)
@@ -151,6 +233,7 @@ def run(quiet: bool = False, fast: bool = False):
     rows.extend(sync_sweep(qm, "reference", n_requests,
                            intervals=(1, 4) if fast else (1, 2, 4, 8),
                            quiet=quiet))
+    rows.extend(prefix_sweep(qm, "reference", n_requests, quiet=quiet))
     os.makedirs("results", exist_ok=True)
     with open("results/serve_bench.json", "w") as f:
         json.dump({"arch": ARCH, "slots": SLOTS, "trace_seed": TRACE_SEED,
@@ -166,8 +249,11 @@ def main(argv=None):
     ap.add_argument("--sync-interval", type=str, default=None, metavar="LIST",
                     help="run only the steps_per_sync sweep over this "
                     "comma-separated list (e.g. 1,2,4,8)")
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="run only the prefix-cache off/on cell over the "
+                    "shared-prefix trace")
     args = ap.parse_args(argv)
-    if args.sync_interval is None:
+    if args.sync_interval is None and not args.shared_prefix:
         run(fast=args.fast)
         return
     arch = get_arch(ARCH, reduced=True)
@@ -175,10 +261,16 @@ def main(argv=None):
     qm = api.quantize(arch, params,
                       api.PTQConfig(r1_kind="GSR", wakv="W4A8", method="rtn",
                                     group=32))
-    intervals = tuple(int(x) for x in args.sync_interval.split(","))
-    rows = sync_sweep(qm, "reference", 24 if args.fast else 40,
-                      intervals=intervals)
+    n_requests = 24 if args.fast else 40
     os.makedirs("results", exist_ok=True)
+    if args.shared_prefix:
+        rows = prefix_sweep(qm, "reference", n_requests)
+        with open("results/serve_bench_prefix.json", "w") as f:
+            json.dump({"arch": ARCH, "slots": SLOTS,
+                       "trace_seed": TRACE_SEED, "rows": rows}, f, indent=1)
+        return
+    intervals = tuple(int(x) for x in args.sync_interval.split(","))
+    rows = sync_sweep(qm, "reference", n_requests, intervals=intervals)
     with open("results/serve_bench_sync.json", "w") as f:
         json.dump({"arch": ARCH, "slots": SLOTS, "rows": rows}, f, indent=1)
 

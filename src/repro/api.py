@@ -129,7 +129,9 @@ class QuantizedModel:
               backend: str = "reference", dtype=jnp.float32) -> ServeEngine:
         """Build a ServeEngine executing the packed weights through the
         chosen backend ("reference" dequant-on-use | "pallas" fused
-        dequant-matmul)."""
+        dequant-matmul).  ``ServeConfig(prefix_cache=True)`` shares cached
+        prompt-prefix KV blocks across requests (system-prompt traffic)
+        with bit-identical output — see ``repro.serve.prefixcache``."""
         return ServeEngine(self.arch, self.params, scfg or ServeConfig(),
                            self.spec, dtype=dtype, mesh=mesh, backend=backend)
 

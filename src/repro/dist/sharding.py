@@ -233,6 +233,13 @@ def pool_pspecs(cfg, pool_sds, dp_axes: Sequence[str], *,
     Pass the pool-geometry ShapeDtypeStruct tree (``cache_specs(n_blocks,
     block_tokens)`` or ``cache_specs(n_slots, block_tokens)``) and gate
     the result through :func:`sanitize_pspecs` as usual.
+
+    Prefix sharing (``repro.serve.prefixcache``) changes nothing here:
+    placement is keyed by *block id*, and sharing only multiplies how many
+    slot tables reference an id — refcounts, the radix index, and the
+    pin set are host-side bookkeeping.  A shared block lives on exactly
+    the shards its id maps to regardless of reference count, and
+    copy-on-write allocates a fresh id that shards by the same rule.
     """
     return cache_pspecs(cfg, pool_sds, dp_axes, shard_batch=shard_blocks,
                         model_size=model_size)

@@ -58,6 +58,16 @@ def main():
     ap.add_argument("--trace-requests", type=int, default=8)
     ap.add_argument("--block-tokens", type=int, default=16,
                     help="KV pool block size (continuous mode)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share cached prompt-prefix KV blocks across "
+                         "requests (continuous mode; token-identical)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend a common N-token prefix to every trace "
+                         "prompt (continuous mode; exercises the prefix "
+                         "cache)")
+    ap.add_argument("--prefix-groups", type=int, default=1,
+                    help="number of distinct shared prefixes, assigned "
+                         "round-robin")
     args = ap.parse_args()
 
     if args.artifact:
@@ -92,14 +102,17 @@ def main():
     cfg = qm.config
     eng = qm.serve(api.ServeConfig(
         max_seq=args.max_seq, batch_slots=args.prompts,
-        temperature=args.temperature, block_tokens=args.block_tokens),
+        temperature=args.temperature, block_tokens=args.block_tokens,
+        prefix_cache=args.prefix_cache),
         backend=args.backend)
     if args.continuous:
         from repro.serve.scheduler import run_continuous_trace
 
         run_continuous_trace(eng, n_requests=args.trace_requests,
                              prompt_len=args.prompt_len,
-                             max_new=args.max_new)
+                             max_new=args.max_new,
+                             shared_prefix_tokens=args.shared_prefix,
+                             n_prefix_groups=args.prefix_groups)
         return
     rng = np.random.default_rng(0)
     if cfg.modality == "audio":

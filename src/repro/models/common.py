@@ -174,6 +174,52 @@ def act_q(x: jax.Array, spec: QuantizeSpec, site: str) -> jax.Array:
     return fake_quant_act_grouped(x, cfg)
 
 
+# ---------------------------------------------------------------------------
+# KV-cache token quantization (one asymmetric group per token vector)
+# ---------------------------------------------------------------------------
+# Shared by the transformer and MLA prefill/decode paths so that every
+# consumer of a cached token dequantizes with byte-identical arithmetic —
+# the invariant the prefix-sharing cache rests on: re-quantizing the same
+# float vector yields the same codes, and attending a cached block is
+# bit-equivalent to recomputing it.
+
+
+def kv_quant_cfg(spec: QuantizeSpec):
+    from repro.quant.qtypes import QuantConfig
+
+    return QuantConfig(bits=spec.kv_bits, group=10**9, symmetric=False)
+
+
+def kv_quant_tokens(x: jax.Array, spec: QuantizeSpec):
+    """x (..., D_group) -> codes, scale, zero (one group per vector)."""
+    from repro.quant import rtn
+
+    cfg = kv_quant_cfg(spec)
+    xf = x.astype(jnp.float32)
+    scale, zero = rtn.compute_qparams(xf, cfg)
+    codes = rtn.quantize(xf, scale[..., None], zero[..., None], cfg).astype(jnp.uint8)
+    return codes, scale, zero
+
+
+def kv_dequant_tokens(codes, scale, zero, dtype):
+    return ((codes.astype(jnp.float32) - zero[..., None]) * scale[..., None]).astype(dtype)
+
+
+def kv_roundtrip(x: jax.Array, spec: QuantizeSpec, store_dtype=None) -> jax.Array:
+    """x at *stored* precision: the exact values a later reader will see.
+
+    Quantized KV: quantize -> dequantize through the cache codec.  Float
+    KV: round-trip through the cache dtype (no-op for f32-in-f32, the
+    serving default).  Prefill attention scores through this so a
+    continuation over cached blocks reproduces a full prefill bitwise.
+    """
+    if spec.kv_bits < 16:
+        return kv_dequant_tokens(*kv_quant_tokens(x, spec), x.dtype)
+    if store_dtype is not None:
+        return x.astype(store_dtype).astype(x.dtype)
+    return x
+
+
 @functools.lru_cache(maxsize=32)
 def _r4_blocks(kind: str, dim: int, group: int, seed: int):
     from repro.core.rotation import RotationKind, make_rotation

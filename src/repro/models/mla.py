@@ -10,7 +10,7 @@ target for KV quantization (one group per latent vector).
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -68,19 +68,41 @@ def _project_latent(lp, x, cfg: ModelConfig, positions, spec):
 
 
 def mla_prefill_attention(
-    lp: Dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array, spec: QuantizeSpec
+    lp: Dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array, spec: QuantizeSpec,
+    *, stored_precision: bool = False, store_dtype=None,
+    prefix: Optional[Tuple[jax.Array, jax.Array]] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Direct form. Returns (attn_out (B,S,D), c_kv, k_rope) for caching."""
+    """Direct form. Returns (attn_out (B,S,D), c_kv, k_rope) for caching.
+
+    ``stored_precision``: score the latent at cache precision (the values
+    a decode step or a prefix-cache continuation reads back) — the
+    prefill path sets this; the training forward keeps float attention.
+    ``prefix``: optional (c_kv, k_rope) already-dequantized cached prefix
+    (B, start, ...) to attend over; queries then cover only the tail and
+    flash attention's end-aligned causal mask supplies the offset.  The
+    returned c_kv/k_rope are always the *raw* tail projections so the
+    caller stores through the one codec path.
+    """
     b, s, _ = x.shape
     h = cfg.n_heads
     q_nope, q_rope = _project_q(lp, x, cfg, positions, spec)
     c_kv, k_rope = _project_latent(lp, x, cfg, positions, spec)
+    if stored_precision:
+        ckv_att = common.kv_roundtrip(c_kv, spec, store_dtype)
+        krope_att = (k_rope.astype(store_dtype).astype(k_rope.dtype)
+                     if store_dtype is not None else k_rope)
+    else:
+        ckv_att, krope_att = c_kv, k_rope
+    if prefix is not None:
+        ckv_att = jnp.concatenate([prefix[0], ckv_att], axis=1)
+        krope_att = jnp.concatenate([prefix[1], krope_att], axis=1)
+    skv = ckv_att.shape[1]
     # einsum cannot dispatch on PackedWeight: materialize wkv_b explicitly
-    kv = jnp.einsum("bsr,rhe->bshe", c_kv, dense_w(lp["wkv_b"]))  # (B,S,H,nope+v)
+    kv = jnp.einsum("bsr,rhe->bshe", ckv_att, dense_w(lp["wkv_b"]))  # (B,Skv,H,nope+v)
     k_nope, v = kv[..., : cfg.qk_nope_dim], kv[..., cfg.qk_nope_dim :]
     q = jnp.concatenate([q_nope, q_rope], -1)
     k = jnp.concatenate(
-        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, cfg.qk_rope_dim))], -1
+        [k_nope, jnp.broadcast_to(krope_att[:, :, None, :], (b, skv, h, cfg.qk_rope_dim))], -1
     )
     out = common.flash_attention(q, k, v, causal=True)  # (B,S,H,v)
     out = act_q(out.reshape(b, s, h * cfg.v_head_dim), spec, site="wo")

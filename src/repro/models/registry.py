@@ -53,6 +53,13 @@ class Arch:
     # attention kernel walks the block table in place).  None for pure
     # per-slot-state families (xLSTM), which keep the vmapped pool step.
     decode_paged: Optional[Callable] = None
+    # (params, batch, cache, start, spec) -> (logits, cache): continuation
+    # prefill over a cache whose first `start` positions are already
+    # populated (prefix-sharing serving path) — the batch carries only the
+    # tail tokens, stored at [start, start+s).  `start` is static (one
+    # compile per distinct prefix length).  None for recurrent-state
+    # families: their per-token state scan cannot resume from a KV prefix.
+    prefill_from: Optional[Callable] = None
 
     # ------------------------------------------------------------------
     def input_specs(self, shape: ShapeConfig, *, per_device_batch: Optional[int] = None
@@ -108,6 +115,9 @@ def _build_transformer(cfg: ModelConfig) -> Arch:
         ),
         decode_paged=lambda p, tok, pg, st, tb, ln, spec=NOQUANT:
             t.decode_paged(cfg, p, tok, pg, st, tb, ln, spec),
+        prefill_from=lambda p, b, c, start, spec=NOQUANT: t.prefill(
+            cfg, p, b, c, spec, start=start
+        ),
     )
 
 

@@ -297,22 +297,14 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, spec: QuantizeSpec,
 
 
 def _kv_cfg(spec: QuantizeSpec) -> QuantConfig:
-    return QuantConfig(bits=spec.kv_bits, group=10**9, symmetric=False)
+    return common.kv_quant_cfg(spec)
 
 
-def _quant_tokens(x: jax.Array, spec: QuantizeSpec):
-    """x (..., D_group) -> codes, scale, zero (one group per vector)."""
-    from repro.quant import rtn
-
-    cfg = _kv_cfg(spec)
-    xf = x.astype(jnp.float32)
-    scale, zero = rtn.compute_qparams(xf, cfg)
-    codes = rtn.quantize(xf, scale[..., None], zero[..., None], cfg).astype(jnp.uint8)
-    return codes, scale, zero
-
-
-def _dequant_tokens(codes, scale, zero, dtype):
-    return ((codes.astype(jnp.float32) - zero[..., None]) * scale[..., None]).astype(dtype)
+# One asymmetric group per token vector; shared with mla.py through
+# common so every cache writer/reader agrees bit-for-bit (the invariant
+# the prefix-sharing KV cache depends on).
+_quant_tokens = common.kv_quant_tokens
+_dequant_tokens = common.kv_dequant_tokens
 
 
 # ---------------------------------------------------------------------------
@@ -320,28 +312,83 @@ def _dequant_tokens(codes, scale, zero, dtype):
 # ---------------------------------------------------------------------------
 
 
-def _prefill_std_layer(cfg, lp, lc, h, positions, spec, kvq, b, s):
-    """Standard-attention prefill layer body (shared by both layouts)."""
+def _prefill_std_layer(cfg, lp, lc, h, positions, spec, kvq, b, s, start=0):
+    """Standard-attention prefill layer body (shared by both layouts).
+
+    Attention scores K/V at *stored* precision (`common.kv_roundtrip`):
+    the values a later decode step — or a prefix-cache continuation —
+    will read back out of the cache.  With ``start > 0`` the query covers
+    only the tail ``[start, start + s)``; the prefix K/V is read straight
+    from ``lc`` (dequantized), so a continuation over cached blocks is
+    bit-identical to a full prefill of the same tokens.
+    """
     x = rmsnorm(h, lp["attn_norm"], cfg.norm_eps)
     q, k, v = _qkv(cfg, lp, x, positions, spec)
-    attn = common.flash_attention(q, k, v, causal=True, window=cfg.sliding_window)
-    attn = act_q(attn.reshape(b, s, cfg.n_heads * cfg.hd), spec, site="wo")
-    h = h + attn @ lp["wo"]
     if kvq:
         kc, ks_, kz = _quant_tokens(k, spec)
         vc, vs_, vz = _quant_tokens(v, spec)
-        lc = dict(lc, k=_store(lc["k"], kc, s), v=_store(lc["v"], vc, s),
-                  k_scale=_store(lc["k_scale"], ks_, s), k_zero=_store(lc["k_zero"], kz, s),
-                  v_scale=_store(lc["v_scale"], vs_, s), v_zero=_store(lc["v_zero"], vz, s))
+        k_at = _dequant_tokens(kc, ks_, kz, h.dtype)
+        v_at = _dequant_tokens(vc, vs_, vz, h.dtype)
     else:
-        lc = dict(lc, k=_store(lc["k"], k.astype(lc["k"].dtype), s),
-                  v=_store(lc["v"], v.astype(lc["v"].dtype), s))
+        k_at = common.kv_roundtrip(k, spec, lc["k"].dtype)
+        v_at = common.kv_roundtrip(v, spec, lc["v"].dtype)
+    if start:
+        if kvq:
+            kp = _dequant_tokens(lc["k"][:, :start], lc["k_scale"][:, :start],
+                                 lc["k_zero"][:, :start], h.dtype)
+            vp = _dequant_tokens(lc["v"][:, :start], lc["v_scale"][:, :start],
+                                 lc["v_zero"][:, :start], h.dtype)
+        else:
+            kp = lc["k"][:, :start].astype(k.dtype)
+            vp = lc["v"][:, :start].astype(v.dtype)
+        k_at = jnp.concatenate([kp, k_at], axis=1)
+        v_at = jnp.concatenate([vp, v_at], axis=1)
+    # flash_attention aligns q to the end of k: offset causal mask covers
+    # the continuation shape (Sq == s, Skv == start + s) natively.
+    attn = common.flash_attention(q, k_at, v_at, causal=True, window=cfg.sliding_window)
+    attn = act_q(attn.reshape(b, s, cfg.n_heads * cfg.hd), spec, site="wo")
+    h = h + attn @ lp["wo"]
+    if kvq:
+        lc = dict(lc, k=_store(lc["k"], kc, start), v=_store(lc["v"], vc, start),
+                  k_scale=_store(lc["k_scale"], ks_, start), k_zero=_store(lc["k_zero"], kz, start),
+                  v_scale=_store(lc["v_scale"], vs_, start), v_zero=_store(lc["v_zero"], vz, start))
+    else:
+        lc = dict(lc, k=_store(lc["k"], k.astype(lc["k"].dtype), start),
+                  v=_store(lc["v"], v.astype(lc["v"].dtype), start))
+    return h, lc
+
+
+def _prefill_mla_layer(cfg, lp, lc, h, positions, spec, kvq, s, start=0):
+    """MLA prefill layer body (direct-form attention, latent cache)."""
+    x = rmsnorm(h, lp["attn_norm"], cfg.norm_eps)
+    prefix = None
+    if start:
+        if kvq:
+            ckv_p = _dequant_tokens(lc["ckv"][:, :start], lc["ckv_scale"][:, :start],
+                                    lc["ckv_zero"][:, :start], h.dtype)
+        else:
+            ckv_p = lc["ckv"][:, :start].astype(h.dtype)
+        prefix = (ckv_p, lc["krope"][:, :start].astype(h.dtype))
+    out, ckv, krope = mla_mod.mla_prefill_attention(
+        lp, x, cfg, positions, spec, stored_precision=True,
+        store_dtype=lc["krope"].dtype, prefix=prefix)
+    h = h + out
+    if kvq:
+        codes, scale, zero = _quant_tokens(ckv, spec)
+        lc = dict(lc, ckv=_store(lc["ckv"], codes, start),
+                  ckv_scale=_store(lc["ckv_scale"], scale, start),
+                  ckv_zero=_store(lc["ckv_zero"], zero, start),
+                  krope=_store(lc["krope"], krope.astype(lc["krope"].dtype), start))
+    else:
+        lc = dict(lc, ckv=_store(lc["ckv"], ckv.astype(lc["ckv"].dtype), start),
+                  krope=_store(lc["krope"], krope.astype(lc["krope"].dtype), start))
     return h, lc
 
 
 def prefill(cfg: ModelConfig, params: Dict, batch: Dict, cache: Dict,
             spec: QuantizeSpec = NOQUANT, *,
-            true_length: Optional[jax.Array] = None) -> Tuple[jax.Array, Dict]:
+            true_length: Optional[jax.Array] = None,
+            start: int = 0) -> Tuple[jax.Array, Dict]:
     """Run the full prompt, returning last-position logits + filled cache.
 
     ``true_length`` enables right-padded prompts (prompt-length
@@ -354,10 +401,21 @@ def prefill(cfg: ModelConfig, params: Dict, batch: Dict, cache: Dict,
     identical to an exact-length prefill.  (Per-sequence recurrent-state
     families — xLSTM/Zamba — cannot use this: their state integrates
     every scanned token; the engine gates on family.)
+
+    ``start`` (static) enables *continuation* prefill over a cache whose
+    first ``start`` positions are already populated (the prefix-sharing
+    serving path): the batch carries only the tail tokens, attention for
+    each tail position runs over the cached prefix K/V plus the fresh
+    tail, and the tail is stored at ``[start, start + s)``.  Because
+    prefill attention always scores at stored precision, the result is
+    bit-identical to a full prefill of prefix + tail.  Incompatible with
+    ``true_length`` (the engine never buckets shared prefills).
     """
+    assert not (start and true_length is not None), \
+        "continuation prefill does not compose with prompt bucketing"
     h = embed_inputs(cfg, params, batch)
     b, s, _ = h.shape
-    positions = jnp.arange(s)[None, :]
+    positions = start + jnp.arange(s)[None, :]
     kvq = spec.kv_bits < 16
     layer_caches = {k: v for k, v in cache.items() if k != "length"}
 
@@ -373,7 +431,8 @@ def prefill(cfg: ModelConfig, params: Dict, batch: Dict, cache: Dict,
             new_slices = []
             for j, (lp, kind) in enumerate(_group_slices(cfg, grp)):
                 lc = jax.tree.map(lambda a: a[j], gc)
-                h, lc = _prefill_std_layer(cfg, lp, lc, h, positions, spec, kvq, b, s)
+                h, lc = _prefill_std_layer(cfg, lp, lc, h, positions, spec, kvq, b, s,
+                                           start=start)
                 h = mlp_block(cfg, lp, h, spec, kind=kind)
                 new_slices.append(lc)
             gc2 = jax.tree.map(lambda *xs2: jnp.stack(xs2), *new_slices)
@@ -382,43 +441,23 @@ def prefill(cfg: ModelConfig, params: Dict, batch: Dict, cache: Dict,
         h, new_grp = jax.lax.scan(group_fn, h, (params["layers"], grp_caches))
         new_caches = jax.tree.map(lambda a: a.reshape(-1, *a.shape[2:]), new_grp)
         logits = lm_logits(cfg, params, _last_positions(h, true_length), spec)
-        new_caches["length"] = _fill_length(s, true_length)
+        new_caches["length"] = _fill_length(start + s, true_length)
         return logits, new_caches
 
     def layer_fn(h, xs):
         lp, lc = xs
-        x = rmsnorm(h, lp["attn_norm"], cfg.norm_eps)
         if cfg.family == "mla":
-            out, ckv, krope = mla_mod.mla_prefill_attention(lp, x, cfg, positions, spec)
-            h = h + out
-            if kvq:
-                codes, scale, zero = _quant_tokens(ckv, spec)
-                lc = dict(lc, ckv=_store(lc["ckv"], codes, s), ckv_scale=_store(lc["ckv_scale"], scale, s),
-                          ckv_zero=_store(lc["ckv_zero"], zero, s), krope=_store(lc["krope"], krope.astype(lc["krope"].dtype), s))
-            else:
-                lc = dict(lc, ckv=_store(lc["ckv"], ckv.astype(lc["ckv"].dtype), s),
-                          krope=_store(lc["krope"], krope.astype(lc["krope"].dtype), s))
+            h, lc = _prefill_mla_layer(cfg, lp, lc, h, positions, spec, kvq, s,
+                                       start=start)
         else:
-            q, k, v = _qkv(cfg, lp, x, positions, spec)
-            attn = common.flash_attention(q, k, v, causal=True, window=cfg.sliding_window)
-            attn = act_q(attn.reshape(b, s, cfg.n_heads * cfg.hd), spec,
-                         site="wo")
-            h = h + attn @ lp["wo"]
-            if kvq:
-                kc, ks_, kz = _quant_tokens(k, spec)
-                vc, vs_, vz = _quant_tokens(v, spec)
-                lc = dict(lc, k=_store(lc["k"], kc, s), v=_store(lc["v"], vc, s),
-                          k_scale=_store(lc["k_scale"], ks_, s), k_zero=_store(lc["k_zero"], kz, s),
-                          v_scale=_store(lc["v_scale"], vs_, s), v_zero=_store(lc["v_zero"], vz, s))
-            else:
-                lc = dict(lc, k=_store(lc["k"], k.astype(lc["k"].dtype), s),
-                          v=_store(lc["v"], v.astype(lc["v"].dtype), s))
+            h, lc = _prefill_std_layer(cfg, lp, lc, h, positions, spec, kvq, b, s,
+                                       start=start)
         h = mlp_block(cfg, lp, h, spec)
         return h, lc
 
     h, new_caches = jax.lax.scan(layer_fn, h, (params["layers"], layer_caches))
     logits = lm_logits(cfg, params, _last_positions(h, true_length), spec)
-    new_caches["length"] = _fill_length(s, true_length)
+    new_caches["length"] = _fill_length(start + s, true_length)
     return logits, new_caches
 
 
@@ -436,9 +475,9 @@ def _fill_length(s: int, true_length) -> jax.Array:
     return jnp.asarray(true_length, jnp.int32)
 
 
-def _store(buf, val, s):
-    """Write the first s positions of the sequence axis (axis 1 of 4D/3D)."""
-    idx = (0,) * buf.ndim
+def _store(buf, val, start=0):
+    """Write val along the sequence axis (axis 1) starting at ``start``."""
+    idx = (0, start) + (0,) * (buf.ndim - 2)
     return jax.lax.dynamic_update_slice(buf, val, idx)
 
 

@@ -78,6 +78,16 @@ class ServeConfig:
     # stop-token/length masks and a device-side done bitmap — the host
     # only syncs to refill slots and flush streaming callbacks.
     steps_per_sync: int = 1
+    # --- prefix sharing ---
+    # Index full prompt blocks in a refcounted prefix cache
+    # (repro.serve.prefixcache): admission maps cached blocks into the new
+    # slot's table without re-prefilling them and continuation-prefills
+    # only the tail, copy-on-write protecting fully-cached prompts.
+    # Token output is bit-identical to prefix_cache=False (prefill scores
+    # at stored precision, so a cached block equals a recomputed one).
+    # Only fully-paged attention-cache families share (dense/MoE/MLA);
+    # recurrent-state families silently serve unshared.
+    prefix_cache: bool = False
 
 
 class ServeEngine:
@@ -146,6 +156,8 @@ class ServeEngine:
         self._sample_jit = None
         self._sched = None
         self.fused_decode = False
+        self._prefix_cache = None
+        self._prefill_from_jit: Dict[int, object] = {}
 
     def _mesh_ctx(self):
         return self.mesh if self.mesh is not None else contextlib.nullcontext()
@@ -189,6 +201,14 @@ class ServeEngine:
             self._build_continuous()
         return self._sched
 
+    @property
+    def prefix_cache(self):
+        """The attached :class:`~repro.serve.prefixcache.PrefixCache`, or
+        None (disabled, or the family cannot share — per-slot state)."""
+        if self._pool is None:
+            self._build_continuous()
+        return self._prefix_cache
+
     def _build_continuous(self):
         from repro.serve.kvpool import KVPool
         from repro.serve.scheduler import ContinuousScheduler
@@ -223,6 +243,18 @@ class ServeEngine:
                 lambda p, t, c: self.arch.decode(p, t, c, self.spec))
         self._tick_fn = tick
         self._pool_step_fn = self._pool.bind_step(tick)
+        self._prefix_cache = None
+        if (scfg.prefix_cache and self._pool.has_paged and not self._pool.state
+                and self.arch.prefill_from is not None):
+            # Sharing needs every cache leaf paged (no per-slot recurrent
+            # state) and a continuation-capable prefill.  The signature
+            # ties entries to this engine's cache codec: a block of codes
+            # is only reusable under the same kv_bits/dtype/block/arch.
+            from repro.serve.prefixcache import PrefixCache
+
+            sig = (f"{self.cfg.name}/kv{self.spec.kv_bits}/"
+                   f"{jnp.dtype(self.dtype).name}/T{scfg.block_tokens}")
+            self._prefix_cache = PrefixCache(self._pool, sig=sig)
         self._sched = ContinuousScheduler(self)
 
     def _place_pool(self):
@@ -393,6 +425,40 @@ class ServeEngine:
                 logits, cache = self._prefill(self.params, batch, cache0)
         # stays on device: the scheduler samples it there and transfers
         # only the token id (no (V,) logits round trip per admission)
+        last = logits[0]
+        if last.ndim >= 2 and last.shape[0] == 1:  # (1, V) / (1, K, V)
+            last = last[0]
+        return last, cache, s_total
+
+    def prefill_shared(self, prompt: np.ndarray, start: int,
+                       blocks: List[int]) -> tuple:
+        """Prefill a request whose first ``start`` positions are covered by
+        cached pool blocks: gather ``blocks`` into a contiguous batch=1
+        view, continuation-prefill only ``prompt[start:]`` over it, and
+        return the same (last_logits, cache, n_tokens) contract as
+        :meth:`prefill_one` — admit then maps the shared blocks and writes
+        only the fresh tail blocks.
+
+        ``start`` is static (one retrace per distinct (prefix, tail)
+        length pair — shared-prefix traffic repeats both).  Bucketing is
+        never applied here: the tail runs at exact length.
+        """
+        pool = self.pool
+        s_total = prompt.shape[0]
+        assert 0 < start < s_total, (start, s_total)
+        assert len(blocks) * pool.block_tokens >= start, (blocks, start)
+        nb0 = max(1, math.ceil(s_total / pool.block_tokens))
+        cache0 = self.arch.init_cache(1, nb0 * pool.block_tokens, self.spec,
+                                      self.dtype)
+        fn = self._prefill_from_jit.get(start)
+        if fn is None:
+            fn = jax.jit(lambda p, b, c, s=start: self.arch.prefill_from(
+                p, b, c, s, self.spec))
+            self._prefill_from_jit[start] = fn
+        batch = {"tokens": jnp.asarray(prompt[start:][None])}
+        with self._mesh_ctx():
+            cache0 = pool.write_prefix(cache0, blocks)
+            logits, cache = fn(self.params, batch, cache0)
         last = logits[0]
         if last.ndim >= 2 and last.shape[0] == 1:  # (1, V) / (1, K, V)
             last = last[0]

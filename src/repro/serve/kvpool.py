@@ -173,6 +173,19 @@ class KVPool:
         self.tables = np.full((n_slots, self.blocks_per_slot), SCRATCH, np.int32)
         self.lengths = np.zeros((n_slots,), np.int32)
         self._reserved = np.zeros((n_slots,), np.int32)  # worst-case blocks
+        # Per-block reference count == number of slot tables mapping the
+        # block (prefix sharing maps one block into many tables).  The
+        # free list holds exactly the refcount-0 blocks *not* retained by
+        # the attached prefix cache; release decrements and only reclaims
+        # blocks nobody references or retains.
+        self.refcount = np.zeros((n_blocks,), np.int32)
+        # Optional prefix-cache hook (set by serve.prefixcache.PrefixCache).
+        # Duck-typed protocol: holds(b) -> bool (retain a refcount-0 block
+        # at release), evict(n) -> int (reclaim up to n idle cached blocks
+        # back to the free list), evictable() -> int (how many it could),
+        # blocks() -> iterable of retained block ids (invariant checking).
+        self.prefix = None
+        self._write_prefix_jit = None
 
     # ------------------------------------------------------------------
     # Admission accounting
@@ -192,33 +205,62 @@ class KVPool:
         return int(sum(max(0, int(self._reserved[s]) - len(self.slot_blocks[s]))
                        for s in range(self.n_slots)))
 
-    def can_admit(self, worst_tokens: int) -> bool:
+    def _evictable(self) -> int:
+        return self.prefix.evictable() if self.prefix is not None else 0
+
+    def can_admit(self, worst_tokens: int, shared_blocks: int = 0) -> bool:
         """Conservative policy: admit only if the request's worst case fits
         after every running request takes its own worst case — decode can
-        then never starve mid-flight (no preemption needed)."""
+        then never starve mid-flight (no preemption needed).
+
+        ``shared_blocks`` prefix-cache-mapped blocks arrive already
+        populated and never touch the free list; idle cached blocks count
+        as supply because ``_alloc`` evicts them on demand."""
         if not self.has_paged:
             return True
-        return len(self.free) >= self._outstanding() + self.blocks_for(worst_tokens)
+        need = self.blocks_for(worst_tokens) - shared_blocks
+        return len(self.free) + self._evictable() >= self._outstanding() + need
 
     # ------------------------------------------------------------------
     # Slot lifecycle
     # ------------------------------------------------------------------
 
     def _alloc(self, slot: int) -> int:
+        if not self.free and self.prefix is not None:
+            self.prefix.evict(1)
         if not self.free:
             raise RuntimeError("KV pool out of blocks (admission bug)")
         blk = self.free.pop()
+        assert self.refcount[blk] == 0, f"free block {blk} had live refs"
+        self.refcount[blk] = 1
         self.slot_blocks[slot].append(blk)
         self.tables[slot, len(self.slot_blocks[slot]) - 1] = blk
         return blk
 
-    def admit(self, slot: int, cache_tree, n_tokens: int, worst_tokens: int
-              ) -> None:
+    def _map_shared(self, slot: int, blk: int) -> None:
+        """Map an already-populated block into ``slot``'s table (refcount++)."""
+        assert 0 < blk < self.n_blocks and blk != SCRATCH, blk
+        self.refcount[blk] += 1
+        self.slot_blocks[slot].append(blk)
+        self.tables[slot, len(self.slot_blocks[slot]) - 1] = blk
+
+    def admit(self, slot: int, cache_tree, n_tokens: int, worst_tokens: int,
+              shared: Sequence[int] = ()) -> None:
         """Install a freshly prefilled batch=1 cache into ``slot``.
 
         ``cache_tree``'s paged leaves must carry ``ceil(n_tokens /
         block_tokens) * block_tokens`` sequence positions.  Only this
         slot's blocks and state row are written.
+
+        ``shared``: prefix-cache block ids covering the first
+        ``len(shared) * block_tokens`` positions.  They are *mapped*
+        (refcount++) instead of allocated, and their storage is not
+        rewritten — the cache_tree's leading positions merely mirror
+        their contents (the continuation-prefill view).  Blocks from
+        ``len(shared)`` on are allocated fresh and written; a
+        copy-on-write block is simply a fresh block here (the scheduler
+        drops it from ``shared`` so its recomputed contents land in
+        private storage, never mutating the cached original).
         """
         assert not self.slot_blocks[slot], f"slot {slot} already occupied"
         if worst_tokens > self.view_tokens:
@@ -226,22 +268,30 @@ class KVPool:
                 f"request needs {worst_tokens} cache positions, pool view "
                 f"holds {self.view_tokens}")
         nb0 = self.blocks_for(n_tokens)
+        shared = list(shared)
+        assert len(shared) <= nb0, (shared, nb0)
+        assert len(set(shared)) == len(shared), "duplicate shared block"
         self._reserved[slot] = self.blocks_for(worst_tokens)
-        blocks = [self._alloc(slot) for _ in range(nb0)]
+        for blk in shared:
+            self._map_shared(slot, blk)
+        fresh = [self._alloc(slot) for _ in range(nb0 - len(shared))]
         leaves = dict(zip(self.paths, jax.tree.leaves(cache_tree)))
         t = self.block_tokens
+        skip = len(shared)
         for path, m in self.meta.items():
             if m.batch_ax is None:
                 continue
             val = jnp.squeeze(leaves[path], axis=m.batch_ax)
             if m.paged:
-                # (.., V', ..) -> (.., nb0, T, ..) -> pool[.., blocks, T, ..]
+                if not fresh:
+                    continue  # fully shared: nothing to write
+                # (.., V', ..) -> (.., nb, T, ..) -> pool[.., fresh, T, ..]
                 sa = m.seq_ax - 1  # after squeezing the batch axis
                 shape = val.shape
                 assert shape[sa] >= nb0 * t, (path, shape, nb0, t)
-                val = jax.lax.slice_in_dim(val, 0, nb0 * t, axis=sa)
-                val = val.reshape(shape[:sa] + (nb0, t) + shape[sa + 1:])
-                idx = (slice(None),) * m.batch_ax + (jnp.asarray(blocks),)
+                val = jax.lax.slice_in_dim(val, skip * t, nb0 * t, axis=sa)
+                val = val.reshape(shape[:sa] + (nb0 - skip, t) + shape[sa + 1:])
+                idx = (slice(None),) * m.batch_ax + (jnp.asarray(fresh),)
                 self.paged[path] = self.paged[path].at[idx].set(
                     val.astype(self.paged[path].dtype))
             else:
@@ -249,6 +299,46 @@ class KVPool:
                 self.state[path] = self.state[path].at[idx].set(
                     val.astype(self.state[path].dtype))
         self.lengths[slot] = n_tokens
+
+    def write_prefix(self, cache_tree, blocks: Sequence[int]):
+        """Return ``cache_tree`` (batch=1) with positions ``[0,
+        len(blocks) * block_tokens)`` of every paged leaf filled from pool
+        block storage — the gather half of a shared-prefix admission: the
+        engine continuation-prefills the tail over this view.
+
+        The whole gather runs as one jitted dispatch (retraced per
+        distinct block count): admission sits on the TTFT path, where the
+        per-leaf eager take/scatter overhead would cost more than the
+        prefill compute the shared prefix saves."""
+        if not blocks:
+            return cache_tree
+        if self._write_prefix_jit is None:
+            paged = [(p, self.meta[p]) for p in self.paths
+                     if self.meta[p].paged]
+            t = self.block_tokens
+
+            def wp(paged_leaves, cache_leaves, ids):
+                n = ids.shape[0] * t
+                out = dict(cache_leaves)
+                for (path, m), src in zip(paged, paged_leaves):
+                    ba = m.batch_ax
+                    g = jnp.take(src, ids, axis=ba)  # (.., nb, T, ..)
+                    shape = g.shape
+                    val = g.reshape(shape[:ba] + (n,) + shape[ba + 2:])
+                    leaf = out[path]
+                    assert leaf.shape[m.seq_ax] >= n, (path, leaf.shape, n)
+                    idx = (slice(None),) * ba + (0, slice(0, n))
+                    out[path] = leaf.at[idx].set(val.astype(leaf.dtype))
+                return out
+
+            self._write_prefix_jit = jax.jit(wp)
+        ids = jnp.asarray(list(blocks))
+        leaves = dict(zip(self.paths, jax.tree.leaves(cache_tree)))
+        new = self._write_prefix_jit(
+            tuple(self.paged[p] for p in self.paths if self.meta[p].paged),
+            leaves, ids)
+        return jax.tree_util.tree_unflatten(
+            self.treedef, [new[p] for p in self.paths])
 
     def ensure(self, slot: int) -> None:
         """Grow ``slot`` so the next decode write position is backed by a
@@ -274,11 +364,30 @@ class KVPool:
         self.lengths[slot] += 1
 
     def release(self, slot: int) -> None:
-        self.free.extend(self.slot_blocks[slot])
+        """Decrement refcounts on the slot's blocks; reclaim only blocks
+        that hit zero references *and* are not retained by the prefix
+        cache (a cached-idle block stays resident, off the free list,
+        until the cache evicts it under pressure)."""
+        for blk in self.slot_blocks[slot]:
+            assert self.refcount[blk] > 0, f"double release of block {blk}"
+            self.refcount[blk] -= 1
+            if self.refcount[blk] == 0 and not (
+                    self.prefix is not None and self.prefix.holds(blk)):
+                self.free.append(blk)
         self.slot_blocks[slot] = []
         self.tables[slot, :] = SCRATCH
         self.lengths[slot] = 0
         self._reserved[slot] = 0
+
+    def reclaim(self, blocks: Sequence[int]) -> None:
+        """Return idle cached blocks to the free list (prefix-cache
+        eviction path).  Reclaiming a block a slot still references is a
+        bug — the cache must only evict refcount-0 entries."""
+        for blk in blocks:
+            assert self.refcount[blk] == 0, \
+                f"reclaim of live shared block {blk} (refcount {self.refcount[blk]})"
+            assert blk not in self.free, f"double-free of block {blk}"
+            self.free.append(blk)
 
     # ------------------------------------------------------------------
     # Invariants (exercised by tests after every admit/step/release)
@@ -286,20 +395,46 @@ class KVPool:
 
     def check_invariants(self) -> None:
         owned = [b for blocks in self.slot_blocks for b in blocks]
+        counts: Dict[int, int] = {}
+        for b in owned:
+            counts[b] = counts.get(b, 0) + 1
+        cached = set(self.prefix.blocks()) if self.prefix is not None else set()
         assert SCRATCH not in owned, "scratch block was allocated"
         assert SCRATCH not in self.free, "scratch block on the free list"
-        assert len(set(owned)) == len(owned), "block double-assigned"
+        assert SCRATCH not in cached, "scratch block in the prefix cache"
         assert len(set(self.free)) == len(self.free), "free list duplicate"
         assert not (set(owned) & set(self.free)), "block both free and owned"
-        assert set(owned) | set(self.free) == set(range(1, self.n_blocks)), \
-            "block leaked"
+        assert not (cached & set(self.free)), "cached block on the free list"
+        assert set(owned) | set(self.free) | cached == \
+            set(range(1, self.n_blocks)), "block leaked"
+        for b in range(1, self.n_blocks):
+            assert int(self.refcount[b]) == counts.get(b, 0), (
+                f"block {b}: refcount {int(self.refcount[b])} != "
+                f"{counts.get(b, 0)} table references")
         for s in range(self.n_slots):
             blocks = self.slot_blocks[s]
+            assert len(set(blocks)) == len(blocks), "block twice in one slot"
             assert list(self.tables[s, : len(blocks)]) == blocks
             assert all(b == SCRATCH for b in self.tables[s, len(blocks):])
             if blocks:
                 need = self.blocks_for(max(1, int(self.lengths[s])))
                 assert len(blocks) >= need, "slot under-allocated"
+
+    def check_leaks(self) -> None:
+        """Teardown leak check: with every slot released, each block must
+        be on the free list or retained by the prefix cache, and no
+        references may remain.  Raises RuntimeError naming the leaked
+        blocks otherwise."""
+        held = [b for blocks in self.slot_blocks for b in blocks]
+        if held:
+            raise RuntimeError(f"pool torn down with occupied slots: {held}")
+        live = [b for b in range(1, self.n_blocks) if self.refcount[b] != 0]
+        if live:
+            raise RuntimeError(f"dangling refcounts at teardown: {live}")
+        cached = set(self.prefix.blocks()) if self.prefix is not None else set()
+        leaked = set(range(1, self.n_blocks)) - set(self.free) - cached
+        if leaked:
+            raise RuntimeError(f"blocks leaked at teardown: {sorted(leaked)}")
 
     # ------------------------------------------------------------------
     # The jitted gather -> vmapped decode -> scatter step

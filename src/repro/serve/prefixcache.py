@@ -1,0 +1,244 @@
+"""Prefix-sharing index over the block-paged KV pool.
+
+Production serving traffic is dominated by shared prefixes — system
+prompts, few-shot templates, multi-turn replays.  The block-paged pool
+(:mod:`repro.serve.kvpool`) already stores KV at exactly the right
+granularity: a block id in a slot's table is a block id no matter how
+many tables reference it, and the fused paged-attention kernel walks
+tables without caring who else maps a block.  This module adds the
+missing pieces:
+
+* a **hash-chain index over full token blocks** — block ``j`` of a
+  prompt is keyed by ``H(key_{j-1}, tokens[jT:(j+1)T], quant signature)``,
+  so equal keys imply equal *entire prefixes* (a radix tree flattened
+  into a dict: each node's key already encodes the whole path).  The
+  quant signature ties entries to the cache codec (kv_bits, storage
+  dtype, block size, arch), since a block of 4-bit codes from one codec
+  is garbage under another;
+* **refcount bookkeeping** via :class:`~repro.serve.kvpool.KVPool`:
+  mapping a cached block into a new slot's table increments its
+  refcount, release decrements, and a refcount-0 block retained here
+  stays *resident but off the free list* until evicted;
+* **eviction** of idle (refcount-0, unpinned) cached blocks, leaf-first
+  in least-recently-used order, under pool pressure — ``KVPool._alloc``
+  calls back into :meth:`evict` when the free list runs dry, and
+  ``can_admit`` counts idle cached blocks as supply;
+* **pinning** for the lookup→prefill→admit window: matched blocks are
+  pinned so the tail-block allocation of the very admission that found
+  them cannot evict (and recycle) them mid-flight.
+
+Only *full, immutable* prompt blocks are ever indexed: a partially
+filled last block is private to its slot, and decode appends always
+land past the prompt — combined with the scheduler's copy-on-write on
+fully-cached prompts, no indexed block is ever written again, which is
+what makes sharing bit-exact (quantized KV doubly so: identical codes,
+identical scales, zero recomputation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serve.kvpool import KVPool
+
+
+@dataclasses.dataclass
+class _Node:
+    """One cached full block.  ``key`` hashes the whole prefix up to and
+    including this block, so parent/child edges mirror prompt extension."""
+
+    key: bytes
+    block: int
+    parent: Optional["_Node"]
+    children: Dict[bytes, "_Node"]
+    stamp: int  # logical LRU clock (no wall-clock: traces stay replayable)
+
+
+@dataclasses.dataclass
+class Hit:
+    """A lookup result: the longest cached full-block prefix.
+
+    ``blocks`` are pinned until :meth:`PrefixCache.unpin` (the scheduler
+    releases the pin right after admission maps/copies them)."""
+
+    blocks: List[int]
+
+    @property
+    def n_blocks(self) -> int:
+        return len(self.blocks)
+
+
+class PrefixCache:
+    """Refcounted radix/hash index mapping token prefixes to block chains.
+
+    Attaches itself as ``pool.prefix`` (the duck-typed hook consulted by
+    release/alloc/invariants).  All bookkeeping is host-side Python —
+    device storage is untouched except through ``pool.reclaim``.
+    """
+
+    def __init__(self, pool: KVPool, sig: str = ""):
+        assert pool.has_paged, "prefix sharing needs a paged cache"
+        self.pool = pool
+        self.t = pool.block_tokens
+        self.sig = sig.encode()
+        self.nodes: Dict[bytes, _Node] = {}
+        self._blocks: Dict[int, _Node] = {}
+        self._pinned: Dict[int, int] = {}  # block id -> pin count
+        self._stamp = 0
+        # counters (logical, deterministic)
+        self.lookups = 0
+        self.hits = 0
+        self.inserts = 0
+        self.evictions = 0
+        pool.prefix = self
+
+    # ------------------------------------------------------------------
+    # Keying
+    # ------------------------------------------------------------------
+
+    def _keys(self, tokens: np.ndarray) -> Iterable[bytes]:
+        """Chained keys for each *full* block of ``tokens`` (S,) / (S, K)."""
+        toks = np.ascontiguousarray(np.asarray(tokens))
+        key = self.sig
+        for j in range(toks.shape[0] // self.t):
+            blk = toks[j * self.t:(j + 1) * self.t]
+            key = hashlib.sha1(key + blk.tobytes()).digest()
+            yield key
+
+    # ------------------------------------------------------------------
+    # Lookup / insert
+    # ------------------------------------------------------------------
+
+    def _touch(self, node: _Node) -> None:
+        self._stamp += 1
+        node.stamp = self._stamp
+
+    def lookup(self, tokens: np.ndarray) -> Hit:
+        """Longest cached full-block prefix of ``tokens``.
+
+        Pins the matched blocks (eviction skips them) until
+        :meth:`unpin`; touches their LRU stamps."""
+        self.lookups += 1
+        blocks: List[int] = []
+        for key in self._keys(tokens):
+            node = self.nodes.get(key)
+            if node is None:
+                break
+            self._touch(node)
+            self._pinned[node.block] = self._pinned.get(node.block, 0) + 1
+            blocks.append(node.block)
+        if blocks:
+            self.hits += 1
+        return Hit(blocks=blocks)
+
+    def unpin(self, hit: Hit) -> None:
+        for blk in hit.blocks:
+            n = self._pinned.get(blk, 0) - 1
+            if n <= 0:
+                self._pinned.pop(blk, None)
+            else:
+                self._pinned[blk] = n
+
+    def insert(self, tokens: np.ndarray, blocks: Sequence[int]) -> None:
+        """Register the full prompt blocks of an admitted request.
+
+        ``blocks``: the owning slot's block chain (``pool.slot_blocks``),
+        at least ``len(tokens) // block_tokens`` long.  Existing entries
+        are only touched (first writer wins — the incoming duplicate
+        block is already mapped or will simply be released with its
+        slot); new entries are linked under their parent."""
+        parent: Optional[_Node] = None
+        for j, key in enumerate(self._keys(tokens)):
+            node = self.nodes.get(key)
+            if node is None:
+                blk = int(blocks[j])
+                if blk in self._blocks:
+                    # block already indexed under a different key — cannot
+                    # happen for distinct chains (slot chains are unique),
+                    # but guard against re-registration
+                    break
+                node = _Node(key=key, block=blk, parent=parent,
+                             children={}, stamp=0)
+                self.nodes[key] = node
+                self._blocks[blk] = node
+                if parent is not None:
+                    parent.children[key] = node
+                self.inserts += 1
+            self._touch(node)
+            parent = node
+
+    # ------------------------------------------------------------------
+    # Pool protocol (duck-typed hook: see KVPool.prefix)
+    # ------------------------------------------------------------------
+
+    def holds(self, block: int) -> bool:
+        return block in self._blocks
+
+    def blocks(self) -> Iterable[int]:
+        return self._blocks.keys()
+
+    def evictable(self) -> int:
+        """Idle cached blocks eviction could reclaim right now.
+
+        refcount-0 ∧ unpinned is descendant-closed (a slot referencing a
+        child block references every ancestor block in its table, and
+        lookup pins whole prefix chains), so the count equals the set
+        size — whole subtrees go leaf-first."""
+        rc = self.pool.refcount
+        return sum(1 for b in self._blocks
+                   if rc[b] == 0 and b not in self._pinned)
+
+    def _evictable_leaves(self) -> List[_Node]:
+        rc = self.pool.refcount
+        return [n for n in self._blocks.values()
+                if not n.children and rc[n.block] == 0
+                and n.block not in self._pinned]
+
+    def _drop(self, node: _Node) -> None:
+        assert not node.children, "evicting an internal node"
+        del self.nodes[node.key]
+        del self._blocks[node.block]
+        if node.parent is not None:
+            node.parent.children.pop(node.key, None)
+
+    def evict(self, n: int) -> int:
+        """Evict up to ``n`` idle cached blocks (leaf-first LRU, ties by
+        block id for determinism), returning them to the pool free list."""
+        done = 0
+        while done < n:
+            leaves = self._evictable_leaves()
+            if not leaves:
+                break
+            victim = min(leaves, key=lambda nd: (nd.stamp, nd.block))
+            self._drop(victim)
+            self.pool.reclaim([victim.block])
+            self.evictions += 1
+            done += 1
+        return done
+
+    def flush(self) -> None:
+        """Drop the whole index.  Idle blocks go back to the free list;
+        blocks still referenced by live slots are merely de-indexed (their
+        storage returns through the normal release path)."""
+        self.evict(len(self._blocks))
+        for node in list(self._blocks.values()):
+            # still-referenced (or pinned) leftovers: de-index only
+            del self.nodes[node.key]
+            del self._blocks[node.block]
+            node.children.clear()
+            if node.parent is not None:
+                node.parent.children.pop(node.key, None)
+
+    # ------------------------------------------------------------------
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "lookups": self.lookups,
+            "hits": self.hits,
+            "inserts": self.inserts,
+            "evictions": self.evictions,
+            "cached_blocks": len(self._blocks),
+        }

@@ -108,8 +108,29 @@ class ContinuousScheduler:
         self.busy_slot_steps = 0
         self.tokens_generated = 0
         self.host_syncs = 0  # device->host transfers on the decode path
+        # prefix-sharing accounting (all zero when the cache is disabled)
+        self.prefill_tokens_computed = 0  # prompt positions actually prefilled
+        self.prefill_tokens_saved = 0  # prompt positions served from cache
+        self.blocks_shared = 0  # cached blocks mapped into slot tables
+        self.cow_copies = 0  # copy-on-write blocks (fully-cached prompts)
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
+
+    def reset_metrics(self) -> None:
+        """Zero every aggregate counter and drop finished-request records
+        (bench warm-up isolation).  Pool and prefix-cache contents are
+        untouched — flush the prefix cache separately for a cold run."""
+        self.decode_steps = 0
+        self.busy_slot_steps = 0
+        self.tokens_generated = 0
+        self.host_syncs = 0
+        self.prefill_tokens_computed = 0
+        self.prefill_tokens_saved = 0
+        self.blocks_shared = 0
+        self.cow_copies = 0
+        self.done = []
+        self._t_first = None
+        self._t_last = None
 
     # ------------------------------------------------------------------
     @property
@@ -190,6 +211,7 @@ class ContinuousScheduler:
 
     def _admit(self) -> int:
         admitted = 0
+        pc = getattr(self.engine, "prefix_cache", None)
         while self.queue:
             try:
                 slot = self.slot_req.index(None)
@@ -197,18 +219,53 @@ class ContinuousScheduler:
                 break  # no free slot
             req = self.queue[0]
             worst = req.prompt_tokens + max(0, req.max_new_tokens - 1)
-            if not self.pool.can_admit(worst):
+            # longest cached full-block prefix (token-modal requests only:
+            # a vlm patch-embed prefix is not keyable by token ids)
+            hit = None
+            if pc is not None and req.patch_embeds is None:
+                hit = pc.lookup(req.prompt)
+            start, n_cow = 0, 0
+            mapped: List[int] = []
+            if hit is not None and hit.blocks:
+                hit_tokens = hit.n_blocks * self.pool.block_tokens
+                assert hit_tokens <= req.prompt_tokens
+                if hit_tokens == req.prompt_tokens:
+                    # fully cached prompt: re-run the last position for its
+                    # logits and copy-on-write its block, so the fresh KV
+                    # store never writes into shared storage
+                    start, n_cow = req.prompt_tokens - 1, 1
+                else:
+                    start = hit_tokens
+                if start > 0:
+                    mapped = hit.blocks[:hit.n_blocks - n_cow]
+                else:  # 1-token prompt fully cached: plain prefill
+                    n_cow = 0
+            if not self.pool.can_admit(worst, shared_blocks=len(mapped)):
+                if hit is not None:
+                    pc.unpin(hit)
                 break  # FIFO: head waits for blocks, later ticks retry
             self.queue.popleft()
             req.admit_t = self.clock()
             if self._t_first is None:
                 self._t_first = req.admit_t
-            last_logits, cache, n_tokens = self.engine.prefill_one(
-                req.prompt, req.patch_embeds)
+            if start > 0:
+                last_logits, cache, n_tokens = self.engine.prefill_shared(
+                    req.prompt, start, hit.blocks)
+            else:
+                last_logits, cache, n_tokens = self.engine.prefill_one(
+                    req.prompt, req.patch_embeds)
             assert n_tokens == req.prompt_tokens, (n_tokens, req.prompt_tokens)
             self.slot_req[slot] = req
             req.status = "active"
-            self.pool.admit(slot, cache, n_tokens, worst)
+            self.pool.admit(slot, cache, n_tokens, worst, shared=mapped)
+            if hit is not None:
+                pc.unpin(hit)  # the table now holds its own references
+            if pc is not None and req.patch_embeds is None:
+                pc.insert(req.prompt, self.pool.slot_blocks[slot])
+            self.prefill_tokens_computed += n_tokens - start
+            self.prefill_tokens_saved += start
+            self.blocks_shared += len(mapped)
+            self.cow_copies += n_cow
             tok = self._sample(last_logits, req)
             self._emit(slot, req, tok)  # may stop immediately (max_new == 1)
             admitted += 1
@@ -335,7 +392,20 @@ class ContinuousScheduler:
                              if elapsed else None),
             "mean_queue_wait_s": _mean([r["queue_wait_s"] for r in reqs]),
             "mean_ttft_s": _mean([r["ttft_s"] for r in reqs]),
+            # prefix sharing (token-level hit rate: prompt positions served
+            # from cache over all prompt positions admitted)
+            "prefill_tokens_computed": self.prefill_tokens_computed,
+            "prefill_tokens_saved": self.prefill_tokens_saved,
+            "prefix_hit_rate": (
+                self.prefill_tokens_saved
+                / (self.prefill_tokens_saved + self.prefill_tokens_computed)
+                if self.prefill_tokens_saved + self.prefill_tokens_computed
+                else None),
+            "blocks_shared": self.blocks_shared,
+            "cow_copies": self.cow_copies,
         }
+        pc = getattr(self.engine, "prefix_cache", None)
+        agg["prefix_cache"] = pc.stats() if pc is not None else None
         return {"requests": reqs, "aggregate": agg}
 
 
@@ -352,19 +422,34 @@ def _mean(vals):
 def synthetic_trace(cfg, n_requests: int, *, seed: int = 0,
                     prompt_len: int = 12, prompt_jitter: int = 0,
                     max_new_low: int = 4, max_new_high: int = 16,
+                    shared_prefix_tokens: int = 0, n_prefix_groups: int = 1,
                     on_token: Optional[Callable] = None) -> List[Request]:
     """Mixed-length trace: fixed-ish prompts, decode lengths drawn from
     ``[max_new_low, max_new_high]`` — the regime where static batching
-    idles slots behind the longest sequence of each batch."""
+    idles slots behind the longest sequence of each batch.
+
+    ``shared_prefix_tokens > 0`` prepends a common prefix to every prompt
+    (system-prompt traffic): ``n_prefix_groups`` distinct prefixes are
+    drawn once up front and assigned round-robin, so request ``i`` shares
+    its prefix with requests ``i ± n_prefix_groups`` — the workload the
+    prefix cache is built for.  Fully seeded: the same (seed, knobs)
+    always produce the same token ids, no wall-clock anywhere."""
     rng = np.random.default_rng(seed)
+    shape = ((lambda s: (s, cfg.n_codebooks)) if cfg.modality == "audio"
+             else (lambda s: (s,)))
+    prefixes = [
+        rng.integers(0, cfg.vocab, size=shape(shared_prefix_tokens))
+        .astype(np.int32)
+        for _ in range(max(1, n_prefix_groups))
+    ] if shared_prefix_tokens > 0 else []
     reqs = []
-    for _ in range(n_requests):
+    for i in range(n_requests):
         s = prompt_len + (int(rng.integers(0, prompt_jitter + 1))
                           if prompt_jitter else 0)
-        if cfg.modality == "audio":
-            prompt = rng.integers(0, cfg.vocab, size=(s, cfg.n_codebooks))
-        else:
-            prompt = rng.integers(0, cfg.vocab, size=(s,))
+        prompt = rng.integers(0, cfg.vocab, size=shape(s))
+        if prefixes:
+            prompt = np.concatenate(
+                [prefixes[i % len(prefixes)], prompt], axis=0)
         pe = None
         if cfg.modality == "vlm":
             pe = (rng.normal(size=(cfg.n_patches, cfg.d_model))
@@ -380,16 +465,23 @@ def synthetic_trace(cfg, n_requests: int, *, seed: int = 0,
 def run_continuous_trace(engine, *, n_requests: int = 8, prompt_len: int = 12,
                          prompt_jitter: int = 0, max_new: int = 16,
                          seed: int = 0, stream_first: bool = True,
+                         shared_prefix_tokens: int = 0,
+                         n_prefix_groups: int = 1,
                          quiet: bool = False) -> Dict:
     """Replay a synthetic mixed-length trace through ``engine``'s
     continuous scheduler (the launchers' ``--continuous`` mode) and return
-    the metrics dict, annotated with wall time and the static-batch
+    the metrics dict, annotated with wall time, the emitted-token digest
+    (CI diffs it across prefix-cache on/off runs) and the static-batch
     baseline utilisation for the same FCFS trace."""
+    import hashlib
+
     cfg = engine.cfg
     trace = synthetic_trace(
         cfg, n_requests, seed=seed, prompt_len=prompt_len,
         prompt_jitter=prompt_jitter,
-        max_new_low=max(1, max_new // 4), max_new_high=max_new)
+        max_new_low=max(1, max_new // 4), max_new_high=max_new,
+        shared_prefix_tokens=shared_prefix_tokens,
+        n_prefix_groups=n_prefix_groups)
     if stream_first and not quiet:
         def cb(req, tok, done):
             print(f"[trace] r{req.rid} token {len(req.tokens)}: {tok}"
@@ -405,6 +497,9 @@ def run_continuous_trace(engine, *, n_requests: int = 8, prompt_len: int = 12,
     a["wall_s"] = wall
     a["static_baseline_utilisation"] = static_baseline_utilisation(
         trace, engine.pool.n_slots)
+    a["tokens_sha1"] = hashlib.sha1(b"".join(
+        np.ascontiguousarray(r.token_array()).tobytes()
+        for r in sorted(trace, key=lambda r: r.rid))).hexdigest()[:16]
     if not quiet:
         fmt = lambda v, scale=1.0, unit="": (
             "n/a" if v is None else f"{v * scale:.2f}{unit}")
@@ -415,6 +510,15 @@ def run_continuous_trace(engine, *, n_requests: int = 8, prompt_len: int = 12,
               f"{a['static_baseline_utilisation']:.2f}; mean TTFT "
               f"{fmt(a['mean_ttft_s'], 1e3, ' ms')}, mean queue wait "
               f"{fmt(a['mean_queue_wait_s'], 1e3, ' ms')}")
+        print(f"[continuous] tokens sha1 {a['tokens_sha1']}")
+        if a["prefix_cache"] is not None:
+            hr = a["prefix_hit_rate"]
+            print(f"[continuous] prefix cache: hit rate "
+                  f"{fmt(hr)} ({a['prefill_tokens_saved']} prompt tokens "
+                  f"saved / {a['prefill_tokens_computed']} computed), "
+                  f"{a['blocks_shared']} blocks shared, "
+                  f"{a['cow_copies']} cow copies, "
+                  f"{a['prefix_cache']['evictions']} evictions")
     return m
 
 

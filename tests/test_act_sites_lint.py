@@ -73,7 +73,7 @@ def test_every_act_q_call_is_site_tagged():
     # the walk really covers the model code (all five families + the EP
     # collective): a refactor that moves act_q out from under this lint
     # should fail loudly, not silently pass on zero calls
-    assert n_calls >= 40, f"expected >= 40 act_q call sites, found {n_calls}"
+    assert n_calls >= 39, f"expected >= 39 act_q call sites, found {n_calls}"
 
 
 def test_literal_tags_match_policy_site_vocabulary():

@@ -1,0 +1,333 @@
+"""Prefix-sharing KV cache tests: radix index + refcounts + copy-on-write.
+
+The acceptance contract of the prefix-sharing subsystem
+(:mod:`repro.serve.prefixcache`):
+
+  * with ``ServeConfig(prefix_cache=True)`` the emitted tokens are
+    *bit-identical* to ``prefix_cache=False`` on shared-prefix traffic,
+    across the paged attention-cache families (dense / MoE / MLA), float
+    and quantized KV, single-tick and in-graph-window decode;
+  * a fully cached prompt is served through copy-on-write — the shared
+    blocks are mapped, exactly one fresh block is written — and still
+    matches the unshared run token-for-token;
+  * refcounts never leak or double-free under oversubscription: released
+    shared blocks stay resident while the index holds them, eviction
+    reclaims only refcount-0 unpinned blocks, and the pool passes its
+    invariant + leak checks after drain/flush;
+  * the scheduler metrics account every admitted prompt position as
+    either computed or saved, and ``prefix_hit_rate`` reflects sharing;
+  * recurrent-state families (xLSTM / Zamba) silently serve unshared.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import NOQUANT, QuantizeSpec
+from repro.models.registry import get_arch
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.scheduler import synthetic_trace
+
+PAGED_FAMILY_ARCHS = {
+    "dense": "smollm-135m",
+    "moe": "deepseek-moe-16b",
+    "mla": "minicpm3-4b",
+}
+
+
+@pytest.fixture(scope="module")
+def models():
+    """{family: (arch, float params)} at reduced scale (paged families)."""
+    out = {}
+    for family, name in PAGED_FAMILY_ARCHS.items():
+        arch = get_arch(name, reduced=True)
+        out[family] = (arch, arch.init(jax.random.PRNGKey(0), jnp.float32))
+    return out
+
+
+def _run_trace(arch, params, spec, trace, *, prefix_cache, block_tokens=8,
+               max_seq=96, batch_slots=2, pool_blocks=None,
+               steps_per_sync=1):
+    eng = ServeEngine(arch, params, ServeConfig(
+        max_seq=max_seq, batch_slots=batch_slots, block_tokens=block_tokens,
+        pool_blocks=pool_blocks, prefix_cache=prefix_cache,
+        steps_per_sync=steps_per_sync), spec, dtype=jnp.float32)
+    reqs = [eng.scheduler.submit(r) for r in trace]
+    eng.drain()
+    return eng, [r.token_array() for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# Token identity: prefix_cache=True == prefix_cache=False, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", sorted(PAGED_FAMILY_ARCHS))
+@pytest.mark.parametrize("kv_bits", [16, 4])
+def test_sharing_token_identity(models, family, kv_bits):
+    """Shared-prefix trace through on/off engines: identical tokens, a
+    real hit rate, and a pristine pool afterwards."""
+    arch, params = models[family]
+    spec = NOQUANT if kv_bits == 16 else QuantizeSpec(kv_bits=kv_bits)
+    trace = lambda: synthetic_trace(
+        arch.config, 5, seed=3, prompt_len=6, max_new_low=2, max_new_high=5,
+        shared_prefix_tokens=16, n_prefix_groups=2)
+    _, toks_off = _run_trace(arch, params, spec, trace(), prefix_cache=False)
+    eng, toks_on = _run_trace(arch, params, spec, trace(), prefix_cache=True)
+    for a, b in zip(toks_off, toks_on):
+        np.testing.assert_array_equal(a, b)
+    agg = eng.scheduler.metrics()["aggregate"]
+    assert agg["prefix_hit_rate"] > 0
+    assert agg["blocks_shared"] > 0
+    assert (agg["prefill_tokens_saved"] + agg["prefill_tokens_computed"]
+            == sum(r.prompt_tokens for r in eng.scheduler.done))
+    eng.pool.check_invariants()
+
+
+def test_sharing_token_identity_windowed(models):
+    """Same identity contract with the in-graph multi-step decode window
+    (``steps_per_sync > 1``) — decode never touches shared blocks."""
+    arch, params = models["dense"]
+    trace = lambda: synthetic_trace(
+        arch.config, 5, seed=4, prompt_len=6, max_new_low=3, max_new_high=9,
+        shared_prefix_tokens=16, n_prefix_groups=1)
+    _, toks_off = _run_trace(arch, params, NOQUANT, trace(),
+                             prefix_cache=False, steps_per_sync=4)
+    eng, toks_on = _run_trace(arch, params, NOQUANT, trace(),
+                              prefix_cache=True, steps_per_sync=4)
+    for a, b in zip(toks_off, toks_on):
+        np.testing.assert_array_equal(a, b)
+    assert eng.scheduler.metrics()["aggregate"]["prefix_hit_rate"] > 0
+    eng.pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Copy-on-write
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kv_bits", [16, 4])
+def test_full_hit_cow_exactness(models, kv_bits):
+    """Identical (block-aligned) prompts: every admission after the first
+    is a full hit served by copy-on-write — one fresh block each, shared
+    blocks never rewritten, tokens identical to the unshared run."""
+    arch, params = models["dense"]
+    spec = NOQUANT if kv_bits == 16 else QuantizeSpec(kv_bits=kv_bits)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, arch.config.vocab, size=(16,)).astype(np.int32)
+    from repro.serve.scheduler import Request
+    mk = lambda: [Request(prompt=prompt.copy(), max_new_tokens=6)
+                  for _ in range(3)]
+    _, toks_off = _run_trace(arch, params, spec, mk(), prefix_cache=False)
+    eng, toks_on = _run_trace(arch, params, spec, mk(), prefix_cache=True)
+    for a, b in zip(toks_off, toks_on):
+        np.testing.assert_array_equal(a, b)
+    agg = eng.scheduler.metrics()["aggregate"]
+    assert agg["cow_copies"] == 2  # admissions 2 and 3 were fully cached
+    assert agg["prefill_tokens_saved"] == 2 * (len(prompt) - 1)
+    eng.pool.check_invariants()
+
+
+def test_divergent_suffix_partial_sharing(models):
+    """Prompts sharing a prefix but diverging mid-stream share exactly the
+    common full blocks; the divergent tail is prefilled fresh."""
+    arch, params = models["dense"]
+    rng = np.random.default_rng(1)
+    prefix = rng.integers(0, arch.config.vocab, size=(16,)).astype(np.int32)
+    tails = [rng.integers(0, arch.config.vocab, size=(6,)).astype(np.int32)
+             for _ in range(2)]
+    from repro.serve.scheduler import Request
+    mk = lambda: [Request(prompt=np.concatenate([prefix, t]),
+                          max_new_tokens=4) for t in tails]
+    _, toks_off = _run_trace(arch, params, NOQUANT, mk(), prefix_cache=False)
+    eng, toks_on = _run_trace(arch, params, NOQUANT, mk(), prefix_cache=True)
+    for a, b in zip(toks_off, toks_on):
+        np.testing.assert_array_equal(a, b)
+    agg = eng.scheduler.metrics()["aggregate"]
+    # second admission maps the 2 full prefix blocks (16 tokens / T=8) and
+    # computes only its 6-token tail
+    assert agg["blocks_shared"] == 2
+    assert agg["prefill_tokens_saved"] == 16
+    assert agg["cow_copies"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Refcounts, eviction, leaks
+# ---------------------------------------------------------------------------
+
+
+def test_refcount_reuse_under_oversubscription(models):
+    """More distinct prefixes than the pool can retain: admission evicts
+    idle cached blocks on demand, refcounts never double-free, and the
+    pool drains leak-free."""
+    arch, params = models["dense"]
+    trace = synthetic_trace(
+        arch.config, 10, seed=5, prompt_len=14, max_new_low=2, max_new_high=4,
+        shared_prefix_tokens=8, n_prefix_groups=5)
+    eng, _ = _run_trace(arch, params, NOQUANT, trace, prefix_cache=True,
+                        block_tokens=4, max_seq=32, pool_blocks=14)
+    pc = eng.prefix_cache
+    assert pc.stats()["evictions"] > 0
+    eng.pool.check_invariants()
+    # flush the index: every cached-idle block returns to the free list
+    pc.flush()
+    assert pc.stats()["cached_blocks"] == 0
+    eng.pool.check_leaks()
+
+
+def test_release_keeps_cached_blocks_resident(models):
+    """Releasing a slot whose blocks are indexed keeps them resident
+    (off the free list) until evicted; releasing unindexed blocks frees
+    them immediately."""
+    arch, params = models["dense"]
+    eng = ServeEngine(arch, params,
+                      ServeConfig(max_seq=64, batch_slots=2, block_tokens=8,
+                                  prefix_cache=True), dtype=jnp.float32)
+    prompt = np.arange(16, dtype=np.int32) % arch.config.vocab
+    eng.submit(prompt, 2)
+    eng.drain()
+    pool, pc = eng.pool, eng.prefix_cache
+    cached = set(pc.blocks())
+    assert cached and all(pool.refcount[b] == 0 for b in cached)
+    assert not (cached & set(pool.free))  # resident, not reclaimable
+    pool.check_invariants()
+    # a second identical request re-maps those very blocks (refcount > 0)
+    eng.submit(prompt, 2)
+    eng.drain()
+    assert pc.stats()["hits"] >= 1
+    pool.check_invariants()
+    pc.flush()
+    pool.check_leaks()
+
+
+def test_no_reclaim_of_live_shared_blocks(models):
+    """The pool refuses to reclaim a block that still has table
+    references, and refuses a double release."""
+    arch, params = models["dense"]
+    eng = ServeEngine(arch, params,
+                      ServeConfig(max_seq=64, batch_slots=2, block_tokens=8,
+                                  prefix_cache=True), dtype=jnp.float32)
+    prompt = np.arange(24, dtype=np.int32) % arch.config.vocab
+    r = eng.submit(prompt, 8)
+    eng.scheduler.step()  # admit + first decode tick; request still active
+    assert r.status == "active"
+    slot = eng.scheduler.slot_req.index(r)
+    live = eng.pool.slot_blocks[slot][0]
+    assert eng.pool.refcount[live] > 0
+    with pytest.raises(AssertionError):
+        eng.pool.reclaim([live])  # live shared block: must refuse
+    eng.drain()
+    eng.prefix_cache.flush()
+    assert live in eng.pool.free
+    with pytest.raises(AssertionError):
+        eng.pool.reclaim([live])  # already free: double-free must assert
+    eng.pool.check_leaks()
+
+
+def test_eviction_is_lru_leaf_first(models):
+    """Eviction removes only leaves and prefers the least recently used:
+    a prefix chain is consumed tail-first, never orphaning a child."""
+    arch, params = models["dense"]
+    eng = ServeEngine(arch, params,
+                      ServeConfig(max_seq=64, batch_slots=1, block_tokens=8,
+                                  prefix_cache=True), dtype=jnp.float32)
+    prompt = np.arange(24, dtype=np.int32) % arch.config.vocab  # 3 blocks
+    eng.submit(prompt, 2)
+    eng.drain()
+    pc = eng.prefix_cache
+    chain = [pc.nodes[k].block for k in pc._keys(prompt)]
+    assert len(chain) == 3
+    assert pc.evict(1) == 1
+    assert not pc.holds(chain[2]) and pc.holds(chain[0])  # leaf went first
+    assert pc.evict(10) == 2  # rest of the chain, tail-first
+    assert pc.stats()["cached_blocks"] == 0
+    eng.pool.check_leaks()
+
+
+# ---------------------------------------------------------------------------
+# Metrics, trace knobs, gating
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_accounting(models):
+    """Every admitted prompt position lands in exactly one bucket, and the
+    hit rate is their ratio; the cache stats ride the aggregate."""
+    arch, params = models["dense"]
+    trace = synthetic_trace(arch.config, 6, seed=9, prompt_len=5,
+                            max_new_low=2, max_new_high=4,
+                            shared_prefix_tokens=16, n_prefix_groups=2)
+    eng, _ = _run_trace(arch, params, NOQUANT, trace, prefix_cache=True)
+    agg = eng.scheduler.metrics()["aggregate"]
+    total = sum(r.prompt_tokens for r in eng.scheduler.done)
+    assert agg["prefill_tokens_saved"] + agg["prefill_tokens_computed"] == total
+    assert agg["prefix_hit_rate"] == pytest.approx(
+        agg["prefill_tokens_saved"] / total)
+    assert agg["prefix_cache"]["lookups"] == 6
+    assert agg["prefix_cache"]["hits"] >= 4  # all but each group's first
+    eng.scheduler.reset_metrics()
+    agg2 = eng.scheduler.metrics()["aggregate"]
+    assert agg2["prefill_tokens_saved"] == 0 and agg2["prefix_hit_rate"] is None
+
+
+def test_trace_knobs_deterministic(models):
+    """``shared_prefix_tokens``/``n_prefix_groups`` are seeded and
+    deterministic: same knobs -> same prompts, round-robin group
+    assignment, no wall-clock anywhere."""
+    arch, _ = models["dense"]
+    cfg = arch.config
+    t1 = synthetic_trace(cfg, 6, seed=11, prompt_len=4,
+                         shared_prefix_tokens=8, n_prefix_groups=2)
+    t2 = synthetic_trace(cfg, 6, seed=11, prompt_len=4,
+                         shared_prefix_tokens=8, n_prefix_groups=2)
+    for a, b in zip(t1, t2):
+        np.testing.assert_array_equal(a.prompt, b.prompt)
+    for i in range(2, 6):  # request i shares its prefix with i - n_groups
+        np.testing.assert_array_equal(t1[i].prompt[:8], t1[i - 2].prompt[:8])
+    assert not np.array_equal(t1[0].prompt[:8], t1[1].prompt[:8])
+    # knob off: draw order matches the pre-knob trace exactly
+    base = synthetic_trace(cfg, 2, seed=11, prompt_len=4)
+    again = synthetic_trace(cfg, 2, seed=11, prompt_len=4,
+                            shared_prefix_tokens=0, n_prefix_groups=3)
+    for a, b in zip(base, again):
+        np.testing.assert_array_equal(a.prompt, b.prompt)
+
+
+@pytest.mark.parametrize("name", ["xlstm-1.3b", "zamba2-1.2b"])
+def test_recurrent_families_gated(name):
+    """Per-slot-state families cannot share KV prefixes: the engine
+    silently serves unshared (prefix_cache property is None) and still
+    produces correct tokens."""
+    arch = get_arch(name, reduced=True)
+    params = arch.init(jax.random.PRNGKey(0), jnp.float32)
+    prompts = np.random.default_rng(0).integers(
+        0, arch.config.vocab, size=(2, 8)).astype(np.int32)
+    eng_on = ServeEngine(arch, params,
+                         ServeConfig(max_seq=32, batch_slots=2, block_tokens=8,
+                                     prefix_cache=True), dtype=jnp.float32)
+    out_on = eng_on.generate(prompts, 4)
+    assert eng_on.prefix_cache is None
+    eng_off = ServeEngine(arch, params,
+                          ServeConfig(max_seq=32, batch_slots=2,
+                                      block_tokens=8), dtype=jnp.float32)
+    np.testing.assert_array_equal(out_on["tokens"],
+                                  eng_off.generate(prompts, 4)["tokens"])
+
+
+def test_vlm_requests_skip_sharing(models):
+    """A request with patch embeds bypasses lookup/insert (its prefix is
+    not keyable by token ids) but shares the pool with token requests."""
+    arch = get_arch("internvl2-2b", reduced=True)
+    params = arch.init(jax.random.PRNGKey(0), jnp.float32)
+    cfg = arch.config
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, cfg.vocab, size=(8,)).astype(np.int32)
+    pe = rng.normal(size=(cfg.n_patches, cfg.d_model)).astype(np.float32) * .02
+    eng = ServeEngine(arch, params,
+                      ServeConfig(max_seq=64, batch_slots=2, block_tokens=8,
+                                  prefix_cache=True), dtype=jnp.float32)
+    eng.submit(prompt, 2, patch_embeds=pe)
+    eng.submit(prompt, 2)  # token-only: may insert/lookup freely
+    eng.drain()
+    assert eng.prefix_cache.stats()["lookups"] == 1  # vlm request skipped
+    eng.pool.check_invariants()
