@@ -187,6 +187,87 @@ def prefix_sweep(qm, backend="reference", n_requests=24, quiet=False):
     return rows
 
 
+def _bench_spec(qm, backend, n_requests, *, draft=None, draft_k=0,
+                name=None):
+    spec = draft is not None
+    eng = qm.serve(api.ServeConfig(max_seq=MAX_SEQ, batch_slots=SLOTS,
+                                   block_tokens=BLOCK_TOKENS,
+                                   spec_decode=spec,
+                                   draft_k=draft_k if spec else 4),
+                   backend=backend, draft=draft)
+    trace = _trace(qm.config, n_requests)
+    # warm the compile caches (prefill + decode/spec window) outside the
+    # timed run, then reset the counters
+    eng.scheduler.submit(_trace(qm.config, 1)[0])
+    eng.drain()
+    eng.scheduler.reset_metrics()
+    t0 = time.perf_counter()
+    for r in trace:
+        eng.scheduler.submit(r)
+    eng.drain()
+    wall = time.perf_counter() - t0
+    agg = eng.scheduler.metrics()["aggregate"]
+    eng.pool.check_invariants()
+    tokens = sum(len(r.tokens) for r in trace)
+    digest = hashlib.sha1(b"".join(
+        np.ascontiguousarray(r.token_array()).tobytes()
+        for r in trace)).hexdigest()[:16]
+    return {
+        "name": name or (f"{backend}/spec_k{draft_k}" if spec
+                         else f"{backend}/spec_off"),
+        "tokens": tokens,
+        "wall_s": wall,
+        "tokens_per_s": tokens / wall,
+        "decode_steps": agg["decode_steps"],
+        "host_syncs": agg["host_syncs"],
+        "draft_k": draft_k if spec else 0,
+        "spec_windows": agg["spec_windows"],
+        "spec_draft_tokens": agg["spec_draft_tokens"],
+        "spec_accepted_tokens": agg["spec_accepted_tokens"],
+        "acceptance_rate": agg["spec_acceptance_rate"],
+        "tokens_sha1": digest,
+    }
+
+
+def spec_sweep(qm, backend="reference", n_requests=24, ks=(2, 4),
+               draft_policy="draft-w3-rtn", quiet=False):
+    """Self-drafted spec decode (draft-k/verify-1) vs plain decode.
+
+    One artifact, zero extra checkpoints: ``api.derive_draft`` re-rounds
+    the packed weights under a harsher weight-only overlay and the
+    scheduler drafts k tokens with it per verify call over the *same*
+    paged pool.  ``decode_steps`` is the hardware-independent signal —
+    with spec decode on every decode step is one verify invocation that
+    can land up to k+1 tokens per slot, so the same trace finishes in
+    fewer full-batch target-model calls.  Greedy spec decode is
+    token-identical: all rows must agree on ``tokens_sha1``."""
+    base = _bench_spec(qm, backend, n_requests)
+    rows = [base]
+    draft = api.derive_draft(qm, draft_policy)
+    if not quiet:
+        print(f"  [serve_bench] {base['name']}: "
+              f"{base['decode_steps']} decode steps "
+              f"({base['tokens']} tokens); draft {draft_policy} "
+              f"({draft.packed_bytes()/2**20:.2f} MiB packed)")
+    for k in ks:
+        r = _bench_spec(qm, backend, n_requests, draft=draft, draft_k=k)
+        r["decode_steps_saved"] = base["decode_steps"] - r["decode_steps"]
+        rows.append(r)
+        if not quiet:
+            ar = r["acceptance_rate"]
+            print(f"  [serve_bench] {r['name']}: {r['decode_steps']} verify "
+                  f"steps ({r['decode_steps_saved']} saved), acceptance "
+                  f"{'n/a' if ar is None else f'{ar:.2f}'} "
+                  f"({r['spec_accepted_tokens']}/{r['spec_draft_tokens']} "
+                  f"draft tokens), tokens sha1 {r['tokens_sha1']}")
+        assert r["tokens_sha1"] == base["tokens_sha1"], \
+            "spec decode changed the emitted tokens"
+        assert r["decode_steps"] < base["decode_steps"], \
+            f"spec k={k} took {r['decode_steps']} verify steps, baseline " \
+            f"{base['decode_steps']} decode steps"
+    return rows
+
+
 def _bench_static(qm, backend, n_requests):
     eng = qm.serve(api.ServeConfig(max_seq=MAX_SEQ, batch_slots=SLOTS),
                    backend=backend)
@@ -234,6 +315,7 @@ def run(quiet: bool = False, fast: bool = False):
                            intervals=(1, 4) if fast else (1, 2, 4, 8),
                            quiet=quiet))
     rows.extend(prefix_sweep(qm, "reference", n_requests, quiet=quiet))
+    rows.extend(spec_sweep(qm, "reference", n_requests, quiet=quiet))
     os.makedirs("results", exist_ok=True)
     with open("results/serve_bench.json", "w") as f:
         json.dump({"arch": ARCH, "slots": SLOTS, "trace_seed": TRACE_SEED,
@@ -252,8 +334,12 @@ def main(argv=None):
     ap.add_argument("--shared-prefix", action="store_true",
                     help="run only the prefix-cache off/on cell over the "
                     "shared-prefix trace")
+    ap.add_argument("--spec-sweep", action="store_true",
+                    help="run only the self-drafted speculative-decoding "
+                    "cell (baseline + k sweep off one artifact)")
     args = ap.parse_args(argv)
-    if args.sync_interval is None and not args.shared_prefix:
+    if (args.sync_interval is None and not args.shared_prefix
+            and not args.spec_sweep):
         run(fast=args.fast)
         return
     arch = get_arch(ARCH, reduced=True)
@@ -263,6 +349,12 @@ def main(argv=None):
                                     group=32))
     n_requests = 24 if args.fast else 40
     os.makedirs("results", exist_ok=True)
+    if args.spec_sweep:
+        rows = spec_sweep(qm, "reference", n_requests)
+        with open("results/serve_bench_spec.json", "w") as f:
+            json.dump({"arch": ARCH, "slots": SLOTS,
+                       "trace_seed": TRACE_SEED, "rows": rows}, f, indent=1)
+        return
     if args.shared_prefix:
         rows = prefix_sweep(qm, "reference", n_requests)
         with open("results/serve_bench_prefix.json", "w") as f:

@@ -58,8 +58,8 @@ from repro.serve.engine import ServeConfig, ServeEngine
 
 __all__ = [
     "PRESETS", "PTQConfig", "QuantPolicy", "QuantizeSpec", "QuantizedModel",
-    "RotationPlan", "RotationSpec", "ServeConfig", "SiteRule", "get_policy",
-    "load_quantized", "quantize",
+    "RotationPlan", "RotationSpec", "ServeConfig", "SiteRule", "derive_draft",
+    "get_policy", "load_quantized", "quantize",
 ]
 
 # 2: manifest carries the resolved QuantPolicy
@@ -126,14 +126,37 @@ class QuantizedModel:
 
     # -- serving ---------------------------------------------------------
     def serve(self, scfg: Optional[ServeConfig] = None, *, mesh=None,
-              backend: str = "reference", dtype=jnp.float32) -> ServeEngine:
+              backend: str = "reference", dtype=jnp.float32,
+              draft: Optional["QuantizedModel"] = None) -> ServeEngine:
         """Build a ServeEngine executing the packed weights through the
         chosen backend ("reference" dequant-on-use | "pallas" fused
         dequant-matmul).  ``ServeConfig(prefix_cache=True)`` shares cached
         prompt-prefix KV blocks across requests (system-prompt traffic)
-        with bit-identical output — see ``repro.serve.prefixcache``."""
+        with bit-identical output — see ``repro.serve.prefixcache``.
+
+        ``draft`` (with ``ServeConfig(spec_decode=True)``) plugs in a
+        self-draft derived from this same artifact via
+        :func:`derive_draft`: the scheduler drafts ``draft_k`` tokens per
+        slot with the draft weights over the *same* block-paged pool and
+        verifies them in one chunked call — greedy output stays
+        token-identical to non-spec decode."""
+        draft_params = None
+        if draft is not None:
+            if draft.config != self.config:
+                raise ValueError(
+                    "draft model config differs from the target's "
+                    f"({draft.config.name!r} vs {self.config.name!r}); "
+                    "derive the draft from this artifact with "
+                    "api.derive_draft")
+            if draft.spec != self.spec:
+                raise ValueError(
+                    "draft serving spec differs from the target's — the "
+                    "shared KV pool needs one cache codec; derive the "
+                    "draft with api.derive_draft (weight-only overlay)")
+            draft_params = draft.params
         return ServeEngine(self.arch, self.params, scfg or ServeConfig(),
-                           self.spec, dtype=dtype, mesh=mesh, backend=backend)
+                           self.spec, dtype=dtype, mesh=mesh,
+                           backend=backend, draft_params=draft_params)
 
     # -- persistence -----------------------------------------------------
     def save(self, directory: str, *, shards: int = 1) -> str:
@@ -296,3 +319,35 @@ def load_quantized(directory: str, *, backend: str = "reference"
                    ) -> QuantizedModel:
     """Load a saved artifact (see :meth:`QuantizedModel.save`)."""
     return QuantizedModel.load(directory, backend=backend)
+
+
+def derive_draft(qm: QuantizedModel,
+                 draft_policy="draft-w2-rtn") -> QuantizedModel:
+    """Derive a cheap self-draft from an already-packed artifact.
+
+    Re-quantizes every packed leaf of ``qm`` under ``draft_policy`` (a
+    :class:`QuantPolicy`, or a preset name such as ``"draft-w2-rtn"``) —
+    calibration-free RTN over the *already rotated* weights, so the draft
+    shares the target's rotations, activation rules, KV cache codec and
+    block tables.  Float leaves (norms, embeddings) are shared by
+    reference; no second checkpoint exists.  The returned model carries a
+    combined policy whose ``spec()`` equals the target's, so it saves and
+    reloads as a normal artifact.
+
+    The overlay must be layer-uniform, weight-only, and strictly cheaper
+    than the target — validated up front with actionable errors (see
+    :func:`repro.serve.specdecode.validate_draft_policy`).
+
+    Use with ``qm.serve(ServeConfig(spec_decode=True, draft_k=k),
+    draft=derived)`` for draft-k/verify-1 speculative decoding whose
+    greedy output is token-identical to non-spec decode.
+    """
+    from repro.serve import specdecode
+
+    if isinstance(draft_policy, str):
+        draft_policy = get_policy(draft_policy)
+    specdecode.validate_draft_policy(draft_policy)
+    draft_params = specdecode.derive_draft_params(qm.params, draft_policy)
+    policy = specdecode.combined_policy(qm.policy, draft_policy)
+    return QuantizedModel(arch=qm.arch, params=draft_params, ptq=None,
+                          spec=policy.spec(), policy=policy)

@@ -93,6 +93,13 @@ def param_pspecs(cfg, params_sds, *, fsdp_axes: Optional[Sequence[str]] = None,
     front when the axis is not divisible by ``fsdp_size`` (the product of
     the FSDP mesh axes) so intent specs stay close to what survives
     :func:`sanitize_pspecs`.
+
+    Rules key off each leaf's *logical* weight shape (packed leaves
+    contribute ``PackedWeight.logical_shape``), which is what makes a
+    spec-decode draft tree (``api.derive_draft`` — same logical shapes,
+    harsher bits/group) land on exactly the target's placement: the serve
+    engine runs this same function over the draft tree and draft/target
+    shards align axis-for-axis on the mesh.
     """
     from repro.quant.packed import is_packed
 

@@ -209,6 +209,17 @@ def main():
     ap.add_argument("--prefix-groups", type=int, default=1,
                     help="number of distinct shared prefixes, assigned "
                          "round-robin")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="self-drafted speculative decoding: derive a "
+                         "harsher draft from the same artifact "
+                         "(api.derive_draft) and run draft-k/verify-1 "
+                         "over the shared paged pool (greedy output is "
+                         "token-identical)")
+    ap.add_argument("--draft-policy", default="draft-w2-rtn",
+                    help="draft overlay policy for --spec-decode (preset "
+                         "name / JSON / path; weight-only, layer-uniform)")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="draft tokens per verify step (--spec-decode)")
     args = ap.parse_args()
 
     if args.artifact:
@@ -232,11 +243,19 @@ def main():
         path = qm.save(args.save_artifact)
         print(f"[quant_serve] artifact saved to {path}")
 
+    draft = None
+    if args.spec_decode:
+        draft = api.derive_draft(qm, args.draft_policy)
+        print(f"[quant_serve] spec decode: draft {draft.policy.name} "
+              f"({draft.packed_bytes()/2**20:.2f} MiB packed), "
+              f"k={args.draft_k}")
     eng = qm.serve(api.ServeConfig(max_seq=args.max_seq,
                                    batch_slots=args.prompts,
                                    block_tokens=args.block_tokens,
-                                   prefix_cache=args.prefix_cache),
-                   backend=args.backend)
+                                   prefix_cache=args.prefix_cache,
+                                   spec_decode=args.spec_decode,
+                                   draft_k=args.draft_k),
+                   backend=args.backend, draft=draft)
     if args.continuous:
         from repro.serve.scheduler import run_continuous_trace
 

@@ -511,6 +511,46 @@ def decode_attention(
     return out.reshape(b, 1, h, d).astype(q.dtype)
 
 
+def decode_chunk_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    length: jax.Array,
+    *,
+    window: int = 0,
+) -> jax.Array:
+    """Chunk-causal attention for the speculative-decode verify pass.
+
+    q: (B, K, H, D) — K consecutive pending tokens whose K/V has already
+    been written into the caches at positions ``[length, length + K)``;
+    caches: (B, Smax, KV, D); length: () fill *before* the chunk.  Query
+    ``j`` attends to positions ``< length + 1 + j`` (itself plus
+    everything stored earlier), so ``K == 1`` computes exactly
+    :func:`decode_attention` and position ``j`` of a longer chunk scores
+    the same softmax the j-th sequential decode step would.
+    """
+    b, kq, h, d = q.shape
+    kv = k_cache.shape[2]
+    rep = h // kv
+    smax = k_cache.shape[1]
+    qg = q.reshape(b, kq, kv, rep, d)
+    s = jnp.einsum(
+        "bqgrd,bsgd->bgrqs", qg, k_cache, preferred_element_type=jnp.float32
+    ) * (1.0 / np.sqrt(d))
+    kpos = jnp.arange(smax)
+    lim = length + 1 + jnp.arange(kq)             # (K,) per-query fill
+    mask = kpos[None, :] < lim[:, None]           # (K, Smax)
+    if window:
+        mask &= kpos[None, :] >= lim[:, None] - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bgrqs,bsgd->bqgrd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, kq, h, d).astype(q.dtype)
+
+
 def paged_decode_attention(
     q: jax.Array,
     k_pages,

@@ -201,3 +201,44 @@ def mla_decode_attention(
     out = jnp.einsum("bqhr,rhv->bqhv", out_lat.astype(x.dtype), wv)
     out = act_q(out.reshape(b, 1, h * cfg.v_head_dim), spec, site="wo")
     return out @ lp["wo"]
+
+
+def mla_decode_chunk_attention(
+    lp: Dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    ckv_cache: jax.Array,
+    krope_cache: jax.Array,
+    length: jax.Array,
+    spec: QuantizeSpec,
+) -> jax.Array:
+    """Absorbed-form chunk-causal attention (spec-decode verify).
+
+    x: (B, K, D) — K consecutive pending tokens whose latents are already
+    stored at positions ``[length, length + K)``; positions: (B, K);
+    length: () fill *before* the chunk.  Query ``j`` attends to positions
+    ``< length + 1 + j``; the absorbed einsums already carry a query axis,
+    so ``K == 1`` computes exactly :func:`mla_decode_attention`.
+    """
+    b, kq, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope = _project_q(lp, x, cfg, positions, spec)  # (B,K,H,*)
+    wkv_b = dense_w(lp["wkv_b"])
+    wk = wkv_b[..., : cfg.qk_nope_dim]  # (rank, H, nope)
+    q_lat = jnp.einsum("bqhe,rhe->bqhr", q_nope, wk)  # (B,K,H,rank)
+    s_lat = jnp.einsum("bqhr,bsr->bhqs", q_lat.astype(jnp.float32),
+                       ckv_cache.astype(jnp.float32))
+    s_rope = jnp.einsum("bqhe,bse->bhqs", q_rope.astype(jnp.float32),
+                        krope_cache.astype(jnp.float32))
+    scale = 1.0 / np.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    scores = (s_lat + s_rope) * scale
+    lim = length + 1 + jnp.arange(kq)                       # (K,)
+    mask = jnp.arange(ckv_cache.shape[1])[None, :] < lim[:, None]  # (K, Smax)
+    scores = jnp.where(mask[None, None], scores, common.NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bhqs,bsr->bqhr", p, ckv_cache.astype(jnp.float32))
+    wv = wkv_b[..., cfg.qk_nope_dim :]  # (rank, H, v)
+    out = jnp.einsum("bqhr,rhv->bqhv", out_lat.astype(x.dtype), wv)
+    out = act_q(out.reshape(b, kq, h * cfg.v_head_dim), spec, site="wo")
+    return out @ lp["wo"]

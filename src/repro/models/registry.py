@@ -60,6 +60,12 @@ class Arch:
     # compile per distinct prefix length).  None for recurrent-state
     # families: their per-token state scan cannot resume from a KV prefix.
     prefill_from: Optional[Callable] = None
+    # (params, tokens (B, K), cache, spec) -> (logits (B, K, V), cache):
+    # multi-token chunk-causal verify step for speculative decoding —
+    # writes the chunk's K/V at [length, length+K) and returns logits at
+    # *every* chunk position.  None for recurrent-state families (their
+    # per-token state cannot be rewound after a rejected draft).
+    decode_chunk: Optional[Callable] = None
 
     # ------------------------------------------------------------------
     def input_specs(self, shape: ShapeConfig, *, per_device_batch: Optional[int] = None
@@ -118,6 +124,9 @@ def _build_transformer(cfg: ModelConfig) -> Arch:
         prefill_from=lambda p, b, c, start, spec=NOQUANT: t.prefill(
             cfg, p, b, c, spec, start=start
         ),
+        decode_chunk=(None if cfg.modality == "audio" else
+                      lambda p, tok, c, spec=NOQUANT:
+                      t.decode_chunk(cfg, p, tok, c, spec)),
     )
 
 

@@ -611,6 +611,138 @@ def decode(cfg: ModelConfig, params: Dict, tokens: jax.Array, cache: Dict,
     return logits[:, 0], caches
 
 
+def decode_chunk(cfg: ModelConfig, params: Dict, tokens: jax.Array,
+                 cache: Dict, spec: QuantizeSpec = NOQUANT
+                 ) -> Tuple[jax.Array, Dict]:
+    """Multi-token verify step (speculative decoding).
+
+    tokens: (B, K) int32 — K consecutive pending tokens (the current
+    pending token followed by K-1 draft continuations).  Writes the
+    chunk's K/V at positions ``[length, length + K)`` — the per-token
+    cache codec makes the writes bitwise identical to K sequential
+    :func:`decode` steps — and returns *all* chunk logits (B, K, V):
+    ``logits[:, j]`` scores the next token after consuming
+    ``tokens[:, :j + 1]``, exactly what the (j+1)-th sequential decode
+    step would return.  Cache length advances by K.
+
+    Mirrors :func:`decode` body-for-body; only the query axis widens and
+    the attention mask becomes chunk-causal
+    (:func:`common.decode_chunk_attention`).
+    """
+    assert cfg.modality != "audio", \
+        "spec-decode verify is undefined for codebook token groups"
+    length = cache["length"]
+    b, kq = tokens.shape
+    h = embed_inputs(cfg, params, {"tokens": tokens})  # (B, K, D)
+    position = length  # write start of the chunk slab
+    positions = jnp.broadcast_to(length + jnp.arange(kq)[None, :], (b, kq))
+    kvq = spec.kv_bits < 16
+    caches0 = {k: v for k, v in cache.items() if k != "length"}
+
+    def _layer(caches, i):
+        return jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False), caches
+        )
+
+    def _std_layer(lp, caches, i, h):
+        x = rmsnorm(h, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = _qkv(cfg, lp, x, positions, spec)  # (B,K,H|KV,hd)
+        if kvq:
+            kc, ks_, kz = _quant_tokens(k, spec)
+            vc, vs_, vz = _quant_tokens(v, spec)
+            caches = dict(
+                caches,
+                k=jax.lax.dynamic_update_slice(caches["k"], kc[None], (i, 0, position, 0, 0)),
+                v=jax.lax.dynamic_update_slice(caches["v"], vc[None], (i, 0, position, 0, 0)),
+                k_scale=jax.lax.dynamic_update_slice(caches["k_scale"], ks_[None], (i, 0, position, 0)),
+                k_zero=jax.lax.dynamic_update_slice(caches["k_zero"], kz[None], (i, 0, position, 0)),
+                v_scale=jax.lax.dynamic_update_slice(caches["v_scale"], vs_[None], (i, 0, position, 0)),
+                v_zero=jax.lax.dynamic_update_slice(caches["v_zero"], vz[None], (i, 0, position, 0)),
+            )
+            lc = _layer(caches, i)
+            k_all = _dequant_tokens(lc["k"], lc["k_scale"], lc["k_zero"], h.dtype)
+            v_all = _dequant_tokens(lc["v"], lc["v_scale"], lc["v_zero"], h.dtype)
+        else:
+            caches = dict(
+                caches,
+                k=jax.lax.dynamic_update_slice(
+                    caches["k"], k.astype(caches["k"].dtype)[None], (i, 0, position, 0, 0)),
+                v=jax.lax.dynamic_update_slice(
+                    caches["v"], v.astype(caches["v"].dtype)[None], (i, 0, position, 0, 0)),
+            )
+            lc = _layer(caches, i)
+            k_all, v_all = lc["k"], lc["v"]
+        attn = common.decode_chunk_attention(q, k_all, v_all, length,
+                                             window=cfg.sliding_window)
+        attn = act_q(attn.reshape(b, kq, cfg.n_heads * cfg.hd), spec,
+                     site="wo")
+        return h + attn @ lp["wo"], caches
+
+    def _mla_layer(lp, caches, i, h):
+        x = rmsnorm(h, lp["attn_norm"], cfg.norm_eps)
+        ckv_new, krope_new = mla_mod._project_latent(
+            lp, x, cfg, positions, spec
+        )
+        if kvq:
+            codes, scale, zero = _quant_tokens(ckv_new, spec)
+            caches = dict(
+                caches,
+                ckv=jax.lax.dynamic_update_slice(caches["ckv"], codes[None], (i, 0, position, 0)),
+                ckv_scale=jax.lax.dynamic_update_slice(caches["ckv_scale"], scale[None], (i, 0, position)),
+                ckv_zero=jax.lax.dynamic_update_slice(caches["ckv_zero"], zero[None], (i, 0, position)),
+                krope=jax.lax.dynamic_update_slice(
+                    caches["krope"], krope_new.astype(caches["krope"].dtype)[None], (i, 0, position, 0)),
+            )
+            lc = _layer(caches, i)
+            ckv_all = _dequant_tokens(lc["ckv"], lc["ckv_scale"], lc["ckv_zero"], h.dtype)
+            krope_all = lc["krope"]
+        else:
+            caches = dict(
+                caches,
+                ckv=jax.lax.dynamic_update_slice(
+                    caches["ckv"], ckv_new.astype(caches["ckv"].dtype)[None], (i, 0, position, 0)),
+                krope=jax.lax.dynamic_update_slice(
+                    caches["krope"], krope_new.astype(caches["krope"].dtype)[None], (i, 0, position, 0)),
+            )
+            lc = _layer(caches, i)
+            ckv_all, krope_all = lc["ckv"], lc["krope"]
+        out = mla_mod.mla_decode_chunk_attention(
+            lp, x, cfg, positions, ckv_all, krope_all, length, spec
+        )
+        return h + out, caches
+
+    if _interleaved(cfg):
+        every = cfg.moe_every
+
+        def group_fn(carry, grp):
+            h, caches, g = carry
+            for j, (lp, kind) in enumerate(_group_slices(cfg, grp)):
+                i = g * every + j
+                h, caches = _std_layer(lp, caches, i, h)
+                h = mlp_block(cfg, lp, h, spec, kind=kind)
+            return (h, caches, g + 1), None
+
+        (h, caches, _), _ = jax.lax.scan(
+            group_fn, (h, caches0, jnp.asarray(0, jnp.int32)), params["layers"]
+        )
+    else:
+        def layer_fn(carry, lp):
+            h, caches, i = carry
+            if cfg.family == "mla":
+                h, caches = _mla_layer(lp, caches, i, h)
+            else:
+                h, caches = _std_layer(lp, caches, i, h)
+            h = mlp_block(cfg, lp, h, spec)
+            return (h, caches, i + 1), None
+
+        (h, caches, _), _ = jax.lax.scan(
+            layer_fn, (h, caches0, jnp.asarray(0, jnp.int32)), params["layers"]
+        )
+    logits = lm_logits(cfg, params, h, spec)
+    caches["length"] = length + kq
+    return logits, caches
+
+
 def decode_paged(cfg: ModelConfig, params: Dict, tokens: jax.Array,
                  paged: Dict, state: Dict, tables: jax.Array,
                  lengths: jax.Array, spec: QuantizeSpec = NOQUANT

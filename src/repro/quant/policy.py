@@ -36,6 +36,12 @@ Shipped presets (``get_policy``):
 ``gsr-over-spinquant``  SpinQuant-lite learned R1 composed with a GSR
                     post-rotation (paper Sec. 4: GSR layered over
                     optimization-based rotations), W4 RTN.
+``draft-w2-rtn``    weight-only overlay for ``api.derive_draft``: W2 RTN
+                    group-128 on every site, no rotation/act/kv changes —
+                    re-quantizes an artifact's packed weights into a cheap
+                    self-draft for speculative decoding.
+``draft-w3-rtn``    same overlay at W3 (higher acceptance, less
+                    compression).
 ==================  ======================================================
 """
 from __future__ import annotations
@@ -641,10 +647,32 @@ def _gsr_over_spinquant() -> QuantPolicy:
     )
 
 
+def _draft_w2_rtn() -> QuantPolicy:
+    # weight-only draft overlay for api.derive_draft: one layer-uniform
+    # calibration-free rule, no rotation/act/kv overrides, so the derived
+    # draft shares the target's resolved spec (rotations, act rules, KV
+    # layout) exactly — only the packed weights get cheaper
+    return QuantPolicy(
+        name="draft-w2-rtn",
+        rules=(SiteRule(pattern="*", bits=2, group=128, method="rtn"),),
+        act_bits=16, kv_bits=16,
+    )
+
+
+def _draft_w3_rtn() -> QuantPolicy:
+    return QuantPolicy(
+        name="draft-w3-rtn",
+        rules=(SiteRule(pattern="*", bits=3, group=128, method="rtn"),),
+        act_bits=16, kv_bits=16,
+    )
+
+
 PRESETS = {
     "paper-table1": _paper_table1,
     "w2-sensitive-fp4": _w2_sensitive_fp4,
     "gsr-over-spinquant": _gsr_over_spinquant,
+    "draft-w2-rtn": _draft_w2_rtn,
+    "draft-w3-rtn": _draft_w3_rtn,
 }
 
 

@@ -88,6 +88,23 @@ class ServeConfig:
     # Only fully-paged attention-cache families share (dense/MoE/MLA);
     # recurrent-state families silently serve unshared.
     prefix_cache: bool = False
+    # Cap idle cached-block retention: the prefix cache evicts its
+    # least-recently-used idle leaves beyond this count at insert time
+    # (None = unbounded — only pool pressure evicts).  Blocks still
+    # referenced by live slots never count against the cap.
+    max_cached_blocks: Optional[int] = None
+    # --- speculative decoding ---
+    # Draft-k/verify-1 self-speculation (repro.serve.specdecode): each
+    # scheduler window drafts ``draft_k`` tokens per slot with the
+    # engine's draft weights (api.derive_draft — same artifact, harsher
+    # weight overlay) over the *same* block-paged pool, then verifies the
+    # chunk in one batched call with the target weights and rolls back
+    # rejected positions by rewinding per-slot lengths.  Greedy output is
+    # token-identical to spec_decode=False; requires a draft
+    # (``qm.serve(..., draft=...)``), a fully paged family, temperature=0
+    # and steps_per_sync=1 (validated at engine build).
+    spec_decode: bool = False
+    draft_k: int = 4
 
 
 class ServeEngine:
@@ -102,7 +119,8 @@ class ServeEngine:
     """
 
     def __init__(self, arch, params, scfg: ServeConfig, spec: QuantizeSpec = NOQUANT,
-                 dtype=jnp.float32, mesh=None, backend: Optional[str] = None):
+                 dtype=jnp.float32, mesh=None, backend: Optional[str] = None,
+                 draft_params=None):
         from repro.quant.packed import set_backend
 
         self.arch = arch
@@ -111,6 +129,8 @@ class ServeEngine:
         self.spec = spec
         if backend is not None:
             params = set_backend(params, backend)
+            if draft_params is not None:
+                draft_params = set_backend(draft_params, backend)
         self.params = params
         self.backend = backend
         self.dtype = dtype
@@ -142,6 +162,19 @@ class ServeEngine:
             )
             self.params = jax.device_put(params, ns(pspec))
             self._cache_shardings = ns(cspec)
+            if draft_params is not None:
+                # the draft tree takes the *same* placement rules as the
+                # target: param_pspecs keys off logical weight shapes, and
+                # derive_draft preserves every leaf's logical shape (only
+                # bits/group change), so draft and target shards align
+                # slot-for-slot on the mesh
+                draft_sds = jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                    draft_params)
+                dspec = sanitize_pspecs(
+                    mesh, param_pspecs(self.cfg, draft_sds), draft_sds)
+                draft_params = jax.device_put(draft_params, ns(dspec))
+        self.draft_params = draft_params
         self._prefill = jax.jit(lambda p, b, c: arch.prefill(p, b, c, spec))
         self._decode = jax.jit(lambda p, t, c: arch.decode(p, t, c, spec))
         self._prefill_padded = None
@@ -152,7 +185,9 @@ class ServeEngine:
         self._pool = None
         self._pool_step_fn = None
         self._tick_fn = None
+        self._verify_tick = None
         self._window_jit = None
+        self._spec_jit = None
         self._sample_jit = None
         self._sched = None
         self.fused_decode = False
@@ -243,6 +278,15 @@ class ServeEngine:
                 lambda p, t, c: self.arch.decode(p, t, c, self.spec))
         self._tick_fn = tick
         self._pool_step_fn = self._pool.bind_step(tick)
+        self._verify_tick = None
+        if scfg.spec_decode:
+            from repro.serve import specdecode
+
+            specdecode.validate_spec_config(self)
+            # chunked verify rides the vmapped gather/scatter tick: the
+            # per-lane decode just widens to (k+1) tokens per call
+            self._verify_tick = self._pool.make_tick(
+                lambda p, t, c: self.arch.decode_chunk(p, t, c, self.spec))
         self._prefix_cache = None
         if (scfg.prefix_cache and self._pool.has_paged and not self._pool.state
                 and self.arch.prefill_from is not None):
@@ -254,7 +298,8 @@ class ServeEngine:
 
             sig = (f"{self.cfg.name}/kv{self.spec.kv_bits}/"
                    f"{jnp.dtype(self.dtype).name}/T{scfg.block_tokens}")
-            self._prefix_cache = PrefixCache(self._pool, sig=sig)
+            self._prefix_cache = PrefixCache(self._pool, sig=sig,
+                                             capacity=scfg.max_cached_blocks)
         self._sched = ContinuousScheduler(self)
 
     def _place_pool(self):
@@ -284,6 +329,36 @@ class ServeEngine:
             tokens, lengths, tables)
         with self._mesh_ctx():
             return self._pool_step_fn(self.params, tokens, lengths, tables)
+
+    @property
+    def spec_margin(self) -> int:
+        """Extra cache positions one scheduler step may write past the
+        classic one-token worst case: the spec-decode verify chunk writes
+        positions ``[n, n + draft_k]``, so admission reserves ``draft_k``
+        more (the scheduler folds this into its worst-case bound)."""
+        return int(self.scfg.draft_k) if self.scfg.spec_decode else 0
+
+    def run_spec_window(self, tokens, lengths, tables):
+        """One draft-k/verify-1 speculative window over the pool
+        (scheduler hook for ``spec_decode``).  Drafts ``draft_k`` greedy
+        tokens per slot with the draft weights, verifies the chunk with
+        the target weights from the *original* lengths (overwriting draft
+        KV with target KV in place), and returns ``(drafted (S, k),
+        target (S, k+1))`` for the host-side accept/rewind.  Pool storage
+        is updated in place; host ``pool.lengths`` are never advanced by
+        the window itself."""
+        from repro.serve import specdecode
+
+        if self._spec_jit is None:
+            self._spec_jit = specdecode.build_spec_window(self)
+        pool = self.pool
+        inputs = self._place_step_inputs(tokens, lengths, tables)
+        with self._mesh_ctx():
+            drafted, target, paged, state = self._spec_jit(
+                self.params, self.draft_params, *inputs, pool.paged,
+                pool.state)
+        pool.paged, pool.state = paged, state
+        return drafted, target
 
     # ------------------------------------------------------------------
     # On-device sampling + the in-graph multi-step decode window

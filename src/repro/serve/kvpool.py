@@ -363,6 +363,21 @@ class KVPool:
     def advance(self, slot: int) -> None:
         self.lengths[slot] += 1
 
+    def rewind(self, slot: int, n_tokens: int) -> None:
+        """Truncate ``slot`` back to ``n_tokens`` stored positions — the
+        speculative-decoding rollback.  Free on block-paged storage:
+        rejected draft/verify positions simply fall outside the length
+        mask, stay inside the slot's reservation (over-allocation is
+        legal — see :meth:`check_invariants`), and the next write
+        overwrites them in place, so no block ever moves and the block
+        table is untouched."""
+        assert 0 <= n_tokens <= int(self.lengths[slot]), \
+            f"rewind extends slot {slot}: {n_tokens} > {int(self.lengths[slot])}"
+        if self.has_paged and n_tokens:
+            assert len(self.slot_blocks[slot]) * self.block_tokens >= n_tokens, \
+                f"rewind target past slot {slot}'s allocation"
+        self.lengths[slot] = n_tokens
+
     def release(self, slot: int) -> None:
         """Decrement refcounts on the slot's blocks; reclaim only blocks
         that hit zero references *and* are not retained by the prefix

@@ -79,11 +79,18 @@ class PrefixCache:
     device storage is untouched except through ``pool.reclaim``.
     """
 
-    def __init__(self, pool: KVPool, sig: str = ""):
+    def __init__(self, pool: KVPool, sig: str = "",
+                 capacity: Optional[int] = None):
         assert pool.has_paged, "prefix sharing needs a paged cache"
+        assert capacity is None or capacity >= 0, capacity
         self.pool = pool
         self.t = pool.block_tokens
         self.sig = sig.encode()
+        # max indexed blocks retained (ServeConfig.max_cached_blocks);
+        # enforced at insert time against *idle* entries only — blocks
+        # still referenced by live slots are never evicted, so the index
+        # may transiently exceed the cap while sharers are active
+        self.capacity = capacity
         self.nodes: Dict[bytes, _Node] = {}
         self._blocks: Dict[int, _Node] = {}
         self._pinned: Dict[int, int] = {}  # block id -> pin count
@@ -93,6 +100,7 @@ class PrefixCache:
         self.hits = 0
         self.inserts = 0
         self.evictions = 0
+        self.evictions_capacity = 0
         pool.prefix = self
 
     # ------------------------------------------------------------------
@@ -169,6 +177,23 @@ class PrefixCache:
                 self.inserts += 1
             self._touch(node)
             parent = node
+        self._enforce_capacity()
+
+    def _enforce_capacity(self) -> None:
+        """Evict idle LRU leaves until the index fits ``capacity`` (the
+        ``ServeConfig.max_cached_blocks`` knob).  Entries referenced by
+        live slots (or pinned mid-admission) are not evictable; if only
+        those remain the index stays over the cap until they idle."""
+        if self.capacity is None:
+            return
+        while len(self._blocks) > self.capacity:
+            leaves = self._evictable_leaves()
+            if not leaves:
+                break
+            victim = min(leaves, key=lambda nd: (nd.stamp, nd.block))
+            self._drop(victim)
+            self.pool.reclaim([victim.block])
+            self.evictions_capacity += 1
 
     # ------------------------------------------------------------------
     # Pool protocol (duck-typed hook: see KVPool.prefix)
@@ -240,5 +265,6 @@ class PrefixCache:
             "hits": self.hits,
             "inserts": self.inserts,
             "evictions": self.evictions,
+            "evictions_capacity": self.evictions_capacity,
             "cached_blocks": len(self._blocks),
         }

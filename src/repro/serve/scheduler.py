@@ -113,6 +113,10 @@ class ContinuousScheduler:
         self.prefill_tokens_saved = 0  # prompt positions served from cache
         self.blocks_shared = 0  # cached blocks mapped into slot tables
         self.cow_copies = 0  # copy-on-write blocks (fully-cached prompts)
+        # speculative decoding (all zero when spec_decode is off)
+        self.spec_windows = 0  # draft-k/verify-1 windows run
+        self.spec_draft_tokens = 0  # draft tokens proposed (k per slot-window)
+        self.spec_accepted_tokens = 0  # draft tokens the target confirmed
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
 
@@ -128,6 +132,9 @@ class ContinuousScheduler:
         self.prefill_tokens_saved = 0
         self.blocks_shared = 0
         self.cow_copies = 0
+        self.spec_windows = 0
+        self.spec_draft_tokens = 0
+        self.spec_accepted_tokens = 0
         self.done = []
         self._t_first = None
         self._t_last = None
@@ -156,7 +163,11 @@ class ContinuousScheduler:
         if cfg.modality == "vlm" and req.patch_embeds is not None:
             s_total += req.patch_embeds.shape[0]
         req.prompt_tokens = s_total
-        worst = s_total + max(0, req.max_new_tokens - 1)
+        # spec_margin: a spec-decode window writes up to draft_k positions
+        # past the pending token before the host accepts/rewinds, so the
+        # worst-case reservation covers the overshoot (0 when disabled)
+        worst = (s_total + max(0, req.max_new_tokens - 1)
+                 + getattr(self.engine, "spec_margin", 0))
         if worst > self.pool.view_tokens:
             raise ValueError(
                 f"request needs up to {worst} cache positions; pool view "
@@ -218,7 +229,8 @@ class ContinuousScheduler:
             except ValueError:
                 break  # no free slot
             req = self.queue[0]
-            worst = req.prompt_tokens + max(0, req.max_new_tokens - 1)
+            worst = (req.prompt_tokens + max(0, req.max_new_tokens - 1)
+                     + getattr(self.engine, "spec_margin", 0))
             # longest cached full-block prefix (token-modal requests only:
             # a vlm patch-embed prefix is not keyable by token ids)
             hit = None
@@ -285,6 +297,9 @@ class ContinuousScheduler:
         active = [s for s, r in enumerate(self.slot_req) if r is not None]
         if not active:
             return admitted > 0
+        if getattr(self.engine.scfg, "spec_decode", False):
+            self._step_spec(active)
+            return True
         w = int(getattr(self.engine.scfg, "steps_per_sync", 1))
         if w > 1:
             self._step_window(active, w)
@@ -353,6 +368,52 @@ class ContinuousScheduler:
                     self.busy_slot_steps += 1
                     self._emit(s, self.slot_req[s], tok_buf[i, s])
 
+    def _step_spec(self, active: List[int]) -> None:
+        """One draft-k/verify-1 speculative window (``spec_decode``).
+
+        The engine drafts ``k`` greedy tokens per slot with the draft
+        weights and verifies the (k+1)-token chunk with the target
+        weights in one batched call (``engine.run_spec_window``); the
+        host then, per slot, accepts the longest draft prefix matching
+        the target chain plus the target's correction token (a bonus
+        token when all k match), rewinds the pool to the pre-window fill
+        and re-advances over the verified chunk.  Every emitted token is
+        a *target* argmax, so greedy output is token-identical to the
+        non-spec path — draft quality only moves the acceptance rate."""
+        pool = self.pool
+        k = int(self.engine.scfg.draft_k)
+        tokens = self._token_buf()
+        for s in active:
+            tokens[s] = self.slot_next[s]
+            # the window writes positions [n0, n0 + k] (draft appends +
+            # the verify chunk); all inside the spec_margin reservation
+            pool.ensure_until(s, int(pool.lengths[s]) + k)
+        n0 = pool.lengths.copy()
+        drafted, target = self.engine.run_spec_window(
+            tokens, pool.lengths, pool.tables)
+        drafted, target = np.asarray(drafted), np.asarray(target)
+        self.host_syncs += 1
+        self.decode_steps += 1  # one target verify step per window
+        self.spec_windows += 1
+        self.busy_slot_steps += len(active)
+        for s in active:
+            req = self.slot_req[s]
+            g, t = drafted[s], target[s]
+            acc = 0
+            while acc < k and g[acc] == t[acc]:
+                acc += 1
+            self.spec_draft_tokens += k
+            self.spec_accepted_tokens += acc
+            # rollback: truncate draft-appended K/V to the pre-window fill
+            # (free on paged storage — the verify pass already overwrote
+            # positions [n0, n0+k] with target KV, and re-advancing below
+            # exposes exactly the accepted ones)
+            pool.rewind(s, int(n0[s]))
+            for tok in t[:acc + 1]:  # accepted run + correction/bonus
+                pool.advance(s)
+                if self._emit(s, req, np.int32(tok)):
+                    break  # stop token / max_new mid-window: drop the rest
+
     def drain(self, max_steps: Optional[int] = None) -> List[Request]:
         steps = 0
         while self.queue or self.n_active:
@@ -403,6 +464,14 @@ class ContinuousScheduler:
                 else None),
             "blocks_shared": self.blocks_shared,
             "cow_copies": self.cow_copies,
+            # speculative decoding (decode_steps counts *verify* steps
+            # when spec_decode is on — one per window)
+            "spec_windows": self.spec_windows,
+            "spec_draft_tokens": self.spec_draft_tokens,
+            "spec_accepted_tokens": self.spec_accepted_tokens,
+            "spec_acceptance_rate": (
+                self.spec_accepted_tokens / self.spec_draft_tokens
+                if self.spec_draft_tokens else None),
         }
         pc = getattr(self.engine, "prefix_cache", None)
         agg["prefix_cache"] = pc.stats() if pc is not None else None
@@ -519,6 +588,12 @@ def run_continuous_trace(engine, *, n_requests: int = 8, prompt_len: int = 12,
                   f"{a['blocks_shared']} blocks shared, "
                   f"{a['cow_copies']} cow copies, "
                   f"{a['prefix_cache']['evictions']} evictions")
+        if a["spec_windows"]:
+            print(f"[continuous] spec decode: acceptance "
+                  f"{fmt(a['spec_acceptance_rate'])} "
+                  f"({a['spec_accepted_tokens']}/{a['spec_draft_tokens']} "
+                  f"draft tokens), {a['decode_steps']} verify steps over "
+                  f"{a['spec_windows']} windows")
     return m
 
 

@@ -1,0 +1,309 @@
+"""Self-drafted speculative decoding over the block-paged pool.
+
+The paper's premise — harsher quantization stays usable when the rotation
+is right — means a packed artifact already *contains* its own draft
+model: re-quantize the same packed weights under a one-rule harsher
+:class:`~repro.quant.policy.QuantPolicy` overlay (``draft-w2-rtn``) and
+the draft shares rotations (already fused into the weights), activation
+rules, the KV cache codec, and therefore the *block tables* with the
+target.  No second checkpoint, no calibration, no separate pool.
+
+This module provides the two halves:
+
+* **artifact side** — :func:`derive_draft_params` walks an artifact tree
+  and re-quantizes every :class:`~repro.quant.packed.PackedWeight` leaf
+  under the draft overlay (float leaves are shared by reference), with
+  construction-time validation (:func:`validate_draft_policy`) that the
+  overlay is layer-uniform, calibration-free, and strictly cheaper, and
+  never touches rotation/activation rules that would desync the shared
+  cache layout.  :func:`combined_policy` prepends the overlay's weight
+  rules to the target policy so a saved draft artifact round-trips
+  through ``save``/``load`` with the *identical* serving spec;
+* **serving side** — :func:`build_spec_window` jits the draft-k/verify-1
+  window: k ordinary decode ticks with the draft weights (fused paged
+  kernel or the vmapped baseline — whichever the engine built), feeding
+  each greedy token back in, then one (k+1)-token chunked verify pass
+  with the target weights *from the original lengths*, overwriting the
+  draft KV with target KV in place.  The host-side accept/rollback lives
+  in :meth:`ContinuousScheduler._step_spec`; the only new pool operation
+  is :meth:`KVPool.rewind`, which truncates draft-appended K/V back to
+  the accepted fill (free on block-paged storage: rejected positions
+  simply fall outside the length mask).
+
+Greedy spec-decode output is token-identical to greedy non-spec output
+by construction: every emitted token is a *target* argmax — accepted
+draft tokens are exactly those the target chain would have produced, and
+the first mismatch is replaced by the target's own correction token.
+The draft quality only moves the acceptance rate (throughput), never the
+text.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.packed import PackedWeight, is_packed
+from repro.quant.policy import QuantPolicy, _err
+
+__all__ = [
+    "packed_sites",
+    "validate_draft_policy",
+    "derive_draft_params",
+    "combined_policy",
+    "validate_spec_config",
+    "build_spec_window",
+]
+
+
+# ----------------------------------------------------------------------
+# Artifact side: deriving the draft
+# ----------------------------------------------------------------------
+
+def packed_sites(params: Dict) -> List[Tuple[str, PackedWeight]]:
+    """``(site, leaf)`` for every packed weight in an artifact tree.
+
+    Sites are named the way :func:`~repro.quant.policy.resolve_policy`
+    names them — path components joined by ``/`` with the ``layers``
+    level dropped (``"w_down"``, ``"moe_mlp/w_down"``) — so draft rules
+    written against the usual patterns match.  We walk the tree directly
+    rather than via ``enumerate_sites`` because that helper looks for
+    float ``ndim >= 2`` leaves and is blind to packed ones.
+    """
+    out: List[Tuple[str, PackedWeight]] = []
+
+    def walk(node, path):
+        if is_packed(node):
+            out.append(("/".join(p for p in path if p != "layers"), node))
+            return
+        if isinstance(node, dict):
+            for name in sorted(node):
+                walk(node[name], path + (name,))
+
+    walk(params, ())
+    return out
+
+
+def validate_draft_policy(draft: QuantPolicy) -> None:
+    """Construction-time checks on a draft overlay policy.
+
+    The draft must share the target's rotations, activation rules and KV
+    cache codec (that is the whole point: same pool, same block tables,
+    one serving spec), so an overlay rule may only change the *weight*
+    quantizer — layer-uniformly and without calibration.  Raises
+    :class:`ValueError` with an actionable hint, mirroring the
+    ``SiteRule`` validation style.
+    """
+    if not draft.rules:
+        raise _err("draft policy has no rules",
+                   hint="an overlay needs at least one weight rule, "
+                        "e.g. SiteRule(pattern='*', bits=2, group=128, "
+                        "method='rtn') — or use the 'draft-w2-rtn' preset")
+    for r in draft.rules:
+        where = f"draft rule {r.pattern!r}"
+        if r.layers is not None:
+            raise _err(
+                f"{where} is layer-restricted (layers={r.layers!r})",
+                hint="a draft overlay must be layer-uniform: the draft "
+                     "reuses the target's scanned layer body, so every "
+                     "layer of a site re-quantizes under one rule")
+        if r.rotation is not None:
+            raise _err(
+                f"{where} overrides the online rotation "
+                f"({r.rotation!r})",
+                hint="rotations are shared with the target artifact — "
+                     "they are already fused into the packed weights the "
+                     "draft re-quantizes; drop the rotation field")
+        if r.has_act_override:
+            raise _err(
+                f"{where} overrides activation quantization",
+                hint="activation rules are shared with the target: the "
+                     "draft runs through the same QuantizeSpec so the KV "
+                     "cache layout (and block tables) stay identical; "
+                     "drop act_bits/act_group/act_clip")
+        if r.method != "rtn":
+            raise _err(
+                f"{where} uses method {r.method!r}",
+                hint="derive_draft re-quantizes packed weights without "
+                     "calibration data; only 'rtn' is available")
+        if r.bits >= 16:
+            raise _err(
+                f"{where} keeps weights in float (bits={r.bits})",
+                hint="a draft must be strictly cheaper than the target; "
+                     "pick bits < 16, e.g. the 'draft-w2-rtn' preset")
+
+
+def derive_draft_params(params: Dict, draft: QuantPolicy) -> Dict:
+    """Re-quantize every packed leaf of ``params`` under ``draft``.
+
+    Float leaves (norms, embeddings, rotations, any site the target left
+    unquantized) are shared by reference — the draft tree costs only its
+    packed codes.  Validates full coverage and strict cheapness against
+    the *actual* leaves, raising actionable errors.
+    """
+    sites = packed_sites(params)
+    if not sites:
+        raise _err(
+            "artifact has no packed weights to derive a draft from",
+            hint="derive_draft needs a quantized artifact "
+                 "(api.quantize / api.load_quantized), not a float "
+                 "param tree")
+    plan: Dict[str, object] = {}
+    cheaper = 0
+    for site, leaf in sites:
+        rule = draft.rule_for(site)
+        if rule is None:
+            raise _err(
+                f"draft policy leaves packed site {site!r} uncovered",
+                hint="every quantized site of the target must "
+                     "re-quantize under the overlay; add a trailing "
+                     "SiteRule(pattern='*') default")
+        if rule.bits > leaf.bits:
+            raise _err(
+                f"draft rule {rule.pattern!r} puts {site!r} at "
+                f"{rule.bits} bits, above the target's {leaf.bits}",
+                hint="a draft must be at most the target's width at "
+                     "every site (and strictly below somewhere); lower "
+                     "the rule's bits or drop spec decode for this "
+                     "artifact")
+        plan[site] = rule
+        if rule.bits < leaf.bits:
+            cheaper += 1
+    if not cheaper:
+        raise _err(
+            "draft policy is not strictly cheaper than the target "
+            "(no site drops below its target width)",
+            hint="self-drafting only pays when the draft is harsher; "
+                 "lower bits on at least one site, e.g. 'draft-w2-rtn' "
+                 "against a W4 target")
+
+    def walk(node, path=()):
+        if is_packed(node):
+            site = "/".join(p for p in path if p != "layers")
+            rule = plan[site]
+            if rule.bits == node.bits and rule.group == node.group:
+                return node  # same grid family: share the packed leaf
+            return PackedWeight.from_float(
+                node.dequantize(), rule.weight_cfg(node.c),
+                backend=node.backend)
+        if isinstance(node, dict):
+            return {name: walk(v, path + (name,)) for name, v in
+                    node.items()}
+        return node  # float leaf: shared by reference
+
+    return walk(params)
+
+
+def combined_policy(target: QuantPolicy, draft: QuantPolicy) -> QuantPolicy:
+    """The draft artifact's policy: overlay weight rules, target globals.
+
+    Overlay rules are *prepended* — weight resolution is first-match-wins
+    so they claim every site — while rotation plan and act/kv/calib
+    globals copy from the target.  Because the overlay carries no
+    rotation/act overrides (validated), ``combined.spec()`` lowers to
+    exactly the target's spec: a saved draft artifact reloads with the
+    shared cache layout, which is the save/load round-trip invariant
+    spec decode depends on.
+    """
+    import dataclasses
+
+    combined = dataclasses.replace(
+        target,
+        rules=tuple(draft.rules) + tuple(target.rules),
+        name=f"{draft.name or 'draft'}@{target.name or 'target'}",
+    )
+    assert combined.spec() == target.spec(), \
+        "draft overlay changed the serving spec (validation bug)"
+    return combined
+
+
+# ----------------------------------------------------------------------
+# Serving side: the in-graph draft/verify window
+# ----------------------------------------------------------------------
+
+def validate_spec_config(engine) -> None:
+    """Gate ``ServeConfig(spec_decode=True)`` at engine-build time.
+
+    Raises :class:`ValueError` with an actionable hint for every
+    unsupported combination rather than producing wrong tokens later.
+    """
+    scfg = engine.scfg
+    if engine.draft_params is None:
+        raise _err(
+            "spec_decode=True but the engine has no draft weights",
+            hint="derive one from the same artifact and pass it in: "
+                 "draft = api.derive_draft(qm); "
+                 "qm.serve(scfg, draft=draft)")
+    if engine.cfg.modality == "audio":
+        raise _err(
+            f"spec_decode is undefined for audio ({engine.cfg.name}): "
+            "codebook-grouped tokens have no scalar greedy chain",
+            hint="serve audio models with spec_decode=False")
+    if getattr(engine.arch, "decode_chunk", None) is None:
+        raise _err(
+            f"{engine.cfg.name} has no multi-token verify path",
+            hint="spec decode needs Arch.decode_chunk (transformer "
+                 "families); recurrent-state families cannot rewind a "
+                 "draft window")
+    pool = engine._pool
+    if not pool.has_paged or pool.state:
+        raise _err(
+            f"{engine.cfg.name} cache is not fully block-paged",
+            hint="draft rollback rewinds per-slot lengths over paged "
+                 "KV; per-slot recurrent state cannot be rewound")
+    if scfg.temperature > 0:
+        raise _err(
+            "spec_decode requires greedy sampling (temperature=0)",
+            hint="acceptance compares draft and target argmax chains; "
+                 "sampled verification is not implemented")
+    if scfg.steps_per_sync != 1:
+        raise _err(
+            f"spec_decode composes with steps_per_sync=1 only "
+            f"(got {scfg.steps_per_sync})",
+            hint="the spec window is itself the multi-token device "
+                 "batch: draft_k draft ticks + one verify per host sync")
+    if scfg.draft_k < 1:
+        raise _err(f"draft_k must be >= 1, got {scfg.draft_k}")
+
+
+def build_spec_window(engine):
+    """Jit the in-graph draft-k/verify-1 window for ``engine``.
+
+    Returns ``window(params, draft_params, tokens, lengths, tables,
+    paged, state) -> (drafted (S, k), target (S, k+1), paged, state)``.
+
+    The k draft ticks run the engine's ordinary decode tick (fused paged
+    kernel or vmapped baseline) with the *draft* weights, feeding each
+    argmax back in; they append draft KV at positions ``[n, n+k)``.  The
+    verify pass then pushes the (k+1)-token chunk ``[t0, g1..gk]``
+    through the target weights *from the original lengths*, overwriting
+    every draft-written position with target KV — the per-token cache
+    codec (:func:`~repro.models.common.kv_quant_tokens`) makes the chunk
+    write bitwise identical to k+1 sequential decode writes, so accepted
+    positions hold exactly what non-spec decode would have stored.
+    ``target[s, j]`` is the target's greedy token after consuming the
+    chunk prefix ``[t0, g1..gj]``; the host accepts the longest matching
+    run plus the correction (or bonus) token.
+    """
+    k = int(engine.scfg.draft_k)
+    tick = engine._tick_fn
+    verify = engine._verify_tick
+    assert verify is not None, "engine built without a verify tick"
+
+    def window(params, draft_params, tokens, lengths, tables, paged, state):
+        toks, fill = tokens, lengths
+        drafted = []
+        for _ in range(k):  # static unroll: k is small
+            logits, paged, state, fill = tick(
+                draft_params, toks, fill, tables, paged, state)
+            toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            drafted.append(toks)
+        drafted = jnp.stack(drafted, axis=1)                   # (S, k)
+        chunk = jnp.concatenate([tokens[:, None], drafted], axis=1)
+        vlogits, paged, state, _ = verify(
+            params, chunk, lengths, tables, paged, state)
+        target = jnp.argmax(vlogits, axis=-1).astype(jnp.int32)  # (S, k+1)
+        return drafted, target, paged, state
+
+    return jax.jit(window, donate_argnums=(5, 6))

@@ -245,6 +245,41 @@ def test_eviction_is_lru_leaf_first(models):
     eng.pool.check_leaks()
 
 
+def test_capacity_knob_caps_resident_index(models):
+    """``ServeConfig(max_cached_blocks=N)`` bounds the index at insert
+    time: idle LRU leaves beyond the cap are evicted (counted under
+    ``evictions_capacity``, separate from pressure evictions), and the
+    capped run stays token-identical to the uncapped one."""
+    arch, params = models["dense"]
+    mk = lambda: synthetic_trace(arch.config, 6, seed=5, prompt_len=6,
+                                 max_new_low=2, max_new_high=4,
+                                 shared_prefix_tokens=16, n_prefix_groups=3)
+
+    def run(cap):
+        eng = ServeEngine(arch, params, ServeConfig(
+            max_seq=96, batch_slots=1, block_tokens=8, prefix_cache=True,
+            max_cached_blocks=cap), dtype=jnp.float32)
+        reqs = [eng.scheduler.submit(r) for r in mk()]
+        eng.drain()
+        return eng, [r.token_array() for r in reqs]
+
+    eng_u, toks_u = run(None)
+    eng_c, toks_c = run(2)
+    for a, b in zip(toks_u, toks_c):
+        np.testing.assert_array_equal(a, b)
+    st = eng_c.prefix_cache.stats()
+    assert st["evictions_capacity"] > 0
+    assert st["evictions"] == 0  # no pool pressure in this trace
+    assert st["cached_blocks"] <= 2
+    assert eng_u.prefix_cache.stats()["cached_blocks"] > 2  # uncapped kept all
+    assert eng_u.prefix_cache.stats()["evictions_capacity"] == 0
+    # the counter rides the scheduler aggregate
+    agg = eng_c.scheduler.metrics()["aggregate"]
+    assert agg["prefix_cache"]["evictions_capacity"] == \
+        st["evictions_capacity"]
+    eng_c.pool.check_invariants()
+
+
 # ---------------------------------------------------------------------------
 # Metrics, trace knobs, gating
 # ---------------------------------------------------------------------------

@@ -1,0 +1,278 @@
+"""Self-drafted speculative decoding tests: derive_draft + draft-k/verify-1.
+
+The acceptance contract of the spec-decode subsystem
+(:mod:`repro.serve.specdecode`):
+
+  * greedy spec decode is *token-identical* to greedy non-spec decode
+    (and hence to ``generate_static``) across the paged attention-cache
+    families (dense / MoE / MLA), float and quantized KV, for every
+    draft depth k — the draft quality moves the acceptance rate, never
+    the text;
+  * a stop token landing mid-window ends the request there: later
+    accepted tokens are discarded, the rollback rewinds the pool, and no
+    block leaks;
+  * the pool passes its invariant + leak checks after every scheduler
+    step of a trace with real rejections (rewind is exercised, not just
+    full acceptance);
+  * ``api.derive_draft`` validates the overlay at construction time —
+    weight-only, layer-uniform, calibration-free, strictly cheaper —
+    with actionable errors, and the derived draft saves/loads as a
+    normal artifact with the *identical* serving spec;
+  * ``qm.serve(draft=...)`` rejects drafts whose config or cache codec
+    differ from the target's (one pool, one codec).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import api
+from repro.models.registry import get_arch
+from repro.quant.policy import (QuantPolicy, RotationPlan, RotationSpec,
+                                SiteRule)
+from repro.serve import specdecode
+from repro.serve.scheduler import synthetic_trace
+
+PAGED_FAMILY_ARCHS = {
+    "dense": "smollm-135m",
+    "moe": "deepseek-moe-16b",
+    "mla": "minicpm3-4b",
+}
+PAGED_FAMILIES = sorted(PAGED_FAMILY_ARCHS)
+
+DRAFT = "draft-w3-rtn"  # decent acceptance on reduced random models
+
+
+def _w4_policy(kv_bits=16):
+    """W4 RTN GSR target — roomy enough for a w2/w3 draft underneath.
+
+    (The paper-table1 preset is already W2, which a draft cannot
+    undercut — derive_draft rejects it by design.)"""
+    return QuantPolicy(
+        name=f"w4-rtn-kv{kv_bits}",
+        rules=(SiteRule(pattern="*", bits=4, group=32, method="rtn"),),
+        rotation=RotationPlan(r1=RotationSpec(kind="GSR", group=32)),
+        act_bits=16, kv_bits=kv_bits,
+    )
+
+
+@pytest.fixture(scope="module")
+def quantized():
+    """{(family, kv_bits): QuantizedModel} at reduced scale, W4 target."""
+    out = {}
+    for family, name in PAGED_FAMILY_ARCHS.items():
+        arch = get_arch(name, reduced=True)
+        params = arch.init(jax.random.PRNGKey(0), jnp.float32)
+        for kv in (16, 4):
+            out[family, kv] = api.quantize(arch, params, _w4_policy(kv))
+    return out
+
+
+def _prompts(cfg, b, s, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab, size=(b, s)).astype(np.int32)
+
+
+def _spec_engine(qm, k, *, slots=2, max_seq=48):
+    draft = api.derive_draft(qm, DRAFT)
+    return qm.serve(api.ServeConfig(max_seq=max_seq, batch_slots=slots,
+                                    block_tokens=8, spec_decode=True,
+                                    draft_k=k),
+                    draft=draft)
+
+
+# ---------------------------------------------------------------------------
+# Token identity: spec decode == static greedy, families x KV x k
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", PAGED_FAMILIES)
+@pytest.mark.parametrize("kv_bits", [16, 4])
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_spec_token_identical_to_static(quantized, family, kv_bits, k):
+    """3 requests through 2 slots with draft-k/verify-1 produce exactly
+    the static fixed-batch greedy tokens; the drained pool is pristine."""
+    qm = quantized[family, kv_bits]
+    prompts = _prompts(qm.config, 3, 8)
+    out_s = qm.serve(api.ServeConfig(max_seq=48, batch_slots=3)
+                     ).generate_static(prompts, 6)
+    eng = _spec_engine(qm, k)
+    out_c = eng.generate(prompts, 6)
+    np.testing.assert_array_equal(out_s["tokens"], out_c["tokens"])
+    agg = eng.scheduler.metrics()["aggregate"]
+    assert agg["spec_windows"] == agg["decode_steps"] > 0
+    assert agg["spec_draft_tokens"] == agg["busy_slot_steps"] * k
+    assert 0 <= agg["spec_accepted_tokens"] <= agg["spec_draft_tokens"]
+    eng.pool.check_invariants()
+    assert not any(eng.pool.slot_blocks[s] for s in range(2))
+
+
+def test_spec_fewer_verify_steps_than_baseline(quantized):
+    """The point of the exercise: the same trace finishes in fewer
+    target-model invocations than one-token-per-step decode."""
+    qm = quantized["dense", 16]
+    prompts = _prompts(qm.config, 4, 8, seed=1)
+    base = qm.serve(api.ServeConfig(max_seq=48, batch_slots=2,
+                                    block_tokens=8))
+    out_b = base.generate(prompts, 12)
+    eng = _spec_engine(qm, 4)
+    out_c = eng.generate(prompts, 12)
+    np.testing.assert_array_equal(out_b["tokens"], out_c["tokens"])
+    steps_b = base.scheduler.metrics()["aggregate"]["decode_steps"]
+    steps_c = eng.scheduler.metrics()["aggregate"]["decode_steps"]
+    assert steps_c < steps_b, (steps_c, steps_b)
+
+
+# ---------------------------------------------------------------------------
+# Rollback: stop tokens mid-window, rejection rewind invariants
+# ---------------------------------------------------------------------------
+
+
+def test_stop_token_mid_window_ends_request(quantized):
+    """A stop token accepted mid-window terminates the request at that
+    token — the rest of the accepted run is dropped, matching what the
+    sequential scheduler would have emitted."""
+    qm = quantized["dense", 16]
+    prompt = _prompts(qm.config, 1, 8, seed=2)[0]
+    ref_eng = qm.serve(api.ServeConfig(max_seq=48, batch_slots=1,
+                                       block_tokens=8))
+    ref = ref_eng.submit(prompt, 8)
+    ref_eng.drain()
+    for pos in (1, 2):  # stop on the 2nd / 3rd greedy token
+        stop = int(ref.token_array()[pos])
+        eng = _spec_engine(qm, 4, slots=1)
+        r = eng.submit(prompt, 8, stop_token=stop)
+        eng.drain()
+        assert len(r.tokens) == pos + 1
+        assert int(r.token_array()[-1]) == stop
+        np.testing.assert_array_equal(r.token_array(),
+                                      ref.token_array()[:pos + 1])
+        eng.pool.check_invariants()
+        assert not any(eng.pool.slot_blocks)
+
+
+@pytest.mark.parametrize("kv_bits", [16, 4])
+def test_pool_invariants_after_rejection_rewind(quantized, kv_bits):
+    """Mixed-length trace with real draft rejections: after every spec
+    window no block is leaked or double-assigned, and the drained pool's
+    free list is whole."""
+    qm = quantized["dense", kv_bits]
+    eng = _spec_engine(qm, 4, slots=2, max_seq=48)
+    trace = synthetic_trace(qm.config, 6, seed=3, prompt_len=6,
+                            prompt_jitter=4, max_new_low=2, max_new_high=10)
+    for r in trace:
+        eng.scheduler.submit(r)
+        eng.pool.check_invariants()
+    while eng.scheduler.queue or eng.scheduler.n_active:
+        eng.step()
+        eng.pool.check_invariants()
+    assert all(len(r.tokens) == r.max_new_tokens for r in trace)
+    agg = eng.scheduler.metrics()["aggregate"]
+    assert agg["spec_accepted_tokens"] < agg["spec_draft_tokens"], \
+        "trace never exercised a rejection rewind"
+    assert len(eng.pool.free) == eng.pool.capacity_blocks
+    assert not any(eng.pool.slot_blocks)
+
+
+# ---------------------------------------------------------------------------
+# Artifact side: derive_draft validation + save/load round trip
+# ---------------------------------------------------------------------------
+
+
+def test_derive_draft_shares_spec_and_float_leaves(quantized):
+    qm = quantized["dense", 4]
+    draft = api.derive_draft(qm, DRAFT)
+    assert draft.spec == qm.spec  # one cache codec, one pool
+    assert draft.config == qm.config
+    # w2 codes pack below the W4 target's (w3 rides an int8 lane at this
+    # scale, so bits-in-tree is the invariant, bytes only for w2)
+    assert (api.derive_draft(qm, "draft-w2-rtn").packed_bytes()
+            < qm.packed_bytes())
+    # every packed leaf got strictly cheaper; float leaves are the same
+    # objects (shared by reference, no copy)
+    tgt = dict(specdecode.packed_sites(qm.params))
+    for site, leaf in specdecode.packed_sites(draft.params):
+        assert leaf.bits == 3 and tgt[site].bits == 4, site
+    assert draft.params["embed"] is qm.params["embed"]
+
+
+def test_draft_artifact_save_load_round_trip(quantized, tmp_path):
+    """A derived draft is a normal artifact: it saves, reloads with the
+    identical serving spec, and serves the same spec-decoded tokens."""
+    qm = quantized["dense", 16]
+    draft = api.derive_draft(qm, DRAFT)
+    draft.save(str(tmp_path / "draft"))
+    draft2 = api.load_quantized(str(tmp_path / "draft"))
+    assert draft2.spec == draft.spec == qm.spec
+    assert draft2.policy.describe() == draft.policy.describe()
+    prompts = _prompts(qm.config, 2, 8, seed=4)
+    scfg = api.ServeConfig(max_seq=48, batch_slots=2, block_tokens=8,
+                           spec_decode=True, draft_k=2)
+    out1 = qm.serve(scfg, draft=draft).generate(prompts, 5)
+    out2 = qm.serve(scfg, draft=draft2).generate(prompts, 5)
+    np.testing.assert_array_equal(out1["tokens"], out2["tokens"])
+
+
+def test_derive_draft_validation_errors(quantized):
+    qm = quantized["dense", 16]
+    with pytest.raises(ValueError, match="at least one SiteRule"):
+        api.derive_draft(qm, QuantPolicy(name="empty", rules=()))
+
+    def overlay(**kw):
+        return QuantPolicy(name="bad", rules=(
+            SiteRule(pattern="*", bits=2, group=32, method="rtn", **kw),))
+
+    with pytest.raises(ValueError, match="layer-restricted"):
+        api.derive_draft(qm, overlay(layers=(0, 1)))
+    with pytest.raises(ValueError, match="online rotation"):
+        api.derive_draft(qm, overlay(rotation="GSR"))
+    with pytest.raises(ValueError, match="activation quantization"):
+        api.derive_draft(qm, overlay(act_bits=8))
+    with pytest.raises(ValueError, match="method 'gptq'"):
+        api.derive_draft(qm, QuantPolicy(name="bad", rules=(
+            SiteRule(pattern="*", bits=2, group=32, method="gptq"),)))
+    with pytest.raises(ValueError, match="in float"):
+        api.derive_draft(qm, QuantPolicy(name="bad", rules=(
+            SiteRule(pattern="*", bits=16, group=32, method="rtn"),)))
+    # covers only part of the tree -> uncovered packed site
+    with pytest.raises(ValueError, match="uncovered"):
+        api.derive_draft(qm, QuantPolicy(name="bad", rules=(
+            SiteRule(pattern="*down*", bits=2, group=32, method="rtn"),)))
+    # not strictly cheaper: same width as the W4 target everywhere
+    with pytest.raises(ValueError, match="not strictly cheaper"):
+        api.derive_draft(qm, QuantPolicy(name="bad", rules=(
+            SiteRule(pattern="*", bits=4, group=32, method="rtn"),)))
+    # above the target's width at some site
+    with pytest.raises(ValueError, match="above the target"):
+        api.derive_draft(qm, QuantPolicy(name="bad", rules=(
+            SiteRule(pattern="*", bits=8, group=32, method="rtn"),)))
+
+
+def test_serve_rejects_mismatched_draft(quantized):
+    """One pool needs one cache codec: a draft derived from the KV4
+    artifact cannot serve the float-KV target (and vice versa)."""
+    qm16, qm4 = quantized["dense", 16], quantized["dense", 4]
+    draft4 = api.derive_draft(qm4, DRAFT)
+    scfg = api.ServeConfig(max_seq=48, batch_slots=1, block_tokens=8,
+                           spec_decode=True, draft_k=2)
+    with pytest.raises(ValueError, match="spec differs"):
+        qm16.serve(scfg, draft=draft4)
+    moe = quantized["moe", 16]
+    with pytest.raises(ValueError, match="config differs"):
+        moe.serve(scfg, draft=api.derive_draft(qm16, DRAFT))
+
+
+def test_spec_decode_requires_supported_engine(quantized):
+    """Gating: recurrent-state families and missing drafts fail fast at
+    engine build, not with wrong tokens later."""
+    qm = quantized["dense", 16]
+    scfg = api.ServeConfig(max_seq=48, batch_slots=1, block_tokens=8,
+                           spec_decode=True, draft_k=2)
+    with pytest.raises(ValueError, match="no draft weights"):
+        qm.serve(scfg).scheduler  # spec_decode without a draft
+    arch = get_arch("xlstm-1.3b", reduced=True)
+    params = arch.init(jax.random.PRNGKey(0), jnp.float32)
+    qs = api.quantize(arch, params, _w4_policy())
+    with pytest.raises(ValueError, match="rewind"):
+        qs.serve(scfg, draft=api.derive_draft(qs, DRAFT)).scheduler
