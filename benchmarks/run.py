@@ -2,18 +2,101 @@
 """Benchmark driver: every paper table/figure + framework microbenches.
 
   PYTHONPATH=src python -m benchmarks.run [--fast]
+  PYTHONPATH=src python -m benchmarks.run --snapshot
 
 Order: cheap theory checks first, then kernel microbench, then the
 end-to-end PTQ tables on the trained bench model (slowest).  Each suite
 also writes results/<suite>.json.
+
+``--snapshot`` instead refreshes the curated in-repo trend files —
+``BENCH_serve.json``, ``BENCH_quant.json``, ``BENCH_ppl.json`` — from a
+deterministic fast run, stripping every wall-clock-derived field so the
+committed snapshots diff cleanly across machines.  The quant/ppl
+snapshots are :class:`repro.obs.metrics.MetricsRegistry` JSON exports:
+the same schema the serving engine emits under ``--metrics-out``.
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 
+# wall-clock-derived row fields: machine-dependent, stripped from the
+# committed BENCH_serve.json snapshot (results/serve_bench.json keeps them)
+_VOLATILE = ("wall_s", "tokens_per_s", "mean_ttft_s")
+
+
+def snapshot() -> None:
+    from benchmarks import eval_ppl, quant_error, serve_bench
+    from repro.obs.metrics import MetricsRegistry
+
+    print("# refreshing BENCH_serve.json (serve_bench --fast)")
+    rows = [{k: v for k, v in r.items() if k not in _VOLATILE}
+            for r in serve_bench.run(quiet=True, fast=True)]
+    with open("BENCH_serve.json", "w") as f:
+        json.dump({
+            "_comment": "Curated serve_bench --fast snapshot (reference "
+            "backend): the repo's diffable serving-perf trajectory. "
+            "Refresh: PYTHONPATH=src python -m benchmarks.run --snapshot. "
+            "Wall-clock-derived fields (wall_s, tokens_per_s, mean_ttft_s) "
+            "are stripped; utilisation, decode_steps, host_syncs, "
+            "prefill_tokens_computed/saved, prefix_hit_rate, blocks_shared, "
+            "acceptance_rate, decode_steps_saved, and tokens_sha1 are the "
+            "stable signals (the two prefix rows must share tokens_sha1, "
+            "and the three spec rows likewise - prefix sharing and greedy "
+            "spec decode are both bit-exact).",
+            "arch": serve_bench.ARCH, "slots": serve_bench.SLOTS,
+            "trace_seed": serve_bench.TRACE_SEED, "n_requests": 24,
+            "rows": rows}, f, indent=1)
+
+    print("# refreshing BENCH_quant.json (quant_error)")
+    reg = MetricsRegistry()
+    g = reg.gauge("quant_error_rel_mse",
+                  "relative weight-quantization MSE per rotation kind",
+                  labels=("weights", "bits", "rotation"))
+    for r in quant_error.run(quiet=True):
+        for kind in ("I", "GH", "GW", "LH", "GSR"):
+            g.set(round(r[kind], 6), weights=r["weights"],
+                  bits=str(r["bits"]), rotation=kind)
+    with open("BENCH_quant.json", "w") as f:
+        json.dump({
+            "_comment": "Curated quant_error snapshot as a MetricsRegistry "
+            "JSON export (fixed seeds - fully deterministic). Refresh: "
+            "PYTHONPATH=src python -m benchmarks.run --snapshot. The paper "
+            "orderings must hold per (weights, bits) series: GW<=GH and "
+            "GSR<=LH everywhere (sequency), GSR<=GH and LH<=GH on the "
+            "outlier suite (local confinement, Fig. 2).",
+            "metrics": reg.to_json()}, f, indent=1)
+
+    print("# refreshing BENCH_ppl.json (eval_ppl --fast)")
+    reg = MetricsRegistry()
+    ppl = reg.gauge("eval_ppl", "held-out perplexity on the synthetic "
+                    "stream (trained bench model)", labels=("policy",))
+    top1 = reg.gauge("eval_top1", "top-1 next-token accuracy",
+                     labels=("policy",))
+    mib = reg.gauge("eval_packed_mib", "packed artifact size (MiB)",
+                    labels=("policy",))
+    for r in eval_ppl.run(quiet=True, fast=True):
+        ppl.set(round(r["ppl"], 3), policy=r["policy"])
+        top1.set(round(r["top1"], 4), policy=r["policy"])
+        mib.set(round(r["packed_mib"], 3), policy=r["policy"])
+    with open("BENCH_ppl.json", "w") as f:
+        json.dump({
+            "_comment": "Curated eval_ppl --fast snapshot as a "
+            "MetricsRegistry JSON export (cached bench model at "
+            "results/bench_model.npz; trained deterministically on first "
+            "run). Refresh: PYTHONPATH=src python -m benchmarks.run "
+            "--snapshot. float16 is the quality ceiling; every quantized "
+            "policy should stay within a few percent of it and the GSR "
+            "presets must not regress across PRs.",
+            "metrics": reg.to_json()}, f, indent=1)
+    print("# snapshot done: BENCH_serve.json BENCH_quant.json BENCH_ppl.json")
+
 
 def main() -> None:
+    if "--snapshot" in sys.argv:
+        snapshot()
+        return
     fast = "--fast" in sys.argv
     t0 = time.time()
 
@@ -42,8 +125,13 @@ def main() -> None:
     from benchmarks import serve_bench
 
     for r in serve_bench.run(quiet=True, fast=fast):
-        print(f"serve/{r['name']},0,tok_s={r['tokens_per_s']:.1f};"
-              f"util={r['utilisation']:.3f};steps={r['decode_steps']}")
+        # prefix/spec/obs rows carry their own signal set; print what's there
+        tok_s = r.get("tokens_per_s")
+        util = r.get("utilisation")
+        parts = [f"tok_s={tok_s:.1f}" if tok_s is not None else "tok_s=-",
+                 f"util={util:.3f}" if util is not None else "util=-",
+                 f"steps={r.get('decode_steps', '-')}"]
+        print(f"serve/{r['name']},0,{';'.join(parts)}")
 
     print("# === eval_ppl (policy presets on the trained bench model) ===")
     from benchmarks import eval_ppl

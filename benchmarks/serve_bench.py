@@ -268,6 +268,45 @@ def spec_sweep(qm, backend="reference", n_requests=24, ks=(2, 4),
     return rows
 
 
+def obs_replay(qm, backend="reference", n_requests=8, quiet=False,
+               trace_path="results/serve_trace.json",
+               metrics_path="results/serve_metrics.prom"):
+    """Observability cell: replay a small trace with tracing enabled,
+    validate the Chrome trace (one complete span tree per request), and
+    write the trace + Prometheus metrics next to the bench record so
+    nightly CI uploads them with ``results/``."""
+    from repro.obs.trace import validate_chrome_trace
+
+    eng = qm.serve(api.ServeConfig(max_seq=MAX_SEQ, batch_slots=SLOTS,
+                                   block_tokens=BLOCK_TOKENS,
+                                   obs=api.ObsConfig(enabled=True)),
+                   backend=backend)
+    for r in _trace(qm.config, n_requests):
+        eng.scheduler.submit(r)
+    eng.drain()
+    stats = validate_chrome_trace(eng.obs.tracer.to_chrome())
+    assert stats["requests"] == n_requests, \
+        f"trace has {stats['requests']} request lanes, expected {n_requests}"
+    eng.obs.export_trace(trace_path)
+    eng.obs.export_metrics(metrics_path)
+    agg = eng.scheduler.metrics()["aggregate"]
+    row = {
+        "name": f"{backend}/obs",
+        "trace_events": stats["events"],
+        "trace_spans": stats["spans"],
+        "trace_requests": stats["requests"],
+        "decode_steps": agg["decode_steps"],
+        "trace_path": trace_path,
+        "metrics_path": metrics_path,
+    }
+    if not quiet:
+        print(f"  [serve_bench] {row['name']}: trace valid "
+              f"({stats['events']} events, {stats['spans']} spans, "
+              f"{stats['requests']} request lanes) -> {trace_path}, "
+              f"metrics -> {metrics_path}")
+    return row
+
+
 def _bench_static(qm, backend, n_requests):
     eng = qm.serve(api.ServeConfig(max_seq=MAX_SEQ, batch_slots=SLOTS),
                    backend=backend)
@@ -317,6 +356,7 @@ def run(quiet: bool = False, fast: bool = False):
     rows.extend(prefix_sweep(qm, "reference", n_requests, quiet=quiet))
     rows.extend(spec_sweep(qm, "reference", n_requests, quiet=quiet))
     os.makedirs("results", exist_ok=True)
+    rows.append(obs_replay(qm, "reference", quiet=quiet))
     with open("results/serve_bench.json", "w") as f:
         json.dump({"arch": ARCH, "slots": SLOTS, "trace_seed": TRACE_SEED,
                    "n_requests": n_requests, "rows": rows}, f, indent=1)

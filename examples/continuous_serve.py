@@ -18,8 +18,12 @@ artifact under a harsher weight-only policy (no second checkpoint), and
 the shared paged pool — fewer target-model invocations, token-identical
 output, acceptance rate in the metrics.  Finishes by showing the
 ``generate()`` compatibility wrapper produces the same greedy tokens as
-the static fixed-batch loop it replaced.
+the static fixed-batch loop it replaced, and dumps the recorded
+observability artifacts — a Chrome trace of every request's
+queue/prefill/decode lifecycle (open in ``chrome://tracing`` or
+Perfetto) plus the Prometheus metrics — to ``results/``.
 """
+import os
 import tempfile
 
 import numpy as np
@@ -45,9 +49,11 @@ def main():
         print(f"artifact reloaded: {loaded.config.name}, "
               f"{loaded.packed_bytes() / 2**20:.2f} MiB packed, 2 shards")
 
-        # 2. A continuous engine: 2 decode slots, 8-token KV blocks -------
+        # 2. A continuous engine: 2 decode slots, 8-token KV blocks, with
+        #    observability on (spans + metrics; off by default) ----------
         eng = loaded.serve(api.ServeConfig(max_seq=48, batch_slots=2,
-                                           block_tokens=8))
+                                           block_tokens=8,
+                                           obs=api.ObsConfig(enabled=True)))
 
         # 3. Stream a mixed-length trace through submit/step/drain --------
         def stream(req, tok, done):
@@ -136,6 +142,19 @@ def main():
         assert np.array_equal(cont["tokens"], static["tokens"])
         print("continuous generate() == static generate_static():",
               cont["tokens"].shape, "tokens identical")
+
+        # 7. Dump what the traced engine observed: one span tree per
+        #    request (queue -> prefill -> decode, token instants) and the
+        #    metrics registry (TTFT/queue-wait histograms, counters) -----
+        from repro.obs import validate_chrome_trace
+
+        os.makedirs("results", exist_ok=True)
+        trace_path = eng.obs.export_trace("results/example_trace.json")
+        metrics_path = eng.obs.export_metrics("results/example_metrics.prom")
+        stats = validate_chrome_trace(eng.obs.tracer.to_chrome())
+        print(f"trace: {trace_path} ({stats['spans']} spans over "
+              f"{stats['requests']} request lanes) -> chrome://tracing; "
+              f"metrics: {metrics_path}")
 
 
 if __name__ == "__main__":

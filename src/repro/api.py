@@ -54,12 +54,13 @@ from repro.quant.pipeline import PTQConfig, normalize_policy, quantize_packed
 from repro.quant.policy import (
     PRESETS, QuantPolicy, RotationPlan, RotationSpec, SiteRule, get_policy,
 )
+from repro.obs import ObsConfig
 from repro.serve.engine import ServeConfig, ServeEngine
 
 __all__ = [
-    "PRESETS", "PTQConfig", "QuantPolicy", "QuantizeSpec", "QuantizedModel",
-    "RotationPlan", "RotationSpec", "ServeConfig", "SiteRule", "derive_draft",
-    "get_policy", "load_quantized", "quantize",
+    "ObsConfig", "PRESETS", "PTQConfig", "QuantPolicy", "QuantizeSpec",
+    "QuantizedModel", "RotationPlan", "RotationSpec", "ServeConfig",
+    "SiteRule", "derive_draft", "get_policy", "load_quantized", "quantize",
 ]
 
 # 2: manifest carries the resolved QuantPolicy

@@ -138,11 +138,17 @@ def best(
     backends with no cached entry.  The returned dict always contains at
     least the keys of ``defaults``.
     """
+    # observability: every resolution reports its source (table hit /
+    # measured sweep / static default) to any subscribed profiler
+    from repro.obs.profile import notify_autotune
+
     key = key_for(shapes, dtype)
     hit = lookup(op, key)
     if hit is not None:
+        notify_autotune(op, "table", key=key, best_us=hit.get("us"))
         return {**defaults, **{k: v for k, v in hit.items() if k in defaults}}
     if not measurable() or not candidates or measure is None:
+        notify_autotune(op, "default", key=key)
         return dict(defaults)
     best_params, best_us = dict(defaults), float("inf")
     for params in candidates:
@@ -157,6 +163,8 @@ def best(
         choice["us"] = round(best_us, 2)
     record(op, key, choice)
     save_table()
+    notify_autotune(op, "measured", key=key,
+                    best_us=None if best_us == float("inf") else best_us)
     return {**defaults, **best_params}
 
 

@@ -79,6 +79,14 @@ def main():
                          "name / JSON / path; weight-only, layer-uniform)")
     ap.add_argument("--draft-k", type=int, default=4,
                     help="draft tokens per verify step (--spec-decode)")
+    ap.add_argument("--trace-out", default=None,
+                    help="enable observability and write the request trace "
+                         "here (.jsonl = JSON-lines, else a Chrome-trace "
+                         "file for chrome://tracing / Perfetto)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="enable observability and write the metrics "
+                         "registry here (.json = JSON document, else "
+                         "Prometheus text format)")
     args = ap.parse_args()
 
     if args.artifact:
@@ -117,11 +125,13 @@ def main():
         print(f"[serve] spec decode: draft {draft.policy.name} "
               f"({draft.packed_bytes()/2**20:.2f} MiB packed), "
               f"k={args.draft_k}")
+    obs_cfg = api.ObsConfig(
+        enabled=bool(args.trace_out or args.metrics_out))
     eng = qm.serve(api.ServeConfig(
         max_seq=args.max_seq, batch_slots=args.prompts,
         temperature=args.temperature, block_tokens=args.block_tokens,
         prefix_cache=args.prefix_cache, spec_decode=args.spec_decode,
-        draft_k=args.draft_k),
+        draft_k=args.draft_k, obs=obs_cfg),
         backend=args.backend, draft=draft)
     if args.continuous:
         from repro.serve.scheduler import run_continuous_trace
@@ -131,6 +141,7 @@ def main():
                              max_new=args.max_new,
                              shared_prefix_tokens=args.shared_prefix,
                              n_prefix_groups=args.prefix_groups)
+        _export_obs(eng, args)
         return
     rng = np.random.default_rng(0)
     if cfg.modality == "audio":
@@ -145,6 +156,16 @@ def main():
     print(f"[serve] backend={args.backend}: generated {out['tokens'].shape} "
           f"tokens; final cache length {out['final_length']}")
     print(out["tokens"][:2])
+    _export_obs(eng, args)
+
+
+def _export_obs(eng, args) -> None:
+    if args.trace_out:
+        print(f"[serve] trace written to "
+              f"{eng.obs.export_trace(args.trace_out)}")
+    if args.metrics_out:
+        print(f"[serve] metrics written to "
+              f"{eng.obs.export_metrics(args.metrics_out)}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,100 @@
+"""Serving observability: tracing, metrics registry, profiling hooks.
+
+One instrument for the whole serving stack (scheduler → prefix cache →
+spec-decode windows → paged kernel):
+
+  * :mod:`repro.obs.metrics` — typed counters/gauges/histograms with label
+    sets; Prometheus-text and JSON exporters.  Always on: the legacy
+    ``scheduler.metrics()`` dict is a compatibility view over it.
+  * :mod:`repro.obs.trace` — nestable spans over a pluggable monotonic
+    clock; per-request lifecycle (enqueue → admit → prefill → decode →
+    finish) in a bounded ring; JSON-lines and Chrome-trace export.
+  * :mod:`repro.obs.profile` — jit-dispatch timing, compile/recompile
+    counting, autotune lookup events.
+
+``ObsConfig(enabled=False)`` (the default, carried on ``ServeConfig.obs``)
+keeps tracing and profiling entirely out of the hot loop: no spans, no
+wrappers around the jitted entry points — emitted tokens and the legacy
+metrics dict are bit-identical to an unobserved engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.profile import Profiler, register_profile_metrics
+from repro.obs.trace import (ENGINE_PID, REQUEST_PID, Tracer,
+                             validate_chrome_trace)
+
+__all__ = [
+    "ObsConfig",
+    "Observability",
+    "MetricsRegistry",
+    "Tracer",
+    "Profiler",
+    "ENGINE_PID",
+    "REQUEST_PID",
+    "validate_chrome_trace",
+]
+
+
+@dataclasses.dataclass
+class ObsConfig:
+    """Observability switches, carried on ``ServeConfig.obs``.
+
+    ``enabled`` gates tracing + profiling (the expensive, per-tick parts);
+    the metrics registry itself is always live because the scheduler's
+    legacy counters are backed by it.  ``clock`` injects a monotonic time
+    source (seconds) shared by the tracer, the profiler, and the
+    scheduler; ``None`` means ``time.perf_counter``.
+    """
+
+    enabled: bool = False
+    profile: bool = True
+    ring_capacity: int = 65536
+    clock: Optional[Callable[[], float]] = None
+
+    def __post_init__(self):
+        if self.ring_capacity < 1:
+            raise ValueError("ring_capacity must be >= 1")
+
+
+class Observability:
+    """Per-engine bundle: registry (always), tracer + profiler (opt-in)."""
+
+    def __init__(self, cfg: Optional[ObsConfig] = None):
+        self.cfg = cfg or ObsConfig()
+        self.clock: Callable[[], float] = self.cfg.clock or time.perf_counter
+        self.registry = MetricsRegistry()
+        register_profile_metrics(self.registry)
+        self.tracer: Optional[Tracer] = None
+        self.profiler: Optional[Profiler] = None
+        if self.cfg.enabled:
+            self.tracer = Tracer(clock=self.clock,
+                                 capacity=self.cfg.ring_capacity)
+            if self.cfg.profile:
+                self.profiler = Profiler(self.registry, self.tracer,
+                                         self.clock)
+
+    @property
+    def enabled(self) -> bool:
+        return self.tracer is not None
+
+    def wrap(self, site: str, fn):
+        """Profile ``fn`` under ``site`` — identity when profiling is off,
+        so the disabled path adds zero indirection to the hot loop."""
+        if self.profiler is None:
+            return fn
+        return self.profiler.wrap(site, fn)
+
+    def export_trace(self, path: str) -> str:
+        if self.tracer is None:
+            raise RuntimeError(
+                "tracing is disabled; construct the engine with "
+                "ServeConfig(obs=ObsConfig(enabled=True)) to record spans")
+        return self.tracer.export(path)
+
+    def export_metrics(self, path: str) -> str:
+        return self.registry.export(path)

@@ -1,0 +1,288 @@
+"""Typed metrics registry: counters, gauges, histograms with label sets.
+
+The registry replaces the hand-rolled aggregate ints that used to live on
+``ContinuousScheduler`` — every serving-side count flows through one
+instrument with a stable schema, so benches, launchers, and CI all export
+the same names.  Two exporters are provided:
+
+  * ``to_prometheus()`` — the Prometheus text exposition format
+    (``# HELP`` / ``# TYPE`` headers, ``name{label="v"} value`` samples,
+    histogram ``_bucket{le=...}`` / ``_sum`` / ``_count`` series);
+  * ``to_json()`` — a deterministic JSON document (sorted metric names,
+    sorted label tuples) suitable for committing as a curated snapshot
+    (``BENCH_*.json``) and diffing across PRs.
+
+Metrics are host-side Python objects: incrementing a counter is a dict
+update outside any jit graph, so the registry can stay always-on (the
+legacy ``scheduler.metrics()`` view is built from it) while tracing and
+profiling remain opt-in.
+"""
+from __future__ import annotations
+
+import json
+import math
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "DEFAULT_TIME_BUCKETS",
+]
+
+# Prometheus-style latency buckets (seconds); generous low end because the
+# reference backend on CPU dispatches in the ~100us-10ms range.
+DEFAULT_TIME_BUCKETS = (
+    0.0001, 0.00025, 0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025,
+    0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0,
+)
+
+LabelKey = Tuple[str, ...]
+
+
+def _fmt(v: float) -> str:
+    """Prometheus sample formatting: integers render bare, floats as repr."""
+    if v == math.inf:
+        return "+Inf"
+    if v == -math.inf:
+        return "-Inf"
+    if float(v).is_integer() and abs(v) < 1e15:
+        return str(int(v))
+    return repr(float(v))
+
+
+def _label_str(names: Sequence[str], values: LabelKey) -> str:
+    if not names:
+        return ""
+    inner = ",".join(
+        '%s="%s"' % (n, str(v).replace("\\", "\\\\").replace('"', '\\"'))
+        for n, v in zip(names, values))
+    return "{" + inner + "}"
+
+
+class _Metric:
+    kind = "untyped"
+
+    def __init__(self, name: str, help: str, labelnames: Sequence[str] = ()):
+        self.name = name
+        self.help = help
+        self.labelnames = tuple(labelnames)
+        self._series: Dict[LabelKey, object] = {}
+
+    def _key(self, labels: Mapping[str, str]) -> LabelKey:
+        if set(labels) != set(self.labelnames):
+            raise ValueError(
+                f"metric {self.name!r} takes labels {self.labelnames}, "
+                f"got {tuple(sorted(labels))}")
+        return tuple(str(labels[n]) for n in self.labelnames)
+
+    def series(self) -> List[Tuple[LabelKey, object]]:
+        return sorted(self._series.items())
+
+    def reset(self) -> None:
+        self._series.clear()
+
+
+class Counter(_Metric):
+    """Monotonically increasing count (resettable only via the registry)."""
+
+    kind = "counter"
+
+    def inc(self, v: float = 1.0, **labels: str) -> None:
+        if v < 0:
+            raise ValueError(f"counter {self.name!r} cannot decrease")
+        k = self._key(labels)
+        self._series[k] = self._series.get(k, 0.0) + v
+
+    def value(self, **labels: str) -> float:
+        return float(self._series.get(self._key(labels), 0.0))
+
+    def _set(self, v: float, **labels: str) -> None:
+        # Back door for the legacy scheduler attributes (``decode_steps = 0``
+        # style resets done by benches); not part of the public counter API.
+        self._series[self._key(labels)] = float(v)
+
+
+class Gauge(_Metric):
+    """A value that can go up and down (free blocks, queue depth, ...)."""
+
+    kind = "gauge"
+
+    def set(self, v: float, **labels: str) -> None:
+        self._series[self._key(labels)] = float(v)
+
+    def inc(self, v: float = 1.0, **labels: str) -> None:
+        k = self._key(labels)
+        self._series[k] = self._series.get(k, 0.0) + v
+
+    def dec(self, v: float = 1.0, **labels: str) -> None:
+        self.inc(-v, **labels)
+
+    def value(self, **labels: str) -> float:
+        return float(self._series.get(self._key(labels), 0.0))
+
+
+class Histogram(_Metric):
+    """Cumulative-bucket histogram (Prometheus semantics).
+
+    Each series holds per-bucket counts for the configured upper bounds
+    plus ``+Inf``, a running sum, and a total count.
+    """
+
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str, labelnames: Sequence[str] = (),
+                 buckets: Sequence[float] = DEFAULT_TIME_BUCKETS):
+        super().__init__(name, help, labelnames)
+        bs = tuple(sorted(float(b) for b in buckets))
+        if not bs:
+            raise ValueError("histogram needs at least one bucket")
+        if bs[-1] != math.inf:
+            bs = bs + (math.inf,)
+        self.buckets = bs
+
+    def observe(self, v: float, **labels: str) -> None:
+        k = self._key(labels)
+        st = self._series.get(k)
+        if st is None:
+            st = {"counts": [0] * len(self.buckets), "sum": 0.0, "count": 0}
+            self._series[k] = st
+        for i, b in enumerate(self.buckets):
+            if v <= b:
+                st["counts"][i] += 1
+                break
+        st["sum"] += float(v)
+        st["count"] += 1
+
+    def count(self, **labels: str) -> int:
+        st = self._series.get(self._key(labels))
+        return 0 if st is None else int(st["count"])
+
+    def sum(self, **labels: str) -> float:
+        st = self._series.get(self._key(labels))
+        return 0.0 if st is None else float(st["sum"])
+
+
+class MetricsRegistry:
+    """Name -> metric map with get-or-create registration.
+
+    Re-registering an existing name is idempotent when the kind and label
+    names match (so independent modules can each declare the metrics they
+    touch) and an error otherwise.
+    """
+
+    def __init__(self):
+        self._metrics: Dict[str, _Metric] = {}
+
+    # -- registration -------------------------------------------------------
+
+    def _get_or_create(self, cls, name: str, help: str,
+                       labels: Sequence[str], **kw) -> _Metric:
+        m = self._metrics.get(name)
+        if m is not None:
+            if not isinstance(m, cls) or (help and m.labelnames != tuple(labels)):
+                raise ValueError(
+                    f"metric {name!r} already registered as {m.kind} "
+                    f"with labels {m.labelnames}")
+            return m
+        m = cls(name, help, labels, **kw)
+        self._metrics[name] = m
+        return m
+
+    def counter(self, name: str, help: str = "",
+                labels: Sequence[str] = ()) -> Counter:
+        return self._get_or_create(Counter, name, help, labels)
+
+    def gauge(self, name: str, help: str = "",
+              labels: Sequence[str] = ()) -> Gauge:
+        return self._get_or_create(Gauge, name, help, labels)
+
+    def histogram(self, name: str, help: str = "",
+                  labels: Sequence[str] = (),
+                  buckets: Sequence[float] = DEFAULT_TIME_BUCKETS) -> Histogram:
+        return self._get_or_create(Histogram, name, help, labels,
+                                   buckets=buckets)
+
+    # -- introspection ------------------------------------------------------
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._metrics
+
+    def get(self, name: str) -> Optional[_Metric]:
+        return self._metrics.get(name)
+
+    def names(self) -> List[str]:
+        return sorted(self._metrics)
+
+    def schema(self) -> Dict[str, Dict[str, object]]:
+        """Stable {name: {kind, labels}} map — what the schema test freezes."""
+        return {n: {"kind": m.kind, "labels": list(m.labelnames)}
+                for n, m in sorted(self._metrics.items())}
+
+    def reset(self) -> None:
+        """Zero every series; registrations (the schema) survive."""
+        for m in self._metrics.values():
+            m.reset()
+
+    # -- exporters ----------------------------------------------------------
+
+    def to_json(self) -> Dict[str, object]:
+        out: Dict[str, object] = {}
+        for name in sorted(self._metrics):
+            m = self._metrics[name]
+            entry: Dict[str, object] = {
+                "type": m.kind, "help": m.help,
+                "labels": list(m.labelnames), "series": [],
+            }
+            for key, val in m.series():
+                row: Dict[str, object] = {
+                    "labels": dict(zip(m.labelnames, key))}
+                if m.kind == "histogram":
+                    cum = 0
+                    buckets = {}
+                    for b, c in zip(m.buckets, val["counts"]):
+                        cum += c
+                        buckets[_fmt(b)] = cum
+                    row.update(count=val["count"], sum=val["sum"],
+                               buckets=buckets)
+                else:
+                    row["value"] = val
+                entry["series"].append(row)
+            out[name] = entry
+        return out
+
+    def to_prometheus(self) -> str:
+        lines: List[str] = []
+        for name in sorted(self._metrics):
+            m = self._metrics[name]
+            if m.help:
+                lines.append(f"# HELP {name} {m.help}")
+            lines.append(f"# TYPE {name} {m.kind}")
+            for key, val in m.series():
+                if m.kind == "histogram":
+                    cum = 0
+                    for b, c in zip(m.buckets, val["counts"]):
+                        cum += c
+                        le = _label_str(m.labelnames + ("le",),
+                                        key + (_fmt(b),))
+                        lines.append(f"{name}_bucket{le} {cum}")
+                    ls = _label_str(m.labelnames, key)
+                    lines.append(f"{name}_sum{ls} {_fmt(val['sum'])}")
+                    lines.append(f"{name}_count{ls} {val['count']}")
+                else:
+                    ls = _label_str(m.labelnames, key)
+                    lines.append(f"{name}{ls} {_fmt(val)}")
+        return "\n".join(lines) + "\n"
+
+    def export(self, path: str) -> str:
+        """Write metrics to ``path``; format picked by extension
+        (``.json`` -> JSON document, anything else -> Prometheus text)."""
+        if str(path).endswith(".json"):
+            doc = json.dumps(self.to_json(), indent=1, sort_keys=False)
+            payload = doc + "\n"
+        else:
+            payload = self.to_prometheus()
+        with open(path, "w") as f:
+            f.write(payload)
+        return str(path)

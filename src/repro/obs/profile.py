@@ -1,0 +1,137 @@
+"""Profiling hooks: jit-dispatch timing, compile counting, autotune events.
+
+``Profiler.wrap(site, fn)`` decorates the engine's jitted entry points
+(paged-attention decode tick, in-graph decode/spec windows,
+``prefill_shared``, sampling).  Each call records host-side dispatch wall
+time into ``profile_dispatch_seconds{site=...}`` and watches the
+underlying jit cache (``fn._cache_size()``) for growth — every new cache
+entry is a (re)compile, surfaced as ``jit_compiles_total{site=...}`` and,
+when tracing is on, a ``jit_compile`` instant on the engine lane.
+
+Autotune measurements report through a module-level subscriber list so
+``kernels.autotune.best`` needs no engine reference: enabled profilers
+subscribe (weakly — a dropped engine unsubscribes itself) and count
+lookups per (op, source) plus measured wall time.
+"""
+from __future__ import annotations
+
+import time
+import weakref
+from typing import Callable, List, Optional
+
+from repro.obs.trace import ENGINE_PID, Tracer
+from repro.obs.metrics import MetricsRegistry
+
+__all__ = ["Profiler", "notify_autotune", "register_profile_metrics"]
+
+_AUTOTUNE_SUBS: List["weakref.ref[Profiler]"] = []
+
+
+def notify_autotune(op: str, source: str, key: object = None,
+                    best_us: Optional[float] = None) -> None:
+    """Called by ``kernels.autotune.best`` on every lookup.
+
+    ``source`` is one of ``table`` (exact or cross-backend hit),
+    ``measured`` (fresh timing sweep), or ``default`` (static fallback).
+    No-op unless a live profiler has subscribed.
+    """
+    if not _AUTOTUNE_SUBS:
+        return
+    dead = []
+    for ref in _AUTOTUNE_SUBS:
+        prof = ref()
+        if prof is None:
+            dead.append(ref)
+        else:
+            prof.on_autotune(op, source, key, best_us)
+    for ref in dead:
+        _AUTOTUNE_SUBS.remove(ref)
+
+
+def register_profile_metrics(reg: MetricsRegistry) -> None:
+    """Declare the profiling metric schema (kept feature-independent so the
+    exported key set is identical whether or not profiling ran)."""
+    reg.histogram("profile_dispatch_seconds",
+                  "Host-side wall time of one jitted dispatch",
+                  labels=("site",))
+    reg.counter("jit_compiles_total",
+                "New jit-cache entries observed per site (compiles and "
+                "shape-driven recompiles)", labels=("site",))
+    reg.counter("autotune_lookups_total",
+                "Autotune table lookups by resolution source",
+                labels=("op", "source"))
+    reg.histogram("autotune_measure_seconds",
+                  "Best measured kernel time per autotune sweep",
+                  labels=("op",))
+
+
+class Profiler:
+    def __init__(self, registry: MetricsRegistry,
+                 tracer: Optional[Tracer] = None,
+                 clock: Optional[Callable[[], float]] = None):
+        self.registry = registry
+        self.tracer = tracer
+        self.clock = clock or time.perf_counter
+        self._cache_sizes: dict = {}
+        register_profile_metrics(registry)
+        _AUTOTUNE_SUBS.append(weakref.ref(self))
+
+    # -- jit dispatch -------------------------------------------------------
+
+    def wrap(self, site: str, fn: Callable) -> Callable:
+        """Return ``fn`` timed under ``site``.
+
+        The jit cache is found on ``fn`` itself or on ``fn._jitted`` (the
+        KV pool's bound step closure exposes its inner jit that way).
+        """
+        target = getattr(fn, "_jitted", fn)
+        hist = self.registry.histogram("profile_dispatch_seconds")
+        self._cache_sizes[site] = self._cache_size(target)
+
+        def timed(*args, **kwargs):
+            t0 = self.clock()
+            out = fn(*args, **kwargs)
+            dt = self.clock() - t0
+            hist.observe(dt, site=site)
+            self._note_compiles(site, target, dt)
+            return out
+
+        timed.__name__ = getattr(fn, "__name__", site)
+        timed._profiled_site = site
+        timed._wrapped = fn
+        return timed
+
+    @staticmethod
+    def _cache_size(target) -> Optional[int]:
+        try:
+            return int(target._cache_size())
+        except Exception:
+            return None
+
+    def _note_compiles(self, site: str, target, dispatch_s: float) -> None:
+        cs = self._cache_size(target)
+        if cs is None:
+            return
+        last = self._cache_sizes.get(site) or 0
+        if cs > last:
+            self.registry.counter("jit_compiles_total").inc(cs - last,
+                                                            site=site)
+            if self.tracer is not None:
+                self.tracer.event("jit_compile", pid=ENGINE_PID, tid=0,
+                                  cat="profile", site=site, new=cs - last,
+                                  cache_size=cs, dispatch_s=dispatch_s)
+        self._cache_sizes[site] = cs
+
+    # -- autotune -----------------------------------------------------------
+
+    def on_autotune(self, op: str, source: str, key: object,
+                    best_us: Optional[float]) -> None:
+        self.registry.counter("autotune_lookups_total").inc(
+            1, op=op, source=source)
+        if best_us is not None:
+            self.registry.histogram("autotune_measure_seconds").observe(
+                best_us * 1e-6, op=op)
+        if self.tracer is not None:
+            self.tracer.event("autotune", pid=ENGINE_PID, tid=0,
+                              cat="profile", op=op, source=source,
+                              key=str(key), best_us=best_us)

@@ -1,0 +1,316 @@
+"""Structured tracing: nestable spans over a pluggable monotonic clock.
+
+The tracer records the per-request serving lifecycle —
+
+    request ⊃ queue (submit → admit)
+            ⊃ prefill (admit → first logits)
+            ⊃ decode (first token → finish, with per-token instants)
+
+— plus engine-side spans (``decode_tick`` / ``decode_window`` /
+``spec_window``) into a bounded ring buffer.  Completed records export as
+JSON-lines (one record per line, for grep/jq) or as a Chrome-trace file
+(``chrome://tracing`` / Perfetto ``traceEvents`` schema, "X" complete
+events with microsecond timestamps).
+
+``validate_chrome_trace`` is the schema contract used by tests and the CI
+cell: every request tid must carry exactly one complete
+``request`` root span, properly nested ``queue``/``prefill``/``decode``
+children, and monotonic phase timestamps.  ``python -m repro.obs.trace
+FILE`` runs the validator from the command line.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional, Tuple
+
+__all__ = [
+    "ENGINE_PID",
+    "REQUEST_PID",
+    "Span",
+    "Tracer",
+    "validate_chrome_trace",
+]
+
+# Chrome-trace "process" ids: one lane for engine-wide spans (ticks,
+# windows, jit compiles), one where each request gets its own tid row.
+ENGINE_PID = 1
+REQUEST_PID = 2
+
+
+@dataclasses.dataclass
+class Span:
+    """One span-in-flight; becomes a ring record when ended."""
+
+    name: str
+    pid: int
+    tid: int
+    t0: float
+    cat: str = "serve"
+    args: Dict[str, object] = dataclasses.field(default_factory=dict)
+    t1: Optional[float] = None
+
+    @property
+    def duration(self) -> Optional[float]:
+        return None if self.t1 is None else self.t1 - self.t0
+
+
+class Tracer:
+    """Bounded ring of completed spans and instant events.
+
+    All timestamps come from the injected ``clock`` (monotonic seconds);
+    tests drive a fake clock for deterministic traces.  ``begin``/``end``
+    accept explicit ``t=`` overrides so callers can reuse timestamps they
+    already took (e.g. ``Request.submit_t``) instead of sampling twice.
+    """
+
+    def __init__(self, clock: Optional[Callable[[], float]] = None,
+                 capacity: int = 65536):
+        if capacity < 1:
+            raise ValueError("ring capacity must be >= 1")
+        self.clock = clock or time.perf_counter
+        self.capacity = capacity
+        self._ring: deque = deque(maxlen=capacity)
+        self.dropped = 0
+        self._names: Dict[Tuple[int, int], str] = {}
+
+    # -- recording ----------------------------------------------------------
+
+    def label(self, pid: int, tid: int, name: str) -> None:
+        """Name a (pid, tid) lane; exported as Chrome thread metadata."""
+        self._names[(pid, tid)] = name
+
+    def begin(self, name: str, *, pid: int = ENGINE_PID, tid: int = 0,
+              t: Optional[float] = None, cat: str = "serve",
+              **args) -> Span:
+        return Span(name=name, pid=pid, tid=tid, cat=cat,
+                    t0=self.clock() if t is None else t, args=dict(args))
+
+    def end(self, span: Span, *, t: Optional[float] = None, **args) -> Span:
+        span.t1 = self.clock() if t is None else t
+        if args:
+            span.args.update(args)
+        self._push({"ph": "X", "name": span.name, "cat": span.cat,
+                    "pid": span.pid, "tid": span.tid,
+                    "t0": span.t0, "t1": span.t1, "args": span.args})
+        return span
+
+    def span(self, name: str, **kw):
+        """Context manager: ``with tracer.span("prefill", tid=rid): ...``"""
+        return _SpanCtx(self, name, kw)
+
+    def event(self, name: str, *, pid: int = ENGINE_PID, tid: int = 0,
+              t: Optional[float] = None, cat: str = "serve", **args) -> None:
+        self._push({"ph": "i", "name": name, "cat": cat, "pid": pid,
+                    "tid": tid, "t0": self.clock() if t is None else t,
+                    "args": dict(args)})
+
+    def _push(self, rec: Dict[str, object]) -> None:
+        if len(self._ring) == self.capacity:
+            self.dropped += 1
+        self._ring.append(rec)
+
+    # -- introspection ------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._ring)
+
+    def records(self) -> List[Dict[str, object]]:
+        return list(self._ring)
+
+    def last_record(self, pid: int, tid: int) -> Optional[Dict[str, object]]:
+        """Most recent completed record on a lane (stall diagnostics)."""
+        for rec in reversed(self._ring):
+            if rec["pid"] == pid and rec["tid"] == tid:
+                return rec
+        return None
+
+    # -- export -------------------------------------------------------------
+
+    def to_chrome(self) -> Dict[str, object]:
+        """Chrome-trace document: "X" complete events in microseconds
+        relative to the earliest record, plus lane-name metadata."""
+        recs = self.records()
+        t_base = min((r["t0"] for r in recs), default=0.0)
+        events: List[Dict[str, object]] = []
+        for (pid, tid), name in sorted(self._names.items()):
+            events.append({"ph": "M", "name": "thread_name", "pid": pid,
+                           "tid": tid, "args": {"name": name}})
+        events.append({"ph": "M", "name": "process_name", "pid": ENGINE_PID,
+                       "tid": 0, "args": {"name": "engine"}})
+        events.append({"ph": "M", "name": "process_name", "pid": REQUEST_PID,
+                       "tid": 0, "args": {"name": "requests"}})
+        for r in recs:
+            ev: Dict[str, object] = {
+                "name": r["name"], "cat": r["cat"], "ph": r["ph"],
+                "pid": r["pid"], "tid": r["tid"],
+                "ts": (r["t0"] - t_base) * 1e6, "args": r["args"],
+            }
+            if r["ph"] == "X":
+                ev["dur"] = max(0.0, (r["t1"] - r["t0"]) * 1e6)
+            else:
+                ev["s"] = "t"  # instant scope: thread
+            events.append(ev)
+        return {"traceEvents": events, "displayTimeUnit": "ms",
+                "otherData": {"dropped_records": self.dropped}}
+
+    def to_jsonl(self) -> str:
+        lines = [json.dumps(r, sort_keys=True) for r in self.records()]
+        return "\n".join(lines) + ("\n" if lines else "")
+
+    def export(self, path: str) -> str:
+        """Write the trace to ``path``: ``.jsonl`` -> JSON-lines,
+        anything else -> Chrome-trace JSON."""
+        if str(path).endswith(".jsonl"):
+            payload = self.to_jsonl()
+        else:
+            payload = json.dumps(self.to_chrome()) + "\n"
+        with open(path, "w") as f:
+            f.write(payload)
+        return str(path)
+
+
+class _SpanCtx:
+    def __init__(self, tracer: Tracer, name: str, kw: Dict[str, object]):
+        self.tracer, self.name, self.kw = tracer, name, kw
+        self.span: Optional[Span] = None
+
+    def __enter__(self) -> Span:
+        self.span = self.tracer.begin(self.name, **self.kw)
+        return self.span
+
+    def __exit__(self, *exc):
+        self.tracer.end(self.span)
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Schema validation (tests + CI)
+# ---------------------------------------------------------------------------
+
+_REQUIRED_CHILDREN = ("queue", "prefill", "decode")
+
+
+def validate_chrome_trace(doc: Dict[str, object]) -> Dict[str, int]:
+    """Validate a Chrome-trace document against the serving schema.
+
+    Checks: well-formed ``traceEvents``; non-negative, finite timestamps
+    and durations; per-lane proper span nesting; and — on the request pid —
+    exactly one complete ``request`` root per tid spanning ``queue`` /
+    ``prefill`` / ``decode`` children with monotonic phase starts.
+
+    Returns ``{"events": ..., "spans": ..., "requests": ...}`` on success;
+    raises ``ValueError`` describing the first violation.
+    """
+    if not isinstance(doc, dict) or not isinstance(doc.get("traceEvents"), list):
+        raise ValueError("not a Chrome-trace document (missing traceEvents)")
+    events = doc["traceEvents"]
+    if not events:
+        raise ValueError("empty traceEvents")
+    spans_by_lane: Dict[Tuple[int, int], List[Dict[str, object]]] = {}
+    instants_by_lane: Dict[Tuple[int, int], List[Dict[str, object]]] = {}
+    n_spans = 0
+    for i, ev in enumerate(events):
+        for k in ("name", "ph", "pid", "tid"):
+            if k not in ev:
+                raise ValueError(f"event {i} missing {k!r}")
+        if ev["ph"] == "M":
+            continue
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            raise ValueError(f"event {i} ({ev['name']!r}) bad ts: {ts!r}")
+        lane = (ev["pid"], ev["tid"])
+        if ev["ph"] == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                raise ValueError(
+                    f"event {i} ({ev['name']!r}) bad dur: {dur!r}")
+            spans_by_lane.setdefault(lane, []).append(ev)
+            n_spans += 1
+        elif ev["ph"] == "i":
+            instants_by_lane.setdefault(lane, []).append(ev)
+        else:
+            raise ValueError(f"event {i} unexpected ph {ev['ph']!r}")
+
+    eps = 1e-3  # µs tolerance for float rounding
+    for lane, spans in spans_by_lane.items():
+        ordered = sorted(spans, key=lambda e: (e["ts"], -e["dur"]))
+        stack: List[Dict[str, object]] = []
+        for ev in ordered:
+            end = ev["ts"] + ev["dur"]
+            while stack and ev["ts"] >= stack[-1]["ts"] + stack[-1]["dur"] - eps:
+                stack.pop()
+            if stack and end > stack[-1]["ts"] + stack[-1]["dur"] + eps:
+                raise ValueError(
+                    f"span {ev['name']!r} on pid={lane[0]} tid={lane[1]} "
+                    f"overlaps parent {stack[-1]['name']!r} without nesting")
+            stack.append(ev)
+
+    req_pid = REQUEST_PID
+    req_lanes = {lane: spans for lane, spans in spans_by_lane.items()
+                 if lane[0] == req_pid}
+    if not req_lanes:
+        raise ValueError("no request spans recorded (pid=%d)" % req_pid)
+    for lane, spans in req_lanes.items():
+        roots = [s for s in spans if s["name"] == "request"]
+        if len(roots) != 1:
+            raise ValueError(
+                f"request tid={lane[1]}: expected exactly one 'request' "
+                f"root span, found {len(roots)}")
+        root = roots[0]
+        root_end = root["ts"] + root["dur"]
+        named = {s["name"]: s for s in spans}
+        for child in _REQUIRED_CHILDREN:
+            if child not in named:
+                raise ValueError(
+                    f"request tid={lane[1]} missing {child!r} span")
+            c = named[child]
+            if c["ts"] < root["ts"] - eps or c["ts"] + c["dur"] > root_end + eps:
+                raise ValueError(
+                    f"request tid={lane[1]}: {child!r} escapes its "
+                    f"'request' root")
+        if not (named["queue"]["ts"] <= named["prefill"]["ts"] + eps
+                <= named["decode"]["ts"] + 2 * eps):
+            raise ValueError(
+                f"request tid={lane[1]}: phases out of order "
+                f"(queue -> prefill -> decode)")
+        toks = [e for e in instants_by_lane.get(lane, ())
+                if e["name"] == "token"]
+        last_ts = None
+        for e in toks:
+            if e["ts"] < root["ts"] - eps or e["ts"] > root_end + eps:
+                raise ValueError(
+                    f"request tid={lane[1]}: token instant outside the "
+                    f"request span")
+            if last_ts is not None and e["ts"] < last_ts - eps:
+                raise ValueError(
+                    f"request tid={lane[1]}: token timestamps not monotonic")
+            last_ts = e["ts"]
+    return {"events": len(events), "spans": n_spans,
+            "requests": len(req_lanes)}
+
+
+def _main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.trace",
+        description="Validate a Chrome-trace export against the serving "
+                    "span schema.")
+    ap.add_argument("file", help="trace JSON file (as written by --trace-out)")
+    args = ap.parse_args(argv)
+    with open(args.file) as f:
+        doc = json.load(f)
+    try:
+        summary = validate_chrome_trace(doc)
+    except ValueError as e:
+        print(f"[trace] INVALID: {e}")
+        return 1
+    print(f"[trace] ok: {summary['events']} events, {summary['spans']} "
+          f"spans, {summary['requests']} request lanes")
+    return 0
+
+
+if __name__ == "__main__":  # pragma: no cover
+    raise SystemExit(_main())

@@ -47,6 +47,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.common import NOQUANT, QuantizeSpec
+from repro.obs import ObsConfig, Observability
 
 
 @dataclasses.dataclass
@@ -105,6 +106,18 @@ class ServeConfig:
     # and steps_per_sync=1 (validated at engine build).
     spec_decode: bool = False
     draft_k: int = 4
+    # --- observability ---
+    # Tracing + profiling switches (repro.obs).  The default
+    # ObsConfig(enabled=False) keeps spans and jit-dispatch wrappers
+    # entirely out of the hot loop; the metrics registry itself is always
+    # live (it backs scheduler.metrics()).  Launchers flip this on via
+    # --trace-out / --metrics-out.
+    obs: ObsConfig = dataclasses.field(default_factory=ObsConfig)
+    # Stall watchdog for drain(): raise (with the stuck request ids and
+    # their last trace span) once no token / finish / admission has
+    # happened for this many clock seconds.  None = no watchdog (the
+    # historical behavior: only a no-progress step raises).
+    drain_timeout_s: Optional[float] = None
 
 
 class ServeEngine:
@@ -127,6 +140,7 @@ class ServeEngine:
         self.cfg = arch.config
         self.scfg = scfg
         self.spec = spec
+        self.obs = Observability(scfg.obs)
         if backend is not None:
             params = set_backend(params, backend)
             if draft_params is not None:
@@ -175,12 +189,17 @@ class ServeEngine:
                     mesh, param_pspecs(self.cfg, draft_sds), draft_sds)
                 draft_params = jax.device_put(draft_params, ns(dspec))
         self.draft_params = draft_params
-        self._prefill = jax.jit(lambda p, b, c: arch.prefill(p, b, c, spec))
-        self._decode = jax.jit(lambda p, t, c: arch.decode(p, t, c, spec))
+        self._prefill = self.obs.wrap(
+            "prefill", jax.jit(lambda p, b, c: arch.prefill(p, b, c, spec)))
+        self._decode = self.obs.wrap(
+            "decode_static",
+            jax.jit(lambda p, t, c: arch.decode(p, t, c, spec)))
         self._prefill_padded = None
         if arch.padded_prefill is not None:
-            self._prefill_padded = jax.jit(
-                lambda p, b, c, n: arch.padded_prefill(p, b, c, n, spec))
+            self._prefill_padded = self.obs.wrap(
+                "prefill_padded",
+                jax.jit(lambda p, b, c, n: arch.padded_prefill(p, b, c, n,
+                                                               spec)))
         # continuous-batching machinery, built lazily on first submit()
         self._pool = None
         self._pool_step_fn = None
@@ -277,7 +296,11 @@ class ServeEngine:
             tick = self._pool.make_tick(
                 lambda p, t, c: self.arch.decode(p, t, c, self.spec))
         self._tick_fn = tick
-        self._pool_step_fn = self._pool.bind_step(tick)
+        self._pool.obs = self.obs
+        # bind_step exposes its inner jit as ._jitted, so the profiler can
+        # watch the paged-attention tick's compile cache
+        self._pool_step_fn = self.obs.wrap("decode_tick",
+                                           self._pool.bind_step(tick))
         self._verify_tick = None
         if scfg.spec_decode:
             from repro.serve import specdecode
@@ -299,7 +322,8 @@ class ServeEngine:
             sig = (f"{self.cfg.name}/kv{self.spec.kv_bits}/"
                    f"{jnp.dtype(self.dtype).name}/T{scfg.block_tokens}")
             self._prefix_cache = PrefixCache(self._pool, sig=sig,
-                                             capacity=scfg.max_cached_blocks)
+                                             capacity=scfg.max_cached_blocks,
+                                             obs=self.obs)
         self._sched = ContinuousScheduler(self)
 
     def _place_pool(self):
@@ -350,7 +374,8 @@ class ServeEngine:
         from repro.serve import specdecode
 
         if self._spec_jit is None:
-            self._spec_jit = specdecode.build_spec_window(self)
+            self._spec_jit = self.obs.wrap(
+                "spec_window", specdecode.build_spec_window(self))
         pool = self.pool
         inputs = self._place_step_inputs(tokens, lengths, tables)
         with self._mesh_ctx():
@@ -389,7 +414,8 @@ class ServeEngine:
         """Sample every slot's next token on device; only the (S,) int ids
         ever cross to the host (the scheduler's per-token sync)."""
         if self._sample_jit is None:
-            self._sample_jit = jax.jit(self._make_sampler())
+            self._sample_jit = self.obs.wrap("sample",
+                                             jax.jit(self._make_sampler()))
         with self._mesh_ctx():
             return self._sample_jit(logits, jnp.asarray(rids),
                                     jnp.asarray(counts))
@@ -449,7 +475,8 @@ class ServeEngine:
         hook for ``steps_per_sync > 1``).  Returns the per-step token and
         emission buffers; pool storage is updated in place."""
         if self._window_jit is None:
-            self._window_jit = self._build_window()
+            self._window_jit = self.obs.wrap("decode_window",
+                                             self._build_window())
         pool = self.pool
         inputs = self._place_step_inputs(
             tokens, lengths, tables, counts, rids, stops, max_new, alive)
@@ -527,8 +554,9 @@ class ServeEngine:
                                       self.dtype)
         fn = self._prefill_from_jit.get(start)
         if fn is None:
-            fn = jax.jit(lambda p, b, c, s=start: self.arch.prefill_from(
-                p, b, c, s, self.spec))
+            fn = self.obs.wrap("prefill_shared", jax.jit(
+                lambda p, b, c, s=start: self.arch.prefill_from(
+                    p, b, c, s, self.spec)))
             self._prefill_from_jit[start] = fn
         batch = {"tokens": jnp.asarray(prompt[start:][None])}
         with self._mesh_ctx():

@@ -186,6 +186,10 @@ class KVPool:
         # blocks() -> iterable of retained block ids (invariant checking).
         self.prefix = None
         self._write_prefix_jit = None
+        # Optional observability bundle (set by the engine): block
+        # alloc/release counters + the free-list gauge flow through its
+        # registry.  None = standalone pool, no accounting.
+        self.obs = None
 
     # ------------------------------------------------------------------
     # Admission accounting
@@ -235,6 +239,9 @@ class KVPool:
         self.refcount[blk] = 1
         self.slot_blocks[slot].append(blk)
         self.tables[slot, len(self.slot_blocks[slot]) - 1] = blk
+        if self.obs is not None:
+            self.obs.registry.counter("kvpool_blocks_allocated_total").inc()
+            self.obs.registry.gauge("kvpool_free_blocks").set(len(self.free))
         return blk
 
     def _map_shared(self, slot: int, blk: int) -> None:
@@ -383,26 +390,38 @@ class KVPool:
         that hit zero references *and* are not retained by the prefix
         cache (a cached-idle block stays resident, off the free list,
         until the cache evicts it under pressure)."""
+        freed = 0
         for blk in self.slot_blocks[slot]:
             assert self.refcount[blk] > 0, f"double release of block {blk}"
             self.refcount[blk] -= 1
             if self.refcount[blk] == 0 and not (
                     self.prefix is not None and self.prefix.holds(blk)):
                 self.free.append(blk)
+                freed += 1
         self.slot_blocks[slot] = []
         self.tables[slot, :] = SCRATCH
         self.lengths[slot] = 0
         self._reserved[slot] = 0
+        if self.obs is not None:
+            if freed:
+                self.obs.registry.counter(
+                    "kvpool_blocks_released_total").inc(freed)
+            self.obs.registry.gauge("kvpool_free_blocks").set(len(self.free))
 
     def reclaim(self, blocks: Sequence[int]) -> None:
         """Return idle cached blocks to the free list (prefix-cache
         eviction path).  Reclaiming a block a slot still references is a
         bug — the cache must only evict refcount-0 entries."""
+        n = 0
         for blk in blocks:
             assert self.refcount[blk] == 0, \
                 f"reclaim of live shared block {blk} (refcount {self.refcount[blk]})"
             assert blk not in self.free, f"double-free of block {blk}"
             self.free.append(blk)
+            n += 1
+        if self.obs is not None and n:
+            self.obs.registry.counter("kvpool_blocks_released_total").inc(n)
+            self.obs.registry.gauge("kvpool_free_blocks").set(len(self.free))
 
     # ------------------------------------------------------------------
     # Invariants (exercised by tests after every admit/step/release)
@@ -575,6 +594,9 @@ class KVPool:
             self.paged, self.state = paged, state
             return logits, new_lengths
 
+        # expose the inner jit so the profiler (repro.obs.profile) can
+        # watch this tick's compile cache through the closure
+        run._jitted = jitted
         return run
 
     def build_step(self, decode_fn: Callable) -> Callable:

@@ -80,10 +80,14 @@ class PrefixCache:
     """
 
     def __init__(self, pool: KVPool, sig: str = "",
-                 capacity: Optional[int] = None):
+                 capacity: Optional[int] = None, obs=None):
         assert pool.has_paged, "prefix sharing needs a paged cache"
         assert capacity is None or capacity >= 0, capacity
         self.pool = pool
+        # Optional observability bundle (repro.obs.Observability): mirrors
+        # the deterministic counters below into the metrics registry and
+        # emits eviction trace events.  None = standalone cache.
+        self.obs = obs
         self.t = pool.block_tokens
         self.sig = sig.encode()
         # max indexed blocks retained (ServeConfig.max_cached_blocks);
@@ -140,6 +144,9 @@ class PrefixCache:
             blocks.append(node.block)
         if blocks:
             self.hits += 1
+        if self.obs is not None:
+            self.obs.registry.counter("prefix_cache_lookups_total").inc(
+                outcome="hit" if blocks else "miss")
         return Hit(blocks=blocks)
 
     def unpin(self, hit: Hit) -> None:
@@ -175,6 +182,9 @@ class PrefixCache:
                 if parent is not None:
                     parent.children[key] = node
                 self.inserts += 1
+                if self.obs is not None:
+                    self.obs.registry.counter(
+                        "prefix_cache_inserts_total").inc()
             self._touch(node)
             parent = node
         self._enforce_capacity()
@@ -194,6 +204,7 @@ class PrefixCache:
             self._drop(victim)
             self.pool.reclaim([victim.block])
             self.evictions_capacity += 1
+            self._note_eviction(victim.block, "capacity")
 
     # ------------------------------------------------------------------
     # Pool protocol (duck-typed hook: see KVPool.prefix)
@@ -241,8 +252,18 @@ class PrefixCache:
             self._drop(victim)
             self.pool.reclaim([victim.block])
             self.evictions += 1
+            self._note_eviction(victim.block, "pressure")
             done += 1
         return done
+
+    def _note_eviction(self, block: int, reason: str) -> None:
+        if self.obs is None:
+            return
+        self.obs.registry.counter("prefix_cache_evictions_total").inc(
+            reason=reason)
+        if self.obs.tracer is not None:
+            self.obs.tracer.event("prefix_evict", cat="prefixcache",
+                                  block=block, reason=reason)
 
     def flush(self) -> None:
         """Drop the whole index.  Idle blocks go back to the free list;

@@ -40,12 +40,84 @@ static engine's shared per-step stream.
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import deque
 from typing import Callable, Dict, List, Optional
 
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs import ENGINE_PID, REQUEST_PID, Observability
+from repro.obs.profile import register_profile_metrics
+
+
+def register_serving_metrics(reg) -> None:
+    """Declare the full serving metric schema up front.
+
+    Registration is feature-independent — prefix-cache and spec-decode
+    metrics exist (at zero) even when those features are off — so the
+    exported name/kind/label schema is identical across every
+    ``ServeConfig`` combination (frozen by the schema test).
+    """
+    c = reg.counter
+    c("serve_requests_submitted_total", "Requests accepted by submit()")
+    c("serve_requests_finished_total", "Requests run to completion")
+    c("serve_decode_steps_total",
+      "Batched decode ticks (verify steps under spec decode)")
+    c("serve_busy_slot_steps_total", "Slot-ticks that decoded a live request")
+    c("serve_tokens_generated_total", "Tokens emitted across all requests")
+    c("serve_host_syncs_total", "Device->host transfers on the decode path")
+    c("serve_prefill_tokens_computed_total",
+      "Prompt positions actually prefilled")
+    c("serve_prefill_tokens_saved_total",
+      "Prompt positions served from the prefix cache")
+    c("serve_blocks_shared_total", "Cached blocks mapped into slot tables")
+    c("serve_cow_copies_total",
+      "Copy-on-write block copies (fully-cached prompts)")
+    c("serve_spec_windows_total", "Draft-k/verify-1 windows run")
+    c("serve_spec_draft_tokens_total", "Draft tokens proposed")
+    c("serve_spec_accepted_tokens_total", "Draft tokens the target confirmed")
+    c("kvpool_blocks_allocated_total", "KV blocks taken off the free list")
+    c("kvpool_blocks_released_total", "KV blocks returned to the free list")
+    c("prefix_cache_lookups_total", "Prefix-cache lookups by outcome",
+      labels=("outcome",))
+    c("prefix_cache_inserts_total", "Prompt-block runs indexed by the cache")
+    c("prefix_cache_evictions_total", "Cached blocks evicted by cause",
+      labels=("reason",))
+    reg.gauge("serve_queue_depth", "Requests waiting for admission")
+    reg.gauge("serve_active_slots", "Slots decoding a live request")
+    reg.gauge("kvpool_free_blocks", "KV blocks on the pool free list")
+    reg.histogram("serve_queue_wait_seconds", "Submit -> admission wait")
+    reg.histogram("serve_ttft_seconds", "Submit -> first token")
+    reg.histogram("serve_request_latency_seconds", "Submit -> finish")
+    reg.histogram("serve_decode_utilisation",
+                  "Busy-slot fraction per decode step",
+                  buckets=tuple(i / 8 for i in range(1, 9)))
+    reg.histogram("serve_spec_accepted_per_window",
+                  "Accepted draft tokens per slot-window",
+                  buckets=tuple(float(i) for i in range(9)))
+    register_profile_metrics(reg)
+
+
+class _LegacyCounter:
+    """Scheduler counter attribute backed by the metrics registry.
+
+    Preserves the historical plain-int API (``self.decode_steps += 1`` in
+    the step paths, ``eng.scheduler.decode_steps = 0`` in the serving
+    bench's warm-up reset) while the value lives in a registry
+    :class:`~repro.obs.metrics.Counter`, so the legacy ``metrics()`` view
+    and the Prometheus/JSON exports can never disagree.
+    """
+
+    def __init__(self, metric: str):
+        self.metric = metric
+
+    def __get__(self, obj, objtype=None):
+        if obj is None:
+            return self
+        return int(obj.reg.counter(self.metric).value())
+
+    def __set__(self, obj, v):
+        obj.reg.counter(self.metric)._set(float(v))
 
 
 @dataclasses.dataclass
@@ -95,46 +167,47 @@ class ContinuousScheduler:
     injectable so tests stay deterministic.
     """
 
-    def __init__(self, engine, clock: Callable[[], float] = time.perf_counter):
+    # Aggregate counters: the historical int attributes, now registry-backed
+    # (see _LegacyCounter).  decode_steps counts verify steps under spec
+    # decode; host_syncs counts device->host transfers on the decode path;
+    # the prefix/spec groups stay zero when those features are off.
+    decode_steps = _LegacyCounter("serve_decode_steps_total")
+    busy_slot_steps = _LegacyCounter("serve_busy_slot_steps_total")
+    tokens_generated = _LegacyCounter("serve_tokens_generated_total")
+    host_syncs = _LegacyCounter("serve_host_syncs_total")
+    prefill_tokens_computed = _LegacyCounter(
+        "serve_prefill_tokens_computed_total")
+    prefill_tokens_saved = _LegacyCounter("serve_prefill_tokens_saved_total")
+    blocks_shared = _LegacyCounter("serve_blocks_shared_total")
+    cow_copies = _LegacyCounter("serve_cow_copies_total")
+    spec_windows = _LegacyCounter("serve_spec_windows_total")
+    spec_draft_tokens = _LegacyCounter("serve_spec_draft_tokens_total")
+    spec_accepted_tokens = _LegacyCounter("serve_spec_accepted_tokens_total")
+
+    def __init__(self, engine, clock: Optional[Callable[[], float]] = None):
         self.engine = engine
-        self.clock = clock
+        self.obs: Observability = getattr(engine, "obs", None) or Observability()
+        self.reg = self.obs.registry
+        self.tracer = self.obs.tracer
+        self.clock = clock or self.obs.clock
+        register_serving_metrics(self.reg)
         self.queue: deque[Request] = deque()
         self.slot_req: List[Optional[Request]] = [None] * engine.pool.n_slots
         self.slot_next: List[Optional[np.ndarray]] = [None] * engine.pool.n_slots
         self.done: List[Request] = []
         self._next_rid = 0
-        # aggregate counters
-        self.decode_steps = 0
-        self.busy_slot_steps = 0
-        self.tokens_generated = 0
-        self.host_syncs = 0  # device->host transfers on the decode path
-        # prefix-sharing accounting (all zero when the cache is disabled)
-        self.prefill_tokens_computed = 0  # prompt positions actually prefilled
-        self.prefill_tokens_saved = 0  # prompt positions served from cache
-        self.blocks_shared = 0  # cached blocks mapped into slot tables
-        self.cow_copies = 0  # copy-on-write blocks (fully-cached prompts)
-        # speculative decoding (all zero when spec_decode is off)
-        self.spec_windows = 0  # draft-k/verify-1 windows run
-        self.spec_draft_tokens = 0  # draft tokens proposed (k per slot-window)
-        self.spec_accepted_tokens = 0  # draft tokens the target confirmed
+        self._spans: Dict[int, Dict[str, object]] = {}  # rid -> live spans
+        if self.tracer is not None:
+            self.tracer.label(ENGINE_PID, 0, "scheduler")
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
 
     def reset_metrics(self) -> None:
-        """Zero every aggregate counter and drop finished-request records
-        (bench warm-up isolation).  Pool and prefix-cache contents are
-        untouched — flush the prefix cache separately for a cold run."""
-        self.decode_steps = 0
-        self.busy_slot_steps = 0
-        self.tokens_generated = 0
-        self.host_syncs = 0
-        self.prefill_tokens_computed = 0
-        self.prefill_tokens_saved = 0
-        self.blocks_shared = 0
-        self.cow_copies = 0
-        self.spec_windows = 0
-        self.spec_draft_tokens = 0
-        self.spec_accepted_tokens = 0
+        """Zero every aggregate counter and histogram series and drop
+        finished-request records (bench warm-up isolation).  Pool and
+        prefix-cache contents are untouched — flush the prefix cache
+        separately for a cold run."""
+        self.reg.reset()
         self.done = []
         self._t_first = None
         self._t_last = None
@@ -181,6 +254,21 @@ class ContinuousScheduler:
         req.submit_t = self.clock()
         req.status = "queued"
         self.queue.append(req)
+        self.reg.counter("serve_requests_submitted_total").inc()
+        self.reg.gauge("serve_queue_depth").set(len(self.queue))
+        if self.tracer is not None:
+            tr = self.tracer
+            tr.label(REQUEST_PID, req.rid, f"request {req.rid}")
+            self._spans[req.rid] = {
+                "request": tr.begin(
+                    "request", pid=REQUEST_PID, tid=req.rid, t=req.submit_t,
+                    rid=req.rid, prompt_tokens=req.prompt_tokens,
+                    max_new=req.max_new_tokens),
+                "queue": tr.begin("queue", pid=REQUEST_PID, tid=req.rid,
+                                  t=req.submit_t),
+            }
+            tr.event("enqueue", pid=REQUEST_PID, tid=req.rid, t=req.submit_t,
+                     rid=req.rid)
         return req
 
     # ------------------------------------------------------------------
@@ -199,7 +287,8 @@ class ContinuousScheduler:
     def _emit(self, slot: int, req: Request, tok: np.ndarray) -> bool:
         """Record one sampled token; returns True when the request stops."""
         now = self.clock()
-        if req.first_token_t is None:
+        first = req.first_token_t is None
+        if first:
             req.first_token_t = now
         req.tokens.append(tok)
         self.tokens_generated += 1
@@ -207,6 +296,13 @@ class ContinuousScheduler:
         done = len(req.tokens) >= req.max_new_tokens or (
             req.stop_token is not None and np.ndim(tok) == 0
             and int(tok) == req.stop_token)
+        spans = self._spans.get(req.rid) if self.tracer is not None else None
+        if spans is not None:
+            if first:
+                spans["decode"] = self.tracer.begin(
+                    "decode", pid=REQUEST_PID, tid=req.rid, t=now)
+            self.tracer.event("token", pid=REQUEST_PID, tid=req.rid, t=now,
+                              i=len(req.tokens), done=done)
         if req.on_token is not None:
             req.on_token(req, tok, done)
         if done:
@@ -216,6 +312,19 @@ class ContinuousScheduler:
             self.pool.release(slot)
             self.slot_req[slot] = None
             self.slot_next[slot] = None
+            self.reg.counter("serve_requests_finished_total").inc()
+            self.reg.histogram("serve_queue_wait_seconds").observe(
+                req.queue_wait_s)
+            self.reg.histogram("serve_ttft_seconds").observe(req.ttft_s)
+            self.reg.histogram("serve_request_latency_seconds").observe(
+                req.finish_t - req.submit_t)
+            self.reg.gauge("serve_active_slots").set(self.n_active)
+            if spans is not None:
+                self.tracer.end(spans["decode"], t=now,
+                                new_tokens=len(req.tokens))
+                self.tracer.end(spans["request"], t=now,
+                                new_tokens=len(req.tokens))
+                del self._spans[req.rid]
         else:
             self.slot_next[slot] = np.asarray(tok, np.int32)
         return done
@@ -260,6 +369,16 @@ class ContinuousScheduler:
             req.admit_t = self.clock()
             if self._t_first is None:
                 self._t_first = req.admit_t
+            self.reg.gauge("serve_queue_depth").set(len(self.queue))
+            spans = (self._spans.get(req.rid)
+                     if self.tracer is not None else None)
+            if spans is not None:
+                self.tracer.end(spans.pop("queue"), t=req.admit_t)
+                self.tracer.event("admit", pid=REQUEST_PID, tid=req.rid,
+                                  t=req.admit_t, slot=slot)
+                spans["prefill"] = self.tracer.begin(
+                    "prefill", pid=REQUEST_PID, tid=req.rid, t=req.admit_t,
+                    prompt_tokens=req.prompt_tokens, cached_tokens=start)
             if start > 0:
                 last_logits, cache, n_tokens = self.engine.prefill_shared(
                     req.prompt, start, hit.blocks)
@@ -278,6 +397,11 @@ class ContinuousScheduler:
             self.prefill_tokens_saved += start
             self.blocks_shared += len(mapped)
             self.cow_copies += n_cow
+            self.reg.gauge("serve_active_slots").set(self.n_active)
+            if spans is not None:
+                self.tracer.end(spans["prefill"], computed=n_tokens - start,
+                                saved=start, blocks_shared=len(mapped),
+                                cow_copies=n_cow)
             tok = self._sample(last_logits, req)
             self._emit(slot, req, tok)  # may stop immediately (max_new == 1)
             admitted += 1
@@ -305,6 +429,9 @@ class ContinuousScheduler:
             self._step_window(active, w)
             return True
         pool = self.pool
+        tick_span = (self.tracer.begin("decode_tick", pid=ENGINE_PID, tid=0,
+                                       active=len(active))
+                     if self.tracer is not None else None)
         for s in active:
             pool.ensure(s)
         tokens = self._token_buf()
@@ -317,6 +444,8 @@ class ContinuousScheduler:
         logits, _ = self.engine.pool_step(tokens, pool.lengths, pool.tables)
         self.decode_steps += 1
         self.busy_slot_steps += len(active)
+        self.reg.histogram("serve_decode_utilisation").observe(
+            len(active) / pool.n_slots)
         # sample on device: only the token ids cross to the host (the full
         # (n_slots, V) logits never materialize host-side)
         toks = np.asarray(self.engine.sample_slots(logits, rids, counts))
@@ -325,6 +454,8 @@ class ContinuousScheduler:
             req = self.slot_req[s]
             pool.advance(s)  # the decode wrote this slot's KV at `length`
             self._emit(s, req, toks[s].astype(np.int32))
+        if tick_span is not None:
+            self.tracer.end(tick_span)
         return True
 
     def _step_window(self, active: List[int], w: int) -> None:
@@ -334,6 +465,9 @@ class ContinuousScheduler:
         still fire in token order per request."""
         pool = self.pool
         n = pool.n_slots
+        win_span = (self.tracer.begin("decode_window", pid=ENGINE_PID, tid=0,
+                                      w=w, active=len(active))
+                    if self.tracer is not None else None)
         tokens = self._token_buf()
         counts = np.zeros((n,), np.int32)
         rids = np.zeros((n,), np.int32)
@@ -362,11 +496,15 @@ class ContinuousScheduler:
             if not emit_buf[i].any():
                 break  # the device loop exited early (all slots done)
             self.decode_steps += 1
+            self.reg.histogram("serve_decode_utilisation").observe(
+                int(emit_buf[i].sum()) / n)
             for s in active:
                 if emit_buf[i, s]:
                     pool.advance(s)
                     self.busy_slot_steps += 1
                     self._emit(s, self.slot_req[s], tok_buf[i, s])
+        if win_span is not None:
+            self.tracer.end(win_span)
 
     def _step_spec(self, active: List[int]) -> None:
         """One draft-k/verify-1 speculative window (``spec_decode``).
@@ -382,6 +520,9 @@ class ContinuousScheduler:
         non-spec path — draft quality only moves the acceptance rate."""
         pool = self.pool
         k = int(self.engine.scfg.draft_k)
+        spec_span = (self.tracer.begin("spec_window", pid=ENGINE_PID, tid=0,
+                                       k=k, active=len(active))
+                     if self.tracer is not None else None)
         tokens = self._token_buf()
         for s in active:
             tokens[s] = self.slot_next[s]
@@ -396,6 +537,8 @@ class ContinuousScheduler:
         self.decode_steps += 1  # one target verify step per window
         self.spec_windows += 1
         self.busy_slot_steps += len(active)
+        self.reg.histogram("serve_decode_utilisation").observe(
+            len(active) / pool.n_slots)
         for s in active:
             req = self.slot_req[s]
             g, t = drafted[s], target[s]
@@ -404,6 +547,7 @@ class ContinuousScheduler:
                 acc += 1
             self.spec_draft_tokens += k
             self.spec_accepted_tokens += acc
+            self.reg.histogram("serve_spec_accepted_per_window").observe(acc)
             # rollback: truncate draft-appended K/V to the pre-window fill
             # (free on paged storage — the verify pass already overwrote
             # positions [n0, n0+k] with target KV, and re-advancing below
@@ -413,17 +557,56 @@ class ContinuousScheduler:
                 pool.advance(s)
                 if self._emit(s, req, np.int32(tok)):
                     break  # stop token / max_new mid-window: drop the rest
+        if spec_span is not None:
+            self.tracer.end(spec_span)
 
     def drain(self, max_steps: Optional[int] = None) -> List[Request]:
+        """Run to completion.  With ``ServeConfig(drain_timeout_s=...)`` a
+        clock-driven watchdog raises once no token, finish, or admission
+        has happened for that long — naming the stuck requests and their
+        last trace span — instead of spinning on a wedged slot forever."""
         steps = 0
+        timeout = getattr(self.engine.scfg, "drain_timeout_s", None)
+        last_state = (self.tokens_generated, len(self.done), self.n_active,
+                      len(self.queue))
+        last_progress_t = self.clock()
         while self.queue or self.n_active:
             progressed = self.step()
             if not progressed and (self.queue or self.n_active):
-                raise RuntimeError("scheduler stalled with pending work")
+                raise self._stall_error("scheduler stalled with pending work")
+            if timeout is not None:
+                state = (self.tokens_generated, len(self.done), self.n_active,
+                         len(self.queue))
+                now = self.clock()
+                if state != last_state:
+                    last_state, last_progress_t = state, now
+                elif now - last_progress_t > timeout:
+                    raise self._stall_error(
+                        f"scheduler stalled with pending work: no progress "
+                        f"for {now - last_progress_t:.2f}s "
+                        f"(drain_timeout_s={timeout})")
             steps += 1
             if max_steps is not None and steps >= max_steps:
                 break
         return self.done
+
+    def _stall_error(self, reason: str) -> RuntimeError:
+        """Stall diagnostics: every stuck request's id, status, token
+        progress, and (when tracing is on) its last completed span."""
+        stuck = [(r, f"active in slot {s}")
+                 for s, r in enumerate(self.slot_req) if r is not None]
+        stuck += [(r, "queued") for r in self.queue]
+        lines = [reason]
+        for req, where in stuck:
+            desc = (f"  r{req.rid}: {where}, status={req.status}, "
+                    f"{len(req.tokens)}/{req.max_new_tokens} tokens")
+            if self.tracer is not None:
+                last = self.tracer.last_record(REQUEST_PID, req.rid)
+                if last is not None:
+                    desc += (f", last span {last['name']!r} "
+                             f"at t={last['t0']:.6f}")
+            lines.append(desc)
+        return RuntimeError("\n".join(lines))
 
     # ------------------------------------------------------------------
     def metrics(self) -> Dict:
@@ -556,11 +739,14 @@ def run_continuous_trace(engine, *, n_requests: int = 8, prompt_len: int = 12,
             print(f"[trace] r{req.rid} token {len(req.tokens)}: {tok}"
                   f"{' (done)' if done else ''}")
         trace[0].on_token = cb
-    t0 = time.perf_counter()
+    # wall time through the scheduler's injectable clock, so tests and the
+    # trace layer can fake time deterministically (satellite of ISSUE 9)
+    clock = engine.scheduler.clock
+    t0 = clock()
     for r in trace:
         engine.scheduler.submit(r)
     engine.drain()
-    wall = time.perf_counter() - t0
+    wall = clock() - t0
     m = engine.scheduler.metrics()
     a = m["aggregate"]
     a["wall_s"] = wall
@@ -574,7 +760,8 @@ def run_continuous_trace(engine, *, n_requests: int = 8, prompt_len: int = 12,
             "n/a" if v is None else f"{v * scale:.2f}{unit}")
         print(f"[continuous] {a['n_requests']} requests, "
               f"{a['tokens_generated']} tokens in {wall:.2f}s "
-              f"({a['tokens_generated'] / wall:.1f} tok/s); decode-slot "
+              f"({a['tokens_generated'] / max(wall, 1e-9):.1f} tok/s); "
+              f"decode-slot "
               f"utilisation {fmt(a['slot_utilisation'])} vs static baseline "
               f"{a['static_baseline_utilisation']:.2f}; mean TTFT "
               f"{fmt(a['mean_ttft_s'], 1e3, ' ms')}, mean queue wait "

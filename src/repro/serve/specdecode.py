@@ -290,6 +290,10 @@ def build_spec_window(engine):
     tick = engine._tick_fn
     verify = engine._verify_tick
     assert verify is not None, "engine built without a verify tick"
+    obs = getattr(engine, "obs", None)
+    if obs is not None and obs.tracer is not None:
+        obs.tracer.event("spec_window_build", cat="serve", k=k,
+                         slots=engine.pool.n_slots)
 
     def window(params, draft_params, tokens, lengths, tables, paged, state):
         toks, fill = tokens, lengths

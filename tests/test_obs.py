@@ -1,0 +1,478 @@
+"""Observability subsystem tests: metrics registry, tracer, profiler.
+
+The acceptance contract of ``repro.obs``:
+
+  * the metrics registry is typed (counter/gauge/histogram), label-checked,
+    and exports deterministically to Prometheus text and JSON;
+  * the exported metric schema (names, kinds, label sets) is identical
+    across every ServeConfig feature combination — prefix cache, spec
+    decode, and in-graph windows add *values*, never new schema;
+  * ``ObsConfig(enabled=False)`` (the default) is invisible: emitted
+    tokens and the legacy ``scheduler.metrics()`` view are bit-identical
+    to an unobserved engine, and ``obs.wrap`` is the identity;
+  * with tracing on, a drained engine exports a valid Chrome trace — one
+    complete ``request`` root per request lane with properly nested
+    queue/prefill/decode children and monotonic token instants;
+  * the drain watchdog (``ServeConfig(drain_timeout_s=...)``) raises with
+    the stuck request ids and their last span instead of spinning;
+  * the profiler counts jit compiles per site and hears autotune events.
+
+Everything time-dependent runs against a fake injectable clock.
+"""
+import gc
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import api
+from repro.models.registry import get_arch
+from repro.obs import ObsConfig, Observability, validate_chrome_trace
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import ENGINE_PID, REQUEST_PID, Tracer
+from repro.quant.policy import QuantPolicy, RotationPlan, RotationSpec, SiteRule
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.scheduler import run_continuous_trace, synthetic_trace
+
+
+class FakeClock:
+    """Deterministic monotonic clock: advances ``dt`` per call."""
+
+    def __init__(self, t0: float = 1000.0, dt: float = 0.125):
+        self.t = t0
+        self.dt = dt
+
+    def __call__(self) -> float:
+        self.t += self.dt
+        return self.t
+
+
+@pytest.fixture(scope="module")
+def dense():
+    """(arch, float params) for the dense reduced bench model."""
+    arch = get_arch("smollm-135m", reduced=True)
+    return arch, arch.init(jax.random.PRNGKey(0), jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def quantized(dense):
+    """W4 RTN GSR QuantizedModel — roomy enough for a spec-decode draft."""
+    arch, params = dense
+    policy = QuantPolicy(
+        name="w4-rtn", rules=(SiteRule(pattern="*", bits=4, group=32,
+                                       method="rtn"),),
+        rotation=RotationPlan(r1=RotationSpec(kind="GSR", group=32)),
+        act_bits=16, kv_bits=16)
+    return api.quantize(arch, params, policy)
+
+
+def _prompts(cfg, b, s, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab, size=(b, s)).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry units
+# ---------------------------------------------------------------------------
+
+
+def test_counter_gauge_histogram_basics():
+    reg = MetricsRegistry()
+    c = reg.counter("c_total", "a counter", labels=("k",))
+    c.inc(k="a")
+    c.inc(2, k="a")
+    c.inc(k="b")
+    assert c.value(k="a") == 3 and c.value(k="b") == 1
+    with pytest.raises(ValueError):
+        c.inc(-1, k="a")
+    with pytest.raises(ValueError):
+        c.inc(wrong="a")  # label name mismatch
+    g = reg.gauge("g")
+    g.set(5)
+    g.dec(2)
+    assert g.value() == 3
+    h = reg.histogram("h_seconds", buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(0.5)
+    h.observe(99.0)
+    assert h.count() == 3 and h.sum() == pytest.approx(99.55)
+
+
+def test_registry_idempotent_and_mismatch():
+    reg = MetricsRegistry()
+    a = reg.counter("x_total", "help", labels=("k",))
+    assert reg.counter("x_total", "help", labels=("k",)) is a
+    with pytest.raises(ValueError):
+        reg.gauge("x_total", "now a gauge")
+    with pytest.raises(ValueError):
+        reg.counter("x_total", "same kind, new labels", labels=("other",))
+
+
+def test_reset_keeps_schema():
+    reg = MetricsRegistry()
+    reg.counter("a_total", "a").inc()
+    reg.histogram("b_seconds", "b").observe(0.5)
+    before = reg.schema()
+    reg.reset()
+    assert reg.schema() == before
+    assert reg.counter("a_total").value() == 0
+    assert reg.get("b_seconds").count() == 0
+
+
+def test_prometheus_text_format():
+    reg = MetricsRegistry()
+    reg.counter("req_total", "requests", labels=("outcome",)).inc(
+        3, outcome="hit")
+    reg.histogram("lat_seconds", "latency", buckets=(0.1, 1.0)).observe(0.5)
+    text = reg.to_prometheus()
+    assert "# HELP req_total requests" in text
+    assert "# TYPE req_total counter" in text
+    assert 'req_total{outcome="hit"} 3' in text
+    # histogram: cumulative buckets with +Inf, then _sum/_count
+    assert 'lat_seconds_bucket{le="0.1"} 0' in text
+    assert 'lat_seconds_bucket{le="1"} 1' in text
+    assert 'lat_seconds_bucket{le="+Inf"} 1' in text
+    assert "lat_seconds_sum 0.5" in text
+    assert "lat_seconds_count 1" in text
+
+
+def test_json_export_deterministic(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("b_total").inc()
+    reg.counter("a_total", labels=("k",)).inc(k="z")
+    reg.counter("a_total", labels=("k",)).inc(k="a")
+    doc = reg.to_json()
+    assert list(doc) == ["a_total", "b_total"]  # sorted names
+    labels = [s["labels"]["k"] for s in doc["a_total"]["series"]]
+    assert labels == ["a", "z"]  # sorted label tuples
+    p = reg.export(str(tmp_path / "m.json"))
+    assert json.load(open(p)) == doc
+    prom = reg.export(str(tmp_path / "m.prom"))
+    assert open(prom).read() == reg.to_prometheus()
+
+
+# ---------------------------------------------------------------------------
+# Tracer units + validator
+# ---------------------------------------------------------------------------
+
+
+def _request_tree(tr, rid, t0):
+    """Record one well-formed request lifecycle starting at ``t0``."""
+    tr.label(REQUEST_PID, rid, f"request {rid}")
+    root = tr.begin("request", pid=REQUEST_PID, tid=rid, t=t0)
+    q = tr.begin("queue", pid=REQUEST_PID, tid=rid, t=t0)
+    tr.end(q, t=t0 + 1)
+    p = tr.begin("prefill", pid=REQUEST_PID, tid=rid, t=t0 + 1)
+    tr.end(p, t=t0 + 2)
+    d = tr.begin("decode", pid=REQUEST_PID, tid=rid, t=t0 + 2)
+    tr.event("token", pid=REQUEST_PID, tid=rid, t=t0 + 3, i=1)
+    tr.end(d, t=t0 + 4)
+    tr.end(root, t=t0 + 4)
+
+
+def test_tracer_chrome_roundtrip():
+    tr = Tracer(clock=FakeClock())
+    with tr.span("decode_tick", pid=ENGINE_PID, tid=0, active=2):
+        pass
+    _request_tree(tr, 0, 100.0)
+    _request_tree(tr, 1, 102.0)
+    doc = tr.to_chrome()
+    stats = validate_chrome_trace(doc)
+    assert stats["requests"] == 2
+    assert stats["spans"] == 9  # 1 engine + 2 x 4 request spans
+    # timestamps are rebased to the earliest record, in microseconds
+    xs = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+    assert min(e["ts"] for e in xs) == 0.0
+
+
+def test_tracer_ring_bounds():
+    tr = Tracer(clock=FakeClock(), capacity=2)
+    for i in range(3):
+        tr.event(f"e{i}")
+    assert len(tr) == 2 and tr.dropped == 1
+    assert tr.to_chrome()["otherData"]["dropped_records"] == 1
+
+
+def test_tracer_jsonl_export(tmp_path):
+    tr = Tracer(clock=FakeClock())
+    _request_tree(tr, 0, 10.0)
+    p = tr.export(str(tmp_path / "t.jsonl"))
+    lines = [json.loads(l) for l in open(p).read().splitlines()]
+    assert len(lines) == len(tr.records())
+    assert {l["ph"] for l in lines} <= {"X", "i"}
+
+
+def test_validator_rejects_malformed():
+    tr = Tracer(clock=FakeClock())
+    # missing decode child
+    tr.label(REQUEST_PID, 0, "request 0")
+    root = tr.begin("request", pid=REQUEST_PID, tid=0, t=0.0)
+    q = tr.begin("queue", pid=REQUEST_PID, tid=0, t=0.0)
+    tr.end(q, t=1.0)
+    p = tr.begin("prefill", pid=REQUEST_PID, tid=0, t=1.0)
+    tr.end(p, t=2.0)
+    tr.end(root, t=2.0)
+    with pytest.raises(ValueError, match="missing 'decode'"):
+        validate_chrome_trace(tr.to_chrome())
+    # two request roots on one lane
+    tr2 = Tracer(clock=FakeClock())
+    _request_tree(tr2, 0, 0.0)
+    extra = tr2.begin("request", pid=REQUEST_PID, tid=0, t=10.0)
+    tr2.end(extra, t=11.0)
+    with pytest.raises(ValueError, match="exactly one 'request'"):
+        validate_chrome_trace(tr2.to_chrome())
+    # engine spans only: no request lanes at all
+    tr3 = Tracer(clock=FakeClock())
+    s = tr3.begin("decode_tick")
+    tr3.end(s)
+    with pytest.raises(ValueError, match="no request spans"):
+        validate_chrome_trace(tr3.to_chrome())
+    with pytest.raises(ValueError, match="traceEvents"):
+        validate_chrome_trace({"nope": 1})
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: traced engine produces a valid span tree + histograms
+# ---------------------------------------------------------------------------
+
+
+def test_traced_engine_valid_chrome_trace(dense):
+    arch, params = dense
+    clock = FakeClock()
+    eng = ServeEngine(arch, params, ServeConfig(
+        max_seq=32, batch_slots=2, block_tokens=8,
+        obs=ObsConfig(enabled=True, clock=clock)))
+    n = 3
+    for r in synthetic_trace(arch.config, n, seed=3, prompt_len=6,
+                             max_new_low=2, max_new_high=4):
+        eng.scheduler.submit(r)
+    eng.drain()
+    stats = validate_chrome_trace(eng.obs.tracer.to_chrome())
+    assert stats["requests"] == n
+    reg = eng.obs.registry
+    assert reg.get("serve_ttft_seconds").count() == n
+    assert reg.get("serve_queue_wait_seconds").count() == n
+    assert reg.get("serve_request_latency_seconds").count() == n
+    assert reg.get("serve_decode_utilisation").count() > 0
+    text = reg.to_prometheus()
+    assert f"serve_ttft_seconds_count {n}" in text
+    assert "serve_decode_utilisation_bucket" in text
+    # every TTFT came off the fake clock: positive, multiple of dt
+    for r in eng.scheduler.done:
+        assert r.ttft_s > 0
+        assert (r.ttft_s / clock.dt) == pytest.approx(
+            round(r.ttft_s / clock.dt))
+
+
+def test_trace_export_and_cli(dense, tmp_path, capsys):
+    from repro.obs.trace import _main
+
+    arch, params = dense
+    eng = ServeEngine(arch, params, ServeConfig(
+        max_seq=32, batch_slots=2, block_tokens=8,
+        obs=ObsConfig(enabled=True, clock=FakeClock())))
+    eng.generate(_prompts(arch.config, 2, 6), 3)
+    path = eng.obs.export_trace(str(tmp_path / "trace.json"))
+    assert _main([path]) == 0
+    assert "[trace] ok:" in capsys.readouterr().out
+    # corrupting the trace flips the CLI to failure
+    doc = json.load(open(path))
+    doc["traceEvents"] = [e for e in doc["traceEvents"]
+                          if e.get("name") != "decode"]
+    bad = tmp_path / "bad.json"
+    json.dump(doc, open(bad, "w"))
+    assert _main([str(bad)]) == 1
+    assert "INVALID" in capsys.readouterr().out
+
+
+def test_export_trace_requires_enabled(dense):
+    arch, params = dense
+    eng = ServeEngine(arch, params, ServeConfig(max_seq=32, batch_slots=2,
+                                                block_tokens=8))
+    with pytest.raises(RuntimeError, match="tracing is disabled"):
+        eng.obs.export_trace("/tmp/never-written.json")
+
+
+# ---------------------------------------------------------------------------
+# Schema stability across feature combos
+# ---------------------------------------------------------------------------
+
+COMBOS = {
+    "baseline": {},
+    "prefix_cache": {"prefix_cache": True},
+    "spec_decode": {"spec_decode": True, "draft_k": 2},
+    "window": {"steps_per_sync": 4},
+}
+
+
+@pytest.mark.parametrize("combo", sorted(COMBOS))
+def test_metrics_schema_stable_across_combos(quantized, combo):
+    """Feature flags change metric *values*, never the exported schema:
+    names, kinds, and label sets are declared up front and identical
+    across every ServeConfig combination."""
+    qm = quantized
+    kw = COMBOS[combo]
+    draft = api.derive_draft(qm, "draft-w3-rtn") if kw.get("spec_decode") \
+        else None
+    eng = qm.serve(ServeConfig(max_seq=48, batch_slots=2, block_tokens=8,
+                               obs=ObsConfig(enabled=True), **kw),
+                   draft=draft)
+    eng.generate(_prompts(qm.config, 3, 8), 4)
+    base = qm.serve(ServeConfig(max_seq=48, batch_slots=2, block_tokens=8))
+    base.scheduler  # the scheduler declares the serving schema on build
+    schema = eng.obs.registry.schema()
+    assert schema == base.obs.registry.schema()
+    # the serving metric families are all present, populated or not
+    for name in ("serve_ttft_seconds", "prefix_cache_lookups_total",
+                 "serve_spec_windows_total", "serve_host_syncs_total",
+                 "jit_compiles_total"):
+        assert name in schema, name
+    # exporters enumerate the same registered names in both engines
+    assert eng.obs.registry.names() == base.obs.registry.names()
+
+
+# ---------------------------------------------------------------------------
+# enabled=False is invisible
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_obs_bit_identical(dense):
+    arch, params = dense
+    prompts = _prompts(arch.config, 3, 8)
+
+    def run(obs_cfg):
+        eng = ServeEngine(arch, params, ServeConfig(
+            max_seq=32, batch_slots=2, block_tokens=8, obs=obs_cfg))
+        out = eng.generate(prompts, 5)
+        return out, eng
+
+    out_off, eng_off = run(ObsConfig())  # the default: disabled
+    out_on, eng_on = run(ObsConfig(enabled=True))
+    np.testing.assert_array_equal(out_off["tokens"], out_on["tokens"])
+    m_off, m_on = eng_off.scheduler.metrics(), eng_on.scheduler.metrics()
+    assert set(m_off) == set(m_on)
+    assert set(m_off["aggregate"]) == set(m_on["aggregate"])
+    for key in ("n_requests", "decode_steps", "busy_slot_steps",
+                "tokens_generated", "host_syncs", "prefill_tokens_computed",
+                "spec_windows", "blocks_shared"):
+        assert m_off["aggregate"][key] == m_on["aggregate"][key], key
+    # disabled: no tracer, no profiler, wrap is the identity
+    assert eng_off.obs.tracer is None and eng_off.obs.profiler is None
+    fn = lambda x: x
+    assert eng_off.obs.wrap("anything", fn) is fn
+
+
+def test_legacy_counter_attributes_registry_backed(dense):
+    arch, params = dense
+    eng = ServeEngine(arch, params, ServeConfig(max_seq=32, batch_slots=2,
+                                                block_tokens=8))
+    eng.generate(_prompts(arch.config, 2, 6), 3)
+    sched = eng.scheduler
+    reg = eng.obs.registry
+    assert sched.decode_steps > 0
+    assert sched.decode_steps == int(
+        reg.counter("serve_decode_steps_total").value())
+    sched.decode_steps = 0  # the bench warm-up reset idiom
+    assert reg.counter("serve_decode_steps_total").value() == 0
+    assert sched.metrics()["aggregate"]["decode_steps"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Drain watchdog
+# ---------------------------------------------------------------------------
+
+
+def test_drain_watchdog_names_stuck_requests(dense):
+    arch, params = dense
+    clock = FakeClock(dt=1.0)
+    eng = ServeEngine(arch, params, ServeConfig(
+        max_seq=32, batch_slots=2, block_tokens=8, drain_timeout_s=5.0,
+        obs=ObsConfig(enabled=True, clock=clock)))
+    eng.submit(_prompts(arch.config, 1, 6)[0], 4)
+    # wedge the scheduler: steps report progress but move nothing
+    eng.scheduler.step = lambda: True
+    with pytest.raises(RuntimeError) as e:
+        eng.drain()
+    msg = str(e.value)
+    assert "drain_timeout_s=5.0" in msg
+    assert "r0: queued" in msg
+    assert "0/4 tokens" in msg
+    assert "last span" in msg  # the enqueue record from the tracer
+
+
+def test_drain_no_progress_raises_immediately(dense):
+    arch, params = dense
+    eng = ServeEngine(arch, params, ServeConfig(max_seq=32, batch_slots=2,
+                                                block_tokens=8))
+    eng.submit(_prompts(arch.config, 1, 6)[0], 4)
+    eng.scheduler.step = lambda: False
+    with pytest.raises(RuntimeError, match="stalled with pending work"):
+        eng.drain()
+
+
+# ---------------------------------------------------------------------------
+# Profiler: compile counting + autotune events
+# ---------------------------------------------------------------------------
+
+
+def test_profiler_counts_compiles_and_dispatches():
+    obs = Observability(ObsConfig(enabled=True))
+    f = obs.wrap("unit_site", jax.jit(lambda x: x + 1))
+    f(jnp.zeros((2,), jnp.float32))
+    f(jnp.zeros((2,), jnp.float32))  # cache hit: dispatch, no compile
+    f(jnp.zeros((3,), jnp.float32))  # new shape: recompile
+    reg = obs.registry
+    assert reg.get("jit_compiles_total").value(site="unit_site") == 2
+    assert reg.get("profile_dispatch_seconds").count(site="unit_site") == 3
+    names = [r["name"] for r in obs.tracer.records()]
+    assert names.count("jit_compile") == 2
+
+
+def test_autotune_notifies_subscribed_profiler(tmp_path, monkeypatch):
+    from repro.kernels import autotune
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "at.json"))
+    autotune.reset_cache()
+    obs = Observability(ObsConfig(enabled=True))
+    # CPU backend, no table entry -> the defaults path fires "default"
+    choice = autotune.best("obs_test_op", (4, 4), jnp.float32, {"block": 4})
+    assert choice == {"block": 4}
+    assert obs.registry.get("autotune_lookups_total").value(
+        op="obs_test_op", source="default") == 1
+    # a cached entry resolves as a "table" hit with its measured us
+    autotune.record("obs_test_op", autotune.key_for((4, 4), jnp.float32),
+                    {"block": 8, "us": 12.5})
+    autotune.best("obs_test_op", (4, 4), jnp.float32, {"block": 4})
+    assert obs.registry.get("autotune_lookups_total").value(
+        op="obs_test_op", source="table") == 1
+    assert obs.registry.get("autotune_measure_seconds").count(
+        op="obs_test_op") == 1  # only the table hit carried a timing
+    # dead subscribers are pruned, not called
+    del obs
+    gc.collect()
+    autotune.best("obs_test_op", (4, 4), jnp.float32, {"block": 4})
+    autotune.reset_cache()
+
+
+# ---------------------------------------------------------------------------
+# Clock routing: run_continuous_trace wall time is injectable
+# ---------------------------------------------------------------------------
+
+
+def test_run_continuous_trace_uses_injected_clock(dense, capsys):
+    arch, params = dense
+    clock = FakeClock(t0=5000.0, dt=0.25)
+    eng = ServeEngine(arch, params, ServeConfig(
+        max_seq=32, batch_slots=2, block_tokens=8,
+        obs=ObsConfig(enabled=True, clock=clock)))
+    m = run_continuous_trace(eng, n_requests=2, prompt_len=6, max_new=3,
+                             quiet=True)
+    wall = m["aggregate"]["wall_s"]
+    assert wall > 0
+    # every sample came from the fake clock: an exact multiple of dt
+    assert (wall / clock.dt) == pytest.approx(round(wall / clock.dt))
+    for r in eng.scheduler.done:
+        assert r.submit_t > 5000.0
