@@ -23,7 +23,7 @@ import time
 
 # wall-clock-derived row fields: machine-dependent, stripped from the
 # committed BENCH_serve.json snapshot (results/serve_bench.json keeps them)
-_VOLATILE = ("wall_s", "tokens_per_s", "mean_ttft_s")
+_VOLATILE = ("wall_s", "tokens_per_s", "mean_ttft_s", "overhead_frac")
 
 
 def snapshot() -> None:
@@ -38,13 +38,15 @@ def snapshot() -> None:
             "_comment": "Curated serve_bench --fast snapshot (reference "
             "backend): the repo's diffable serving-perf trajectory. "
             "Refresh: PYTHONPATH=src python -m benchmarks.run --snapshot. "
-            "Wall-clock-derived fields (wall_s, tokens_per_s, mean_ttft_s) "
-            "are stripped; utilisation, decode_steps, host_syncs, "
-            "prefill_tokens_computed/saved, prefix_hit_rate, blocks_shared, "
-            "acceptance_rate, decode_steps_saved, and tokens_sha1 are the "
-            "stable signals (the two prefix rows must share tokens_sha1, "
-            "and the three spec rows likewise - prefix sharing and greedy "
-            "spec decode are both bit-exact).",
+            "Wall-clock-derived fields (wall_s, tokens_per_s, mean_ttft_s, "
+            "overhead_frac) are stripped; utilisation, decode_steps, "
+            "host_syncs, prefill_tokens_computed/saved, prefix_hit_rate, "
+            "blocks_shared, acceptance_rate, decode_steps_saved, "
+            "tokens_match, and tokens_sha1 are the stable signals (the two "
+            "prefix rows must share tokens_sha1, the three spec rows "
+            "likewise, and the faults_off row must report "
+            "tokens_match=true - prefix sharing, greedy spec decode, and "
+            "an armed-but-empty fault plan are all bit-exact).",
             "arch": serve_bench.ARCH, "slots": serve_bench.SLOTS,
             "trace_seed": serve_bench.TRACE_SEED, "n_requests": 24,
             "rows": rows}, f, indent=1)

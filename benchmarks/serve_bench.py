@@ -307,6 +307,49 @@ def obs_replay(qm, backend="reference", n_requests=8, quiet=False,
     return row
 
 
+def _bench_faults(qm, backend="reference", n_requests=16, quiet=False):
+    """Robustness-layer overhead cell: the same trace with ``faults=None``
+    (injection branched out) vs an armed-but-empty ``FaultPlan()``.
+
+    The rows must agree on ``tokens_sha1`` — an armed injector that never
+    fires is bit-identical — and ``overhead_frac`` trends the cost of the
+    per-token predicate checks (volatile on CPU; the contract is the
+    token match, not the timing)."""
+    walls, digests = [], []
+    for faults in (None, api.FaultPlan()):
+        eng = qm.serve(api.ServeConfig(max_seq=MAX_SEQ, batch_slots=SLOTS,
+                                       block_tokens=BLOCK_TOKENS,
+                                       faults=faults),
+                       backend=backend)
+        trace = _trace(qm.config, n_requests)
+        eng.scheduler.submit(_trace(qm.config, 1)[0])
+        eng.drain()
+        eng.scheduler.reset_metrics()
+        t0 = time.perf_counter()
+        for r in trace:
+            eng.scheduler.submit(r)
+        eng.drain()
+        walls.append(time.perf_counter() - t0)
+        eng.pool.check_invariants()
+        digests.append(hashlib.sha1(b"".join(
+            np.ascontiguousarray(r.token_array()).tobytes()
+            for r in trace)).hexdigest()[:16])
+    assert digests[0] == digests[1], \
+        "an armed (empty) fault plan changed the emitted tokens"
+    row = {
+        "name": f"{backend}/faults_off",
+        "tokens_match": True,
+        "tokens_sha1": digests[0],
+        "wall_s": walls[1],
+        "overhead_frac": walls[1] / walls[0] - 1.0,
+    }
+    if not quiet:
+        print(f"  [serve_bench] {row['name']}: armed-plan tokens match "
+              f"(sha1 {digests[0]}), overhead "
+              f"{row['overhead_frac'] * 100:+.1f}% wall")
+    return row
+
+
 def _bench_static(qm, backend, n_requests):
     eng = qm.serve(api.ServeConfig(max_seq=MAX_SEQ, batch_slots=SLOTS),
                    backend=backend)
@@ -355,6 +398,7 @@ def run(quiet: bool = False, fast: bool = False):
                            quiet=quiet))
     rows.extend(prefix_sweep(qm, "reference", n_requests, quiet=quiet))
     rows.extend(spec_sweep(qm, "reference", n_requests, quiet=quiet))
+    rows.append(_bench_faults(qm, "reference", quiet=quiet))
     os.makedirs("results", exist_ok=True)
     rows.append(obs_replay(qm, "reference", quiet=quiet))
     with open("results/serve_bench.json", "w") as f:

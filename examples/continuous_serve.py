@@ -16,7 +16,11 @@ speculative decoding: ``api.derive_draft`` re-rounds the *same* packed
 artifact under a harsher weight-only policy (no second checkpoint), and
 ``ServeConfig(spec_decode=True)`` drafts k tokens per verify call over
 the shared paged pool — fewer target-model invocations, token-identical
-output, acceptance rate in the metrics.  Finishes by showing the
+output, acceptance rate in the metrics.  A fault-replay section then
+poisons one request's logits with a deterministic ``api.FaultPlan`` and
+shows request isolation: the victim fails with status + error, the pool
+reconciles, and every surviving request's tokens are bit-identical to
+the clean run.  Finishes by showing the
 ``generate()`` compatibility wrapper produces the same greedy tokens as
 the static fixed-batch loop it replaced, and dumps the recorded
 observability artifacts — a Chrome trace of every request's
@@ -132,7 +136,37 @@ def main():
                    for a, b in zip(runs[0][0], runs[4][0]))
         print("speculative replies identical to plain greedy decode")
 
-        # 6. generate() wraps the same scheduler; static loop is the oracle
+        # 6. Fault replay: the same trace with one request's logits
+        #    poisoned mid-stream (a deterministic FaultPlan).  The
+        #    poisoned request fails cleanly (status + error, blocks
+        #    released) while every survivor's tokens are bit-identical
+        #    to the clean run — isolation, not crash-and-restart ------
+        def fault_run(plan):
+            feng = loaded.serve(api.ServeConfig(
+                max_seq=48, batch_slots=2, block_tokens=8, faults=plan,
+                health_every_syncs=4))
+            rs = [feng.scheduler.submit(r)
+                  for r in synthetic_trace(cfg, 5, seed=3, prompt_len=8,
+                                           max_new_low=2, max_new_high=8)]
+            feng.drain()
+            return feng, rs
+
+        _, clean_rs = fault_run(None)
+        feng, fault_rs = fault_run(api.FaultPlan(nan_logits=[(1, 2)]))
+        victim = fault_rs[1]
+        print(f"injected NaN: r{victim.rid} {victim.status} after "
+              f"{len(victim.tokens)} tokens ({victim.error})")
+        assert victim.status == "failed" and len(victim.tokens) == 2
+        assert all(np.array_equal(c.token_array(), f.token_array())
+                   for c, f in zip(clean_rs, fault_rs) if f.status == "done")
+        feng.pool.check_invariants()  # resources reconciled after the loss
+        h = feng.health()
+        print(f"survivors bit-identical to the clean run; health: "
+              f"{h['status']}, {h['requests_done']} done / "
+              f"{h['requests_failed']} failed, pool invariants "
+              f"{'ok' if h['pool']['invariants_ok'] else 'VIOLATED'}")
+
+        # 7. generate() wraps the same scheduler; static loop is the oracle
         prompts = np.asarray(
             jax.random.randint(jax.random.PRNGKey(1), (3, 8), 0, cfg.vocab))
         cont = eng.generate(prompts, max_new_tokens=6)
@@ -143,7 +177,7 @@ def main():
         print("continuous generate() == static generate_static():",
               cont["tokens"].shape, "tokens identical")
 
-        # 7. Dump what the traced engine observed: one span tree per
+        # 8. Dump what the traced engine observed: one span tree per
         #    request (queue -> prefill -> decode, token instants) and the
         #    metrics registry (TTFT/queue-wait histograms, counters) -----
         from repro.obs import validate_chrome_trace

@@ -56,11 +56,13 @@ from repro.quant.policy import (
 )
 from repro.obs import ObsConfig
 from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.faults import FaultPlan
 
 __all__ = [
-    "ObsConfig", "PRESETS", "PTQConfig", "QuantPolicy", "QuantizeSpec",
-    "QuantizedModel", "RotationPlan", "RotationSpec", "ServeConfig",
-    "SiteRule", "derive_draft", "get_policy", "load_quantized", "quantize",
+    "FaultPlan", "ObsConfig", "PRESETS", "PTQConfig", "QuantPolicy",
+    "QuantizeSpec", "QuantizedModel", "RotationPlan", "RotationSpec",
+    "ServeConfig", "SiteRule", "derive_draft", "get_policy",
+    "load_quantized", "quantize",
 ]
 
 # 2: manifest carries the resolved QuantPolicy
@@ -68,6 +70,13 @@ __all__ = [
 #    pattern -> (bits, group, clip) entries QuantizeSpec.act_for serves);
 #    format-2 artifacts (no act rules by construction) still load.
 _FORMAT_VERSION = 3
+
+
+def _artifact_err(path: str, msg: str, *, hint: str = "") -> ValueError:
+    """Actionable artifact errors: always name the offending path and say
+    what to do about it (mirrors ``quant.policy._err``)."""
+    return ValueError(f"quantized-model artifact {path}: {msg}"
+                      + (f"  ({hint})" if hint else ""))
 
 
 # ---------------------------------------------------------------------------
@@ -223,22 +232,75 @@ class QuantizedModel:
 
         step = ckpt.latest_step(directory)
         if step is None:
+            # shard files without a manifest mean the atomic manifest-last
+            # save never completed — say so instead of "not found"
+            orphans = []
+            if os.path.isdir(directory):
+                orphans = [n for n in sorted(os.listdir(directory))
+                           if n.startswith("step_")]
+            if orphans:
+                raise _artifact_err(
+                    directory,
+                    f"step dir(s) {orphans} present but no manifest.json",
+                    hint="the save was interrupted before the manifest-last "
+                         "write; delete the partial step dir and re-save")
             raise FileNotFoundError(f"no quantized-model artifact in {directory}")
         stepdir = os.path.join(directory, f"step_{step:08d}")
-        with open(os.path.join(stepdir, "manifest.json")) as f:
-            man = json.load(f)
+        man_path = os.path.join(stepdir, "manifest.json")
+        try:
+            with open(man_path) as f:
+                man = json.load(f)
+        except json.JSONDecodeError as e:
+            raise _artifact_err(
+                man_path, f"manifest is not valid JSON ({e})",
+                hint="the file was modified after the save; re-save the "
+                     "artifact") from e
         if man.get("kind") != "quantized-model":
-            raise ValueError(f"{directory} is not a quantized-model artifact")
+            raise _artifact_err(
+                directory,
+                f"manifest kind is {man.get('kind')!r}, expected "
+                f"'quantized-model'",
+                hint="this directory holds a different checkpoint type "
+                     "(e.g. a trainer checkpoint); point load_quantized at "
+                     "a QuantizedModel.save output")
+        fmt = int(man.get("format", 1))
+        if fmt > _FORMAT_VERSION:
+            raise _artifact_err(
+                directory,
+                f"manifest format {fmt} is newer than this build's "
+                f"{_FORMAT_VERSION}",
+                hint="the artifact was written by a newer version; upgrade, "
+                     "or re-save the model with this one")
+        for key in ("config", "packed"):
+            if key not in man:
+                raise _artifact_err(
+                    man_path, f"manifest is missing the {key!r} entry",
+                    hint="the manifest was truncated or hand-edited; "
+                         "re-save the artifact")
 
         tree: Dict = {}
         for shard in range(int(man.get("shards", 1))):
-            data = np.load(os.path.join(stepdir, f"shard_{shard}.npz"))
-            for key in data.files:
+            shard_path = os.path.join(stepdir, f"shard_{shard}.npz")
+            if not os.path.exists(shard_path):
+                raise _artifact_err(
+                    shard_path,
+                    f"missing shard {shard} of {int(man.get('shards', 1))}",
+                    hint="the manifest records more shards than are on "
+                         "disk; copy the full artifact directory")
+            try:
+                data = np.load(shard_path)
+                arrays = {key: data[key] for key in data.files}
+            except Exception as e:  # BadZipFile / EOFError / OSError
+                raise _artifact_err(
+                    shard_path, f"unreadable shard npz ({e!r})",
+                    hint="the shard is truncated or corrupt; re-copy or "
+                         "re-save the artifact") from e
+            for key in arrays:
                 node = tree
                 *parents, leaf = key.split("/")
                 for p in parents:
                     node = node.setdefault(p, {})
-                node[leaf] = data[key]
+                node[leaf] = arrays[key]
 
         dtypes = man.get("dtypes", {})
 

@@ -93,12 +93,30 @@ def restore_checkpoint(directory: str, template: Any, *, step: Optional[int] = N
         if step is None:
             raise FileNotFoundError(f"no checkpoint in {directory}")
     path = os.path.join(directory, f"step_{step:08d}", f"shard_{shard}.npz")
-    data = np.load(path)
+    if not os.path.exists(path):
+        raise FileNotFoundError(
+            f"checkpoint shard missing: {path}  (the manifest exists, so "
+            f"the step was saved — copy the full step directory, or pass "
+            f"the right shard index)")
+    try:
+        data = np.load(path)
+        files = set(data.files)
+    except Exception as e:  # BadZipFile / EOFError / OSError
+        raise ValueError(
+            f"checkpoint shard unreadable: {path} ({e!r})  (the npz is "
+            f"truncated or corrupt; restore from another step or re-save)"
+        ) from e
     leaves_paths = jax.tree_util.tree_flatten_with_path(template)[0]
     treedef = jax.tree_util.tree_structure(template)
     out = []
     for p, leaf in leaves_paths:
         key = "/".join(str(getattr(q, "key", getattr(q, "idx", q))) for q in p)
+        if key not in files:
+            raise ValueError(
+                f"checkpoint shard {path} has no entry {key!r}  (the "
+                f"template's structure does not match what was saved — "
+                f"wrong model config, or a multi-shard save read "
+                f"single-shard)")
         arr = data[key]
         out.append(jnp.asarray(arr, dtype=leaf.dtype if hasattr(leaf, "dtype") else None))
     return jax.tree_util.tree_unflatten(treedef, out), step

@@ -87,6 +87,14 @@ def main():
                     help="enable observability and write the metrics "
                          "registry here (.json = JSON document, else "
                          "Prometheus text format)")
+    ap.add_argument("--inject-faults", default=None,
+                    help="deterministic fault plan (JSON object, or @path "
+                         "to one): nan_logits/callback_raise/draft_fail/"
+                         "leak_block/corrupt_prefix/clock_stall; surviving "
+                         "requests stay bit-identical to the clean run")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="admission backpressure: reject submissions once "
+                         "this many requests are waiting")
     args = ap.parse_args()
 
     if args.artifact:
@@ -127,11 +135,16 @@ def main():
               f"k={args.draft_k}")
     obs_cfg = api.ObsConfig(
         enabled=bool(args.trace_out or args.metrics_out))
+    faults = (api.FaultPlan.from_json(args.inject_faults)
+              if args.inject_faults else None)
+    if faults is not None:
+        print(f"[serve] fault plan armed: {faults.to_json()}")
     eng = qm.serve(api.ServeConfig(
         max_seq=args.max_seq, batch_slots=args.prompts,
         temperature=args.temperature, block_tokens=args.block_tokens,
         prefix_cache=args.prefix_cache, spec_decode=args.spec_decode,
-        draft_k=args.draft_k, obs=obs_cfg),
+        draft_k=args.draft_k, obs=obs_cfg, faults=faults,
+        max_queue=args.max_queue, health_every_syncs=8),
         backend=args.backend, draft=draft)
     if args.continuous:
         from repro.serve.scheduler import run_continuous_trace

@@ -1,9 +1,11 @@
 """Serving subsystem: engine + continuous-batching scheduler + paged KV pool."""
 from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.faults import FaultPlan, InjectedFault
 from repro.serve.kvpool import KVPool
-from repro.serve.scheduler import ContinuousScheduler, Request, synthetic_trace
+from repro.serve.scheduler import (ContinuousScheduler, QueueFull, Request,
+                                   synthetic_trace)
 
 __all__ = [
-    "ContinuousScheduler", "KVPool", "Request", "ServeConfig", "ServeEngine",
-    "synthetic_trace",
+    "ContinuousScheduler", "FaultPlan", "InjectedFault", "KVPool",
+    "QueueFull", "Request", "ServeConfig", "ServeEngine", "synthetic_trace",
 ]

@@ -39,6 +39,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import math
+import time
 from typing import Dict, List, Optional
 
 import jax
@@ -48,6 +49,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.common import NOQUANT, QuantizeSpec
 from repro.obs import ObsConfig, Observability
+from repro.serve.faults import (FaultPlan, InjectedFault, StallClock,
+                                build_injector)
 
 
 @dataclasses.dataclass
@@ -118,6 +121,36 @@ class ServeConfig:
     # happened for this many clock seconds.  None = no watchdog (the
     # historical behavior: only a no-progress step raises).
     drain_timeout_s: Optional[float] = None
+    # --- robustness: backpressure, degradation, health, fault injection ---
+    # Bound the admission queue: submit() beyond this depth either
+    # returns the request rejected (status="rejected", never enqueued;
+    # queue_policy="reject") or raises QueueFull (queue_policy="raise").
+    # None = unbounded (the historical behavior).
+    max_queue: Optional[int] = None
+    queue_policy: str = "reject"  # reject | raise
+    # Spec-decode graceful degradation: after this many *consecutive*
+    # draft-window failures the scheduler disables drafting globally and
+    # serves plain decode (token-identical); each failed window already
+    # falls back to a plain tick on its own.
+    spec_fail_threshold: int = 2
+    # Acceptance floor: once a request (then the whole engine) has run
+    # spec_accept_window windows with acceptance below this fraction,
+    # drafting is bypassed for it (then disabled globally) — drafting
+    # that mostly misses costs more than plain decode.  None = no floor.
+    spec_min_acceptance: Optional[float] = None
+    spec_accept_window: int = 8
+    # Health self-checks: every N host syncs the scheduler audits the
+    # prefix-cache index (bypassing it on corruption) and the pool
+    # bookkeeping (reclaiming leaked blocks), counting each repair as a
+    # degraded event instead of failing at teardown.  A final cycle runs
+    # at the end of every drain().  None = off (historical behavior).
+    health_every_syncs: Optional[int] = None
+    # Deterministic fault injection (repro.serve.faults.FaultPlan): the
+    # chaos harness behind tests/test_faults.py and the launchers'
+    # --inject-faults.  None (the default) compiles/branches every
+    # injection site out — tokens and metrics are bit-identical to an
+    # engine without the robustness layer.
+    faults: Optional[FaultPlan] = None
 
 
 class ServeEngine:
@@ -140,7 +173,15 @@ class ServeEngine:
         self.cfg = arch.config
         self.scfg = scfg
         self.spec = spec
-        self.obs = Observability(scfg.obs)
+        self.faults = build_injector(scfg.faults)
+        obs_cfg = scfg.obs
+        if scfg.faults is not None and scfg.faults.clock_stall:
+            # the tracer/profiler capture their clock reference at
+            # construction, so the stall wrapper must be installed first
+            obs_cfg = dataclasses.replace(
+                obs_cfg, clock=StallClock(obs_cfg.clock or time.perf_counter,
+                                          scfg.faults.clock_stall))
+        self.obs = Observability(obs_cfg)
         if backend is not None:
             params = set_backend(params, backend)
             if draft_params is not None:
@@ -297,6 +338,7 @@ class ServeEngine:
                 lambda p, t, c: self.arch.decode(p, t, c, self.spec))
         self._tick_fn = tick
         self._pool.obs = self.obs
+        self._pool.faults = self.faults
         # bind_step exposes its inner jit as ._jitted, so the profiler can
         # watch the paged-attention tick's compile cache
         self._pool_step_fn = self.obs.wrap("decode_tick",
@@ -324,6 +366,7 @@ class ServeEngine:
             self._prefix_cache = PrefixCache(self._pool, sig=sig,
                                              capacity=scfg.max_cached_blocks,
                                              obs=self.obs)
+            self._prefix_cache.faults = self.faults
         self._sched = ContinuousScheduler(self)
 
     def _place_pool(self):
@@ -368,51 +411,66 @@ class ServeEngine:
         tokens per slot with the draft weights, verifies the chunk with
         the target weights from the *original* lengths (overwriting draft
         KV with target KV in place), and returns ``(drafted (S, k),
-        target (S, k+1))`` for the host-side accept/rewind.  Pool storage
-        is updated in place; host ``pool.lengths`` are never advanced by
-        the window itself."""
+        target (S, k+1), bad (S,))`` for the host-side accept/rewind
+        (``bad`` flags slots whose verify logits went non-finite).  Pool
+        storage is updated in place; host ``pool.lengths`` are never
+        advanced by the window itself."""
         from repro.serve import specdecode
 
+        if self.faults is not None and self.faults.draft_window_fails():
+            # raised before any pool mutation, so the scheduler's plain
+            # fallback sees exactly the pre-window state
+            raise InjectedFault("injected draft-window failure")
         if self._spec_jit is None:
             self._spec_jit = self.obs.wrap(
                 "spec_window", specdecode.build_spec_window(self))
         pool = self.pool
         inputs = self._place_step_inputs(tokens, lengths, tables)
         with self._mesh_ctx():
-            drafted, target, paged, state = self._spec_jit(
+            drafted, target, bad, paged, state = self._spec_jit(
                 self.params, self.draft_params, *inputs, pool.paged,
                 pool.state)
         pool.paged, pool.state = paged, state
-        return drafted, target
+        return drafted, target, bad
 
     # ------------------------------------------------------------------
     # On-device sampling + the in-graph multi-step decode window
     # ------------------------------------------------------------------
 
     def _make_sampler(self):
-        """(logits (S,V)|(S,K,V), rids (S,), counts (S,)) -> (S[,K]) int32.
+        """(logits (S,V)|(S,K,V), rids (S,), counts (S,)) ->
+        ((S[,K]) int32 tokens, (S,) bool bad).
 
         Greedy argmax, or per-request categorical from the same
         fold_in(seed, rid) -> fold_in(key, n_emitted) chain the host
-        sampler uses — on-device sampling is draw-for-draw identical."""
+        sampler uses — on-device sampling is draw-for-draw identical.
+
+        ``bad`` flags slots whose logits contain any non-finite value —
+        detected on device (one reduction over logits already resident
+        there) and surfaced to the host at the sync it already pays, so
+        the scheduler can quarantine the poisoned request instead of
+        emitting garbage tokens forever."""
         temp, seed = self.scfg.temperature, self.scfg.seed
 
         def sample(logits, rids, counts):
+            flat = logits.reshape((logits.shape[0], -1))
+            bad = ~jnp.isfinite(flat).all(axis=-1)
             if temp <= 0:
-                return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32), bad
             base = jax.random.PRNGKey(seed)
 
             def one(lg, r, c):
                 key = jax.random.fold_in(jax.random.fold_in(base, r), c)
                 return jax.random.categorical(key, lg / temp).astype(jnp.int32)
 
-            return jax.vmap(one)(logits, rids, counts)
+            return jax.vmap(one)(logits, rids, counts), bad
 
         return sample
 
     def sample_slots(self, logits, rids, counts):
-        """Sample every slot's next token on device; only the (S,) int ids
-        ever cross to the host (the scheduler's per-token sync)."""
+        """Sample every slot's next token on device; only the (S,) int
+        ids and the (S,) non-finite bitmap ever cross to the host (the
+        scheduler's per-token sync).  Returns ``(tokens, bad)``."""
         if self._sample_jit is None:
             self._sample_jit = self.obs.wrap("sample",
                                              jax.jit(self._make_sampler()))
@@ -431,60 +489,74 @@ class ServeEngine:
         tick = self._tick_fn
         sample = self._make_sampler()
         audio = self.cfg.modality == "audio"
+        inject = self.faults is not None
 
         def window(params, tokens, lengths, tables, counts, rids, stops,
-                   max_new, alive, paged, state):
+                   max_new, alive, poison_at, paged, state):
             s = tokens.shape[0]
             wide = (lambda m: m[:, None]) if audio else (lambda m: m)
             tok_buf = jnp.zeros((w,) + tokens.shape, jnp.int32)
             emit_buf = jnp.zeros((w, s), bool)
+            bad_buf = jnp.zeros((w, s), bool)
 
             def cond(c):
-                i, _, _, _, alive, _, _, _, _ = c
+                i, _, _, _, alive, _, _, _, _, _ = c
                 return (i < w) & alive.any()
 
             def body(c):
-                i, tokens, lengths, counts, alive, paged, state, tb, eb = c
+                i, tokens, lengths, counts, alive, paged, state, tb, eb, bb = c
                 logits, paged, state, lengths2 = tick(
                     params, tokens, lengths, tables, paged, state)
                 # done slots keep their length frozen (their lane decodes
                 # scratch garbage until the host releases them)
                 lengths = jnp.where(alive, lengths2, lengths)
-                nxt = sample(logits, rids, counts)
+                if inject:  # fault plan armed: poison the planned slots
+                    hit = counts == poison_at
+                    shape = (s,) + (1,) * (logits.ndim - 1)
+                    logits = jnp.where(hit.reshape(shape), jnp.nan, logits)
+                nxt, bad = sample(logits, rids, counts)
+                bad = bad & alive
                 stop_hit = (jnp.zeros((s,), bool) if audio
                             else nxt == stops)
-                tb = tb.at[i].set(jnp.where(wide(alive), nxt, 0))
-                eb = eb.at[i].set(alive)
-                counts = counts + alive.astype(jnp.int32)
-                alive = alive & ~stop_hit & (counts < max_new)
+                emit = alive & ~bad
+                tb = tb.at[i].set(jnp.where(wide(emit), nxt, 0))
+                eb = eb.at[i].set(emit)
+                bb = bb.at[i].set(bad)
+                counts = counts + emit.astype(jnp.int32)
+                alive = emit & ~stop_hit & (counts < max_new)
                 tokens = jnp.where(wide(alive), nxt, tokens)
                 return (i + 1, tokens, lengths, counts, alive, paged, state,
-                        tb, eb)
+                        tb, eb, bb)
 
             init = (jnp.asarray(0, jnp.int32), tokens, lengths, counts,
-                    alive, paged, state, tok_buf, emit_buf)
-            (_, _, lengths, _, _, paged, state, tok_buf, emit_buf) = (
-                jax.lax.while_loop(cond, body, init))
-            return tok_buf, emit_buf, paged, state
+                    alive, paged, state, tok_buf, emit_buf, bad_buf)
+            (_, _, lengths, _, _, paged, state, tok_buf, emit_buf,
+             bad_buf) = jax.lax.while_loop(cond, body, init)
+            return tok_buf, emit_buf, bad_buf, paged, state
 
-        return jax.jit(window, donate_argnums=(9, 10))
+        return jax.jit(window, donate_argnums=(10, 11))
 
     def run_window(self, tokens, lengths, tables, counts, rids, stops,
-                   max_new, alive):
+                   max_new, alive, poison_at=None):
         """Execute one in-graph decode window over the pool (scheduler
-        hook for ``steps_per_sync > 1``).  Returns the per-step token and
-        emission buffers; pool storage is updated in place."""
+        hook for ``steps_per_sync > 1``).  Returns the per-step token,
+        emission, and non-finite buffers; pool storage is updated in
+        place.  ``poison_at`` (S,) is the fault-injection schedule (-1 =
+        never; only consulted when a plan is armed)."""
         if self._window_jit is None:
             self._window_jit = self.obs.wrap("decode_window",
                                              self._build_window())
         pool = self.pool
+        if poison_at is None:
+            poison_at = np.full((pool.n_slots,), -1, np.int32)
         inputs = self._place_step_inputs(
-            tokens, lengths, tables, counts, rids, stops, max_new, alive)
+            tokens, lengths, tables, counts, rids, stops, max_new, alive,
+            poison_at)
         with self._mesh_ctx():
-            tok_buf, emit_buf, paged, state = self._window_jit(
+            tok_buf, emit_buf, bad_buf, paged, state = self._window_jit(
                 self.params, *inputs, pool.paged, pool.state)
         pool.paged, pool.state = paged, state
-        return tok_buf, emit_buf
+        return tok_buf, emit_buf, bad_buf
 
     def prefill_one(self, prompt: np.ndarray, patch_embeds: Optional[np.ndarray]
                     ) -> tuple:
@@ -570,15 +642,17 @@ class ServeEngine:
     def submit(self, prompt: np.ndarray, max_new_tokens: int, *,
                patch_embeds: Optional[np.ndarray] = None,
                stop_token: Optional[int] = None,
-               on_token=None):
+               on_token=None, deadline_s: Optional[float] = None):
         """Enqueue one request; returns the :class:`Request` handle (its
-        ``tokens`` fill in as the scheduler produces them)."""
+        ``tokens`` fill in as the scheduler produces them).
+        ``deadline_s`` is a TTL from submission: the request expires with
+        ``status="timeout"`` in queue or mid-decode once it elapses."""
         from repro.serve.scheduler import Request
 
         return self.scheduler.submit(Request(
             prompt=np.asarray(prompt), max_new_tokens=max_new_tokens,
             patch_embeds=patch_embeds, stop_token=stop_token,
-            on_token=on_token))
+            on_token=on_token, deadline_s=deadline_s))
 
     def step(self) -> bool:
         """One scheduler tick (admit + batched decode). False when idle."""
@@ -588,6 +662,44 @@ class ServeEngine:
         """Run the scheduler until queue and slots are empty; returns the
         finished requests (see ``scheduler.metrics()`` for aggregates)."""
         return self.scheduler.drain()
+
+    def health(self) -> Dict:
+        """Point-in-time health snapshot of the serving stack.
+
+        ``status`` is ``"ok"`` unless any subsystem has degraded (spec
+        decode disabled, prefix cache bypassed, pool invariants
+        currently violated) — degradation is sticky for spec decode and
+        the prefix cache, but a recovered pool reports healthy again."""
+        sched = self.scheduler
+        pool = self._pool
+        pc = self._prefix_cache
+        issues = pool.audit()
+        degraded = bool(issues) or sched.spec_degraded or (
+            pc is not None and pc.bypassed)
+        out = {
+            "status": "degraded" if degraded else "ok",
+            "queue_depth": len(sched.queue),
+            "active_slots": sum(r is not None for r in sched.slot_req),
+            "requests_done": len(sched.done),
+            "requests_failed": len(sched.failed),
+            "pool": {
+                "free_blocks": len(pool.free),
+                "capacity_blocks": pool.n_blocks,
+                "invariants_ok": not issues,
+                "issues": issues,
+            },
+            "prefix_cache": None,
+            "spec_decode": {
+                "enabled": bool(self.scfg.spec_decode),
+                "degraded": sched.spec_degraded,
+            },
+        }
+        if pc is not None:
+            out["prefix_cache"] = {
+                "bypassed": pc.bypassed,
+                "cached_blocks": len(pc._blocks),
+            }
+        return out
 
     # ------------------------------------------------------------------
     # Generation entry points

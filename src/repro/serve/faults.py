@@ -1,0 +1,245 @@
+"""Deterministic fault injection for the serving stack.
+
+The robustness layer (request isolation, deadlines/backpressure, graceful
+degradation, health cycles) is only trustworthy if its failure paths are
+*exercised*, and real failures — a NaN blowing up in W2 logits, a user
+callback throwing mid-stream, a draft overlay going sideways — are rare
+and nondeterministic.  This module makes them reproducible:
+
+* :class:`FaultPlan` — a frozen, JSON-serializable description of *which*
+  failures to inject *where*, keyed entirely by logical coordinates
+  (request id, emitted-token index, window/release/insert ordinals) so
+  the same plan replays bit-identically on any machine.  Injected via
+  ``ServeConfig(faults=plan)``; ``faults=None`` (the default) keeps every
+  injection site compiled/branched out — the same zero-overhead
+  discipline as ``ObsConfig(enabled=False)``.
+* :class:`FaultInjector` — the per-engine mutable runtime: ordinal
+  counters plus the predicates the scheduler/engine/pool consult at each
+  named injection point.
+* :class:`InjectedFault` — the exception raised at injected raise-points
+  (``on_token`` callbacks, draft windows), so tests can distinguish
+  injected failures from real bugs.
+* :class:`StallClock` — a monotonic-clock wrapper that adds planned
+  offsets at given call ordinals, driving deadline expiry and the drain
+  watchdog deterministically (no sleeps, no wall-clock in tests).
+
+Injection points and the hardening they exercise:
+
+==================  ====================================================
+``nan_logits``      request *r*'s logits become NaN at emitted-token
+                    index *n* -> on-device non-finite detection in the
+                    sampler, per-slot quarantine (``status="failed"``,
+                    blocks released, survivors untouched)
+``callback_raise``  ``on_token`` raises for (r, n) -> guarded callbacks,
+                    mid-window-replay isolation
+``draft_fail``      the k-th spec window raises before dispatch ->
+                    plain-decode fallback + auto-disable after repeated
+                    failures (token-identical degradation)
+``leak_block``      the k-th pool release drops a free-list entry ->
+                    periodic health cycle audits and reclaims it as a
+                    counted recoverable event
+``corrupt_prefix``  the k-th prefix-cache insert plants a bogus index
+                    entry -> ``check_invariants`` detects it and the
+                    cache self-bypasses (serving unshared) instead of
+                    crashing
+``clock_stall``     the k-th clock read jumps forward by s seconds ->
+                    deadline/TTL expiry and drain-watchdog paths
+==================  ====================================================
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Callable, Dict, List, Optional, Tuple, Union
+
+__all__ = ["FaultPlan", "FaultInjector", "InjectedFault", "StallClock"]
+
+
+class InjectedFault(RuntimeError):
+    """Raised at injected raise-points; never raised without a plan."""
+
+
+def _pairs(v) -> Tuple[Tuple[int, int], ...]:
+    return tuple((int(a), int(b)) for a, b in v)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Deterministic failure schedule, injected via ``ServeConfig(faults=...)``.
+
+    All coordinates are logical: ``rid`` is the scheduler-assigned
+    request id, token indices are 0-based emitted-token positions,
+    ordinals count events of that kind since engine build (0-based).
+    An empty plan arms the injection machinery without firing anything —
+    the bench's ``faults_off`` overhead row measures exactly that.
+    """
+
+    # (rid, token_idx): non-finite logits when request rid samples its
+    # token_idx-th new token (prefill sample included at idx 0)
+    nan_logits: Tuple[Tuple[int, int], ...] = ()
+    # (rid, token_idx): the on_token callback slot raises after request
+    # rid emits its token_idx-th token (fires whether or not the request
+    # installed a callback)
+    callback_raise: Tuple[Tuple[int, int], ...] = ()
+    # spec-window ordinals that raise InjectedFault before dispatch
+    draft_fail: Tuple[int, ...] = ()
+    # release ordinals after which one free-list entry silently vanishes
+    leak_block: Tuple[int, ...] = ()
+    # prefix-cache insert ordinals after which a bogus node is planted
+    corrupt_prefix: Tuple[int, ...] = ()
+    # (call_ordinal, seconds): the clock jumps forward at that read
+    clock_stall: Tuple[Tuple[int, float], ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "nan_logits", _pairs(self.nan_logits))
+        object.__setattr__(self, "callback_raise",
+                           _pairs(self.callback_raise))
+        object.__setattr__(self, "draft_fail",
+                           tuple(int(v) for v in self.draft_fail))
+        object.__setattr__(self, "leak_block",
+                           tuple(int(v) for v in self.leak_block))
+        object.__setattr__(self, "corrupt_prefix",
+                           tuple(int(v) for v in self.corrupt_prefix))
+        object.__setattr__(self, "clock_stall", tuple(
+            (int(a), float(b)) for a, b in self.clock_stall))
+
+    @classmethod
+    def from_json(cls, spec: Union[str, Dict]) -> "FaultPlan":
+        """Build a plan from a JSON object / string / ``@path`` (the
+        launchers' ``--inject-faults`` argument)."""
+        if isinstance(spec, str):
+            if spec.startswith("@"):
+                with open(spec[1:]) as f:
+                    spec = json.load(f)
+            else:
+                spec = json.loads(spec)
+        if not isinstance(spec, dict):
+            raise ValueError(f"fault plan must be a JSON object, "
+                             f"got {type(spec).__name__}")
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(spec) - known)
+        if unknown:
+            raise ValueError(f"unknown fault plan keys {unknown}; "
+                             f"known: {sorted(known)}")
+        return cls(**spec)
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), sort_keys=True)
+
+    @property
+    def empty(self) -> bool:
+        return not any(dataclasses.astuple(self))
+
+
+class FaultInjector:
+    """Per-engine runtime: ordinal counters + injection-point predicates.
+
+    Each ``(rid, idx)`` entry fires at most once; ordinal-keyed faults
+    fire when their event counter passes the planned ordinal.  The
+    injector never mutates engine state except where documented
+    (``on_release`` removes a free-list entry, ``on_insert`` plants an
+    index node) — every other method is a pure predicate.
+    """
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self.releases = 0
+        self.inserts = 0
+        self.spec_windows = 0
+        self._nan = set(plan.nan_logits)
+        self._cb = set(plan.callback_raise)
+        self.leaked_blocks: List[int] = []
+        self.fired: List[str] = []  # audit log of what actually fired
+
+    # -- logits / callbacks --------------------------------------------
+    def poison_token(self, rid: int, idx: int) -> bool:
+        """True exactly once when request ``rid`` samples token ``idx``."""
+        if (rid, idx) in self._nan:
+            self._nan.discard((rid, idx))
+            self.fired.append(f"nan_logits r{rid} t{idx}")
+            return True
+        return False
+
+    def poison_from(self, rid: int, count: int,
+                    limit: Optional[int] = None) -> int:
+        """Earliest planned poison index in ``[count, limit)`` for ``rid``
+        (the window paths poison by token count), or -1.  Entries beyond
+        ``limit`` stay planned for a later window."""
+        hits = [i for r, i in self._nan if r == rid and i >= count
+                and (limit is None or i < limit)]
+        if not hits:
+            return -1
+        idx = min(hits)
+        self._nan.discard((rid, idx))
+        self.fired.append(f"nan_logits r{rid} t{idx}")
+        return idx
+
+    def callback_raises(self, rid: int, idx: int) -> bool:
+        if (rid, idx) in self._cb:
+            self._cb.discard((rid, idx))
+            self.fired.append(f"callback_raise r{rid} t{idx}")
+            return True
+        return False
+
+    # -- spec decode ----------------------------------------------------
+    def draft_window_fails(self) -> bool:
+        """Consulted once per spec window, before dispatch."""
+        w = self.spec_windows
+        self.spec_windows += 1
+        if w in self.plan.draft_fail:
+            self.fired.append(f"draft_fail w{w}")
+            return True
+        return False
+
+    # -- pool / prefix corruption --------------------------------------
+    def on_release(self, pool) -> None:
+        """Called after each ``KVPool.release``; at planned ordinals one
+        free-list entry vanishes (simulating lost bookkeeping) for the
+        health cycle's audit/recover path to find."""
+        r = self.releases
+        self.releases += 1
+        if r in self.plan.leak_block and pool.free:
+            blk = pool.free.pop()
+            pool.refcount[blk] = 0
+            self.leaked_blocks.append(blk)
+            self.fired.append(f"leak_block #{r} -> block {blk}")
+
+    def on_insert(self, cache) -> None:
+        """Called after each ``PrefixCache.insert``; at planned ordinals
+        plants a bogus node claiming a free-list block, for
+        ``PrefixCache.check_invariants`` to flag (-> self-bypass)."""
+        i = self.inserts
+        self.inserts += 1
+        if i in self.plan.corrupt_prefix and cache.pool.free:
+            cache._plant_corruption()
+            self.fired.append(f"corrupt_prefix #{i}")
+
+
+class StallClock:
+    """Monotonic clock with planned forward jumps at call ordinals.
+
+    Wraps the engine's configured clock *before* the Observability bundle
+    is built (the tracer captures its clock reference at construction),
+    so every consumer — scheduler timestamps, deadlines, the drain
+    watchdog, trace spans — sees the same stalled timeline.
+    """
+
+    def __init__(self, base: Callable[[], float],
+                 stalls: Tuple[Tuple[int, float], ...]):
+        self._base = base
+        self._stalls = dict(stalls)
+        self._calls = 0
+        self._offset = 0.0
+
+    def __call__(self) -> float:
+        jump = self._stalls.get(self._calls)
+        if jump is not None:
+            self._offset += float(jump)
+        self._calls += 1
+        return self._base() + self._offset
+
+
+def build_injector(plan: Optional[FaultPlan]) -> Optional[FaultInjector]:
+    """``None`` plan -> ``None`` injector: callers keep a single
+    ``is not None`` check as their only overhead when faults are off."""
+    return None if plan is None else FaultInjector(plan)

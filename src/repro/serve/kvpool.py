@@ -190,6 +190,11 @@ class KVPool:
         # alloc/release counters + the free-list gauge flow through its
         # registry.  None = standalone pool, no accounting.
         self.obs = None
+        # Optional fault injector (set by the engine when ServeConfig
+        # carries a FaultPlan): release() notifies it so planned
+        # free-list leaks land at deterministic ordinals.  None (the
+        # default) keeps the hot path to a single attribute check.
+        self.faults = None
 
     # ------------------------------------------------------------------
     # Admission accounting
@@ -407,6 +412,8 @@ class KVPool:
                 self.obs.registry.counter(
                     "kvpool_blocks_released_total").inc(freed)
             self.obs.registry.gauge("kvpool_free_blocks").set(len(self.free))
+        if self.faults is not None:
+            self.faults.on_release(self)
 
     def reclaim(self, blocks: Sequence[int]) -> None:
         """Return idle cached blocks to the free list (prefix-cache
@@ -427,32 +434,99 @@ class KVPool:
     # Invariants (exercised by tests after every admit/step/release)
     # ------------------------------------------------------------------
 
-    def check_invariants(self) -> None:
+    def audit(self) -> List[str]:
+        """Non-raising invariant sweep: every violated invariant as a
+        human-readable issue string (empty = healthy).  The health cycle
+        runs this periodically and feeds the result to :meth:`recover`;
+        :meth:`check_invariants` asserts it is empty."""
+        issues: List[str] = []
         owned = [b for blocks in self.slot_blocks for b in blocks]
         counts: Dict[int, int] = {}
         for b in owned:
             counts[b] = counts.get(b, 0) + 1
         cached = set(self.prefix.blocks()) if self.prefix is not None else set()
-        assert SCRATCH not in owned, "scratch block was allocated"
-        assert SCRATCH not in self.free, "scratch block on the free list"
-        assert SCRATCH not in cached, "scratch block in the prefix cache"
-        assert len(set(self.free)) == len(self.free), "free list duplicate"
-        assert not (set(owned) & set(self.free)), "block both free and owned"
-        assert not (cached & set(self.free)), "cached block on the free list"
-        assert set(owned) | set(self.free) | cached == \
-            set(range(1, self.n_blocks)), "block leaked"
+        if SCRATCH in owned:
+            issues.append("scratch block was allocated")
+        if SCRATCH in self.free:
+            issues.append("scratch block on the free list")
+        if SCRATCH in cached:
+            issues.append("scratch block in the prefix cache")
+        if len(set(self.free)) != len(self.free):
+            issues.append("free list duplicate")
+        both = set(owned) & set(self.free)
+        if both:
+            issues.append(f"block both free and owned: {sorted(both)}")
+        stale = cached & set(self.free)
+        if stale:
+            issues.append(f"cached block on the free list: {sorted(stale)}")
+        leaked = set(range(1, self.n_blocks)) - set(owned) - set(self.free) \
+            - cached
+        if leaked:
+            issues.append(f"block leaked: {sorted(leaked)}")
         for b in range(1, self.n_blocks):
-            assert int(self.refcount[b]) == counts.get(b, 0), (
-                f"block {b}: refcount {int(self.refcount[b])} != "
-                f"{counts.get(b, 0)} table references")
+            if int(self.refcount[b]) != counts.get(b, 0):
+                issues.append(
+                    f"block {b}: refcount {int(self.refcount[b])} != "
+                    f"{counts.get(b, 0)} table references")
         for s in range(self.n_slots):
             blocks = self.slot_blocks[s]
-            assert len(set(blocks)) == len(blocks), "block twice in one slot"
-            assert list(self.tables[s, : len(blocks)]) == blocks
-            assert all(b == SCRATCH for b in self.tables[s, len(blocks):])
+            if len(set(blocks)) != len(blocks):
+                issues.append(f"block twice in slot {s}")
+            if list(self.tables[s, : len(blocks)]) != blocks:
+                issues.append(f"slot {s} table disagrees with its blocks")
+            if not all(b == SCRATCH for b in self.tables[s, len(blocks):]):
+                issues.append(f"slot {s} table tail not scratch")
             if blocks:
                 need = self.blocks_for(max(1, int(self.lengths[s])))
-                assert len(blocks) >= need, "slot under-allocated"
+                if len(blocks) < need:
+                    issues.append(f"slot {s} under-allocated")
+        return issues
+
+    def check_invariants(self) -> None:
+        issues = self.audit()
+        assert not issues, "; ".join(issues)
+
+    def recover(self) -> Dict[str, int]:
+        """Self-heal the host bookkeeping the audit can fix without
+        touching any live slot: resync refcounts to the actual table
+        references, drop duplicate/contradictory free-list entries, and
+        reclaim orphaned blocks (not owned, not free, not cached) back
+        to the free list.  Returns what was repaired — the health cycle
+        counts it as a recoverable event instead of tearing down.
+        Device storage is never touched (an orphaned block's stale
+        contents are dead weight, masked by tables/lengths)."""
+        cached = set(self.prefix.blocks()) if self.prefix is not None else set()
+        counts: Dict[int, int] = {}
+        for blocks in self.slot_blocks:
+            for b in blocks:
+                counts[b] = counts.get(b, 0) + 1
+        refcounts_fixed = 0
+        for b in range(1, self.n_blocks):
+            want = counts.get(b, 0)
+            if int(self.refcount[b]) != want:
+                self.refcount[b] = want
+                refcounts_fixed += 1
+        seen: set = set()
+        free: List[int] = []
+        free_dropped = 0
+        for b in self.free:
+            if b in seen or b in counts or b in cached or b == SCRATCH:
+                free_dropped += 1
+                continue
+            seen.add(b)
+            free.append(b)
+        orphans = [b for b in range(1, self.n_blocks)
+                   if b not in counts and b not in seen and b not in cached]
+        free.extend(orphans)
+        self.free = free
+        if self.obs is not None:
+            if orphans:
+                self.obs.registry.counter(
+                    "kvpool_blocks_recovered_total").inc(len(orphans))
+            self.obs.registry.gauge("kvpool_free_blocks").set(len(self.free))
+        return {"blocks_reclaimed": len(orphans),
+                "refcounts_fixed": refcounts_fixed,
+                "free_entries_dropped": free_dropped}
 
     def check_leaks(self) -> None:
         """Teardown leak check: with every slot released, each block must

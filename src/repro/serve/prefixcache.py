@@ -105,6 +105,16 @@ class PrefixCache:
         self.inserts = 0
         self.evictions = 0
         self.evictions_capacity = 0
+        self.invalidations = 0
+        self.bypass_lookups = 0
+        # Self-bypass: when the health cycle finds index corruption
+        # (check_invariants), the cache de-indexes everything and serves
+        # unshared (lookup -> empty hit, insert -> no-op) instead of
+        # crashing the engine.  One-way until flush() resets it.
+        self.bypassed = False
+        # Optional fault injector (set by the engine): insert() notifies
+        # it so planned index corruption lands at deterministic ordinals.
+        self.faults = None
         pool.prefix = self
 
     # ------------------------------------------------------------------
@@ -132,8 +142,15 @@ class PrefixCache:
         """Longest cached full-block prefix of ``tokens``.
 
         Pins the matched blocks (eviction skips them) until
-        :meth:`unpin`; touches their LRU stamps."""
+        :meth:`unpin`; touches their LRU stamps.  A bypassed cache
+        always misses (served unshared, counted as ``prefix_bypass``)."""
         self.lookups += 1
+        if self.bypassed:
+            self.bypass_lookups += 1
+            if self.obs is not None:
+                self.obs.registry.counter("prefix_cache_lookups_total").inc(
+                    outcome="bypass")
+            return Hit(blocks=[])
         blocks: List[int] = []
         for key in self._keys(tokens):
             node = self.nodes.get(key)
@@ -165,6 +182,8 @@ class PrefixCache:
         are only touched (first writer wins — the incoming duplicate
         block is already mapped or will simply be released with its
         slot); new entries are linked under their parent."""
+        if self.bypassed:
+            return
         parent: Optional[_Node] = None
         for j, key in enumerate(self._keys(tokens)):
             node = self.nodes.get(key)
@@ -188,6 +207,8 @@ class PrefixCache:
             self._touch(node)
             parent = node
         self._enforce_capacity()
+        if self.faults is not None:
+            self.faults.on_insert(self)
 
     def _enforce_capacity(self) -> None:
         """Evict idle LRU leaves until the index fits ``capacity`` (the
@@ -268,7 +289,8 @@ class PrefixCache:
     def flush(self) -> None:
         """Drop the whole index.  Idle blocks go back to the free list;
         blocks still referenced by live slots are merely de-indexed (their
-        storage returns through the normal release path)."""
+        storage returns through the normal release path).  Also re-arms a
+        bypassed cache (the corrupt index is gone)."""
         self.evict(len(self._blocks))
         for node in list(self._blocks.values()):
             # still-referenced (or pinned) leftovers: de-index only
@@ -277,6 +299,92 @@ class PrefixCache:
             node.children.clear()
             if node.parent is not None:
                 node.parent.children.pop(node.key, None)
+        self.bypassed = False
+
+    # ------------------------------------------------------------------
+    # Health: invariant audit, self-bypass, targeted invalidation
+    # ------------------------------------------------------------------
+
+    def check_invariants(self) -> List[str]:
+        """Non-raising index audit (issue strings; empty = healthy):
+        every indexed block must be a real pool block, off the free
+        list, consistently keyed, and properly linked.  The scheduler's
+        health cycle bypasses the cache on any issue."""
+        issues: List[str] = []
+        free = set(self.pool.free)
+        for blk, node in self._blocks.items():
+            if not (0 < blk < self.pool.n_blocks):
+                issues.append(f"indexed block {blk} outside the pool")
+                continue
+            if blk in free:
+                issues.append(f"indexed block {blk} is on the free list")
+            if node.block != blk:
+                issues.append(f"index maps block {blk} to node holding "
+                              f"{node.block}")
+            if self.nodes.get(node.key) is not node:
+                issues.append(f"block {blk}: key chain entry missing or "
+                              f"aliased")
+            if node.parent is not None and \
+                    node.parent.children.get(node.key) is not node:
+                issues.append(f"block {blk}: broken parent link")
+        for key, node in self.nodes.items():
+            if self._blocks.get(node.block) is not node:
+                issues.append(f"node for block {node.block} not in the "
+                              f"block index")
+        return issues
+
+    def bypass(self) -> None:
+        """Stop sharing: de-index every entry *without* reclaiming any
+        storage (a corrupt index cannot be trusted to know which blocks
+        are really idle) and serve unshared from now on.  Blocks still
+        mapped by live slots return through the normal release path;
+        orphaned idle blocks are reclaimed by ``KVPool.recover`` in the
+        same health cycle."""
+        self.bypassed = True
+        for node in list(self._blocks.values()):
+            node.children.clear()
+        self.nodes.clear()
+        self._blocks.clear()
+        self._pinned.clear()
+
+    def invalidate(self, blocks: Sequence[int]) -> int:
+        """De-index ``blocks`` and every descendant chain (a quarantined
+        request's blocks may be suspect — e.g. written while its logits
+        went non-finite — so the whole subtree built on them is dropped).
+        De-index only: storage still referenced by live slots returns
+        through release; idle storage through release/recover.  Returns
+        the number of entries dropped."""
+        dropped = 0
+        for blk in list(blocks):
+            node = self._blocks.get(int(blk))
+            if node is not None:
+                dropped += self._drop_subtree(node)
+        self.invalidations += dropped
+        return dropped
+
+    def _drop_subtree(self, node: _Node) -> int:
+        n = 0
+        for child in list(node.children.values()):
+            n += self._drop_subtree(child)
+        self.nodes.pop(node.key, None)
+        self._blocks.pop(node.block, None)
+        self._pinned.pop(node.block, None)
+        if node.parent is not None:
+            node.parent.children.pop(node.key, None)
+        return n + 1
+
+    def _plant_corruption(self) -> None:
+        """Fault-injection hook: plant a bogus node claiming a free-list
+        block — exactly the inconsistency :meth:`check_invariants`
+        exists to catch.  Only ever called by a FaultInjector."""
+        # peeked, not popped, from the *bottom* of the LIFO free list (the
+        # last block allocation would touch), so the block-both-free-and-
+        # indexed contradiction survives until a health cycle sees it
+        blk = self.pool.free[0]
+        key = b"corrupt:%d" % blk
+        node = _Node(key=key, block=blk, parent=None, children={}, stamp=0)
+        self.nodes[key] = node
+        self._blocks[blk] = node
 
     # ------------------------------------------------------------------
 
@@ -287,5 +395,8 @@ class PrefixCache:
             "inserts": self.inserts,
             "evictions": self.evictions,
             "evictions_capacity": self.evictions_capacity,
+            "invalidations": self.invalidations,
+            "bypassed": self.bypassed,
+            "bypass_lookups": self.bypass_lookups,
             "cached_blocks": len(self._blocks),
         }

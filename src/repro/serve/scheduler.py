@@ -48,6 +48,12 @@ import numpy as np
 
 from repro.obs import ENGINE_PID, REQUEST_PID, Observability
 from repro.obs.profile import register_profile_metrics
+from repro.serve.faults import InjectedFault
+
+
+class QueueFull(RuntimeError):
+    """Raised by ``submit`` under ``ServeConfig(max_queue=N,
+    queue_policy="raise")`` when the admission queue is at capacity."""
 
 
 def register_serving_metrics(reg) -> None:
@@ -83,6 +89,16 @@ def register_serving_metrics(reg) -> None:
     c("prefix_cache_inserts_total", "Prompt-block runs indexed by the cache")
     c("prefix_cache_evictions_total", "Cached blocks evicted by cause",
       labels=("reason",))
+    # robustness: failure / degradation / self-healing accounting
+    c("serve_requests_failed_total",
+      "Requests that did not finish, by failure reason",
+      labels=("reason",))
+    c("serve_degraded_events_total",
+      "Graceful-degradation events (subsystem disabled or self-healed)",
+      labels=("subsystem",))
+    c("serve_draft_failures_total", "Spec-decode draft windows that raised")
+    c("kvpool_blocks_recovered_total",
+      "Leaked KV blocks reclaimed by the pool health cycle")
     reg.gauge("serve_queue_depth", "Requests waiting for admission")
     reg.gauge("serve_active_slots", "Slots decoding a live request")
     reg.gauge("kvpool_free_blocks", "KV blocks on the pool free list")
@@ -134,11 +150,16 @@ class Request:
     patch_embeds: Optional[np.ndarray] = None  # vlm: (P, D) prefix
     stop_token: Optional[int] = None
     on_token: Optional[Callable[["Request", object, bool], None]] = None
+    # TTL from submission: the request expires with status="timeout" in
+    # queue or mid-decode once deadline_s has elapsed (None = no deadline)
+    deadline_s: Optional[float] = None
 
     # -- filled by the scheduler ----------------------------------------
     rid: int = -1
     tokens: List = dataclasses.field(default_factory=list)
-    status: str = "queued"  # queued | active | done
+    # queued | active | done | failed | timeout | rejected | aborted
+    status: str = "queued"
+    error: Optional[str] = None  # set when the request did not finish
     submit_t: float = 0.0
     admit_t: Optional[float] = None
     first_token_t: Optional[float] = None
@@ -155,6 +176,8 @@ class Request:
             self.first_token_t - self.submit_t)
 
     def token_array(self) -> np.ndarray:
+        if not self.tokens:  # rejected / expired before the first token
+            return np.zeros((0,), np.int32)
         return np.stack(self.tokens).astype(np.int32)
 
 
@@ -195,12 +218,25 @@ class ContinuousScheduler:
         self.slot_req: List[Optional[Request]] = [None] * engine.pool.n_slots
         self.slot_next: List[Optional[np.ndarray]] = [None] * engine.pool.n_slots
         self.done: List[Request] = []
+        self.failed: List[Request] = []  # failed / timeout / rejected / aborted
         self._next_rid = 0
         self._spans: Dict[int, Dict[str, object]] = {}  # rid -> live spans
         if self.tracer is not None:
             self.tracer.label(ENGINE_PID, 0, "scheduler")
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
+        # -- robustness state (all inert when the knobs are unset) -------
+        self._faults = getattr(engine, "faults", None)
+        self._has_deadlines = False  # flips on the first deadline_s submit
+        scfg = engine.scfg
+        self._health_every = getattr(scfg, "health_every_syncs", None)
+        self._last_health = 0
+        self.spec_degraded = False  # spec decode globally disabled
+        self._spec_fail_streak = 0  # consecutive draft-window raises
+        self._spec_bypass: set = set()  # rids decoding plainly (per-slot)
+        self._req_spec: Dict[int, List[int]] = {}  # rid -> [windows, drafted, accepted]
+        self._acc_recent: deque = deque(
+            maxlen=max(1, int(getattr(scfg, "spec_accept_window", 8))))
 
     def reset_metrics(self) -> None:
         """Zero every aggregate counter and histogram series and drop
@@ -209,6 +245,7 @@ class ContinuousScheduler:
         separately for a cold run."""
         self.reg.reset()
         self.done = []
+        self.failed = []
         self._t_first = None
         self._t_last = None
 
@@ -249,6 +286,24 @@ class ContinuousScheduler:
             raise ValueError(
                 f"request needs {self.pool.blocks_for(worst)} blocks; pool "
                 f"has {self.pool.capacity_blocks}")
+        mq = getattr(self.engine.scfg, "max_queue", None)
+        if mq is not None and len(self.queue) >= mq:
+            policy = getattr(self.engine.scfg, "queue_policy", "reject")
+            if policy == "raise":
+                raise QueueFull(
+                    f"admission queue full ({len(self.queue)}/{mq} waiting); "
+                    f"retry later or raise ServeConfig.max_queue")
+            # "reject": the request comes back with status="rejected" and
+            # req.error set, never enqueued — load-shedding under overload
+            req.rid = self._next_rid
+            self._next_rid += 1
+            req.submit_t = self.clock()
+            self._fail(None, req, "queue_full",
+                       f"rejected: admission queue full ({mq} waiting)",
+                       status="rejected")
+            return req
+        if req.deadline_s is not None:
+            self._has_deadlines = True
         req.rid = self._next_rid
         self._next_rid += 1
         req.submit_t = self.clock()
@@ -272,17 +327,22 @@ class ContinuousScheduler:
         return req
 
     # ------------------------------------------------------------------
-    def _sample(self, logits: np.ndarray, req: Request) -> np.ndarray:
+    def _sample(self, logits: np.ndarray, req: Request):
         """logits: (V,) or (K, V) float. Greedy unless temperature > 0.
 
         Delegates to the engine's one sampler (the same jitted function
         the decode tick and the in-graph window use), so the per-request
         fold_in(seed, rid) -> fold_in(key, n_emitted) draw chain has a
-        single implementation."""
-        tok = self.engine.sample_slots(
-            jnp.asarray(logits)[None], np.asarray([req.rid], np.int32),
+        single implementation.  Returns ``(token, bad)`` — ``bad`` is the
+        sampler's on-device non-finite flag for this request."""
+        logits = jnp.asarray(logits)
+        if (self._faults is not None
+                and self._faults.poison_token(req.rid, len(req.tokens))):
+            logits = jnp.full_like(logits, jnp.nan)
+        tok, bad = self.engine.sample_slots(
+            logits[None], np.asarray([req.rid], np.int32),
             np.asarray([len(req.tokens)], np.int32))
-        return np.asarray(tok)[0].astype(np.int32)
+        return np.asarray(tok)[0].astype(np.int32), bool(np.asarray(bad)[0])
 
     def _emit(self, slot: int, req: Request, tok: np.ndarray) -> bool:
         """Record one sampled token; returns True when the request stops."""
@@ -303,8 +363,20 @@ class ContinuousScheduler:
                     "decode", pid=REQUEST_PID, tid=req.rid, t=now)
             self.tracer.event("token", pid=REQUEST_PID, tid=req.rid, t=now,
                               i=len(req.tokens), done=done)
-        if req.on_token is not None:
-            req.on_token(req, tok, done)
+        try:
+            if (self._faults is not None
+                    and self._faults.callback_raises(req.rid,
+                                                     len(req.tokens) - 1)):
+                raise InjectedFault(f"injected on_token failure r{req.rid}")
+            if req.on_token is not None:
+                req.on_token(req, tok, done)
+        except Exception as e:
+            # user code raised mid-stream: quarantine this request (it
+            # keeps the tokens emitted so far) and keep the tick/window
+            # replay running for every other slot
+            self._fail(slot, req, "callback",
+                       f"on_token callback raised: {e!r}")
+            return True
         if done:
             req.status = "done"
             req.finish_t = now
@@ -328,6 +400,89 @@ class ContinuousScheduler:
         else:
             self.slot_next[slot] = np.asarray(tok, np.int32)
         return done
+
+    def _fail(self, slot: Optional[int], req: Request, reason: str,
+              error: str, *, status: str = "failed") -> None:
+        """Quarantine one request: record the failure, release its slot's
+        blocks (and de-index any shared ones), and keep serving.
+
+        ``slot`` is None for requests failed outside a slot (queued
+        timeout, queue-full rejection, abort of queued work).  Survivor
+        isolation: nothing here touches any other slot or the queue, and
+        per-sequence compute + per-request sampling keys mean the freed
+        slot changing hands cannot perturb surviving token streams."""
+        now = self.clock()
+        req.status = status
+        req.error = error
+        req.finish_t = now
+        self.failed.append(req)
+        if slot is not None:
+            pool = self.pool
+            pc = getattr(self.engine, "prefix_cache", None)
+            if pc is not None and not pc.bypassed and reason == "nan_logits":
+                # the poisoned slot's KV blocks may be indexed for
+                # sharing; drop them (and dependent suffixes) before the
+                # release can hand them to a future prefill
+                pc.invalidate(list(pool.slot_blocks[slot]))
+            pool.release(slot)
+            self.slot_req[slot] = None
+            self.slot_next[slot] = None
+            self.reg.gauge("serve_active_slots").set(self.n_active)
+        self.reg.counter("serve_requests_failed_total").inc(reason=reason)
+        if self.tracer is not None:
+            spans = self._spans.pop(req.rid, None)
+            if spans is not None:
+                for name in ("queue", "decode"):
+                    if name in spans:
+                        self.tracer.end(spans[name], t=now)
+                self.tracer.end(spans["request"], t=now, status=status,
+                                error=error)
+            self.tracer.event("failed", pid=REQUEST_PID, tid=req.rid, t=now,
+                              reason=reason, error=error)
+
+    def _expire_deadlines(self) -> None:
+        """Fail every queued or active request whose TTL has elapsed."""
+        now = self.clock()
+        expired = [r for r in self.queue if r.deadline_s is not None
+                   and now - r.submit_t >= r.deadline_s]
+        if expired:
+            # by identity: Request.__eq__ compares the prompt arrays
+            dead = {id(r) for r in expired}
+            self.queue = deque(r for r in self.queue if id(r) not in dead)
+        for r in expired:
+            self._fail(None, r, "timeout",
+                       f"deadline_s={r.deadline_s} expired after "
+                       f"{now - r.submit_t:.3f}s in queue", status="timeout")
+        if expired:
+            self.reg.gauge("serve_queue_depth").set(len(self.queue))
+        for s, r in enumerate(self.slot_req):
+            if (r is not None and r.deadline_s is not None
+                    and now - r.submit_t >= r.deadline_s):
+                self._fail(s, r, "timeout",
+                           f"deadline_s={r.deadline_s} expired after "
+                           f"{now - r.submit_t:.3f}s "
+                           f"({len(r.tokens)} tokens emitted)",
+                           status="timeout")
+
+    def abort(self) -> List[Request]:
+        """Cancel all in-flight work: every queued and active request is
+        failed with ``status="aborted"`` and its resources released — the
+        mid-stream shutdown path.  Afterwards the pool reconciles
+        (``check_invariants``/``check_leaks`` pass) and the scheduler can
+        keep serving new submissions."""
+        aborted = []
+        while self.queue:
+            r = self.queue.popleft()
+            self._fail(None, r, "aborted", "scheduler aborted",
+                       status="aborted")
+            aborted.append(r)
+        self.reg.gauge("serve_queue_depth").set(0)
+        for s, r in enumerate(self.slot_req):
+            if r is not None:
+                self._fail(s, r, "aborted", "scheduler aborted",
+                           status="aborted")
+                aborted.append(r)
+        return aborted
 
     def _admit(self) -> int:
         admitted = 0
@@ -402,8 +557,13 @@ class ContinuousScheduler:
                 self.tracer.end(spans["prefill"], computed=n_tokens - start,
                                 saved=start, blocks_shared=len(mapped),
                                 cow_copies=n_cow)
-            tok = self._sample(last_logits, req)
-            self._emit(slot, req, tok)  # may stop immediately (max_new == 1)
+            tok, bad = self._sample(last_logits, req)
+            if bad:
+                self._fail(slot, req, "nan_logits",
+                           "non-finite logits at the prefill sample")
+            else:
+                # may stop immediately (max_new == 1)
+                self._emit(slot, req, tok)
             admitted += 1
         return admitted
 
@@ -414,20 +574,32 @@ class ContinuousScheduler:
         return np.zeros((self.pool.n_slots,), np.int32)
 
     def step(self) -> bool:
-        """One scheduler tick: admit into free slots, then decode across
-        all active slots — one batched pool step (``steps_per_sync <= 1``)
-        or one in-graph multi-step window.  Returns False when idle."""
+        """One scheduler tick: expire deadlines, admit into free slots,
+        then decode across all active slots — one batched pool step
+        (``steps_per_sync <= 1``) or one in-graph multi-step window.
+        Returns False when idle."""
+        if self._has_deadlines:
+            self._expire_deadlines()
         admitted = self._admit()
         active = [s for s, r in enumerate(self.slot_req) if r is not None]
         if not active:
+            self._maybe_health()
             return admitted > 0
-        if getattr(self.engine.scfg, "spec_decode", False):
+        if (getattr(self.engine.scfg, "spec_decode", False)
+                and not self.spec_degraded):
             self._step_spec(active)
-            return True
-        w = int(getattr(self.engine.scfg, "steps_per_sync", 1))
-        if w > 1:
-            self._step_window(active, w)
-            return True
+        else:
+            w = int(getattr(self.engine.scfg, "steps_per_sync", 1))
+            if w > 1:
+                self._step_window(active, w)
+            else:
+                self._step_plain(active)
+        self._maybe_health()
+        return True
+
+    def _step_plain(self, active: List[int]) -> None:
+        """One batched decode tick across ``active`` (the non-window,
+        non-spec path; also the degradation fallback for both)."""
         pool = self.pool
         tick_span = (self.tracer.begin("decode_tick", pid=ENGINE_PID, tid=0,
                                        active=len(active))
@@ -442,21 +614,36 @@ class ContinuousScheduler:
             rids[s] = self.slot_req[s].rid
             counts[s] = len(self.slot_req[s].tokens)
         logits, _ = self.engine.pool_step(tokens, pool.lengths, pool.tables)
+        if self._faults is not None:
+            mask = np.zeros((pool.n_slots,), bool)
+            for s in active:
+                req = self.slot_req[s]
+                if self._faults.poison_token(req.rid, len(req.tokens)):
+                    mask[s] = True
+            if mask.any():
+                shape = (pool.n_slots,) + (1,) * (logits.ndim - 1)
+                logits = jnp.where(jnp.asarray(mask).reshape(shape),
+                                   jnp.nan, logits)
         self.decode_steps += 1
         self.busy_slot_steps += len(active)
         self.reg.histogram("serve_decode_utilisation").observe(
             len(active) / pool.n_slots)
-        # sample on device: only the token ids cross to the host (the full
-        # (n_slots, V) logits never materialize host-side)
-        toks = np.asarray(self.engine.sample_slots(logits, rids, counts))
+        # sample on device: only the token ids + the non-finite bitmap
+        # cross to the host (the full (n_slots, V) logits never
+        # materialize host-side)
+        toks, bad = self.engine.sample_slots(logits, rids, counts)
+        toks, bad = np.asarray(toks), np.asarray(bad)
         self.host_syncs += 1
         for s in active:
             req = self.slot_req[s]
             pool.advance(s)  # the decode wrote this slot's KV at `length`
-            self._emit(s, req, toks[s].astype(np.int32))
+            if bad[s]:
+                self._fail(s, req, "nan_logits",
+                           f"non-finite logits at token {len(req.tokens)}")
+            else:
+                self._emit(s, req, toks[s].astype(np.int32))
         if tick_span is not None:
             self.tracer.end(tick_span)
-        return True
 
     def _step_window(self, active: List[int], w: int) -> None:
         """One in-graph decode window: up to ``w`` ticks on device with
@@ -474,6 +661,9 @@ class ContinuousScheduler:
         stops = np.full((n,), -1, np.int32)
         max_new = np.zeros((n,), np.int32)
         alive = np.zeros((n,), bool)
+        poison = None
+        if self._faults is not None:
+            poison = np.full((n,), -1, np.int32)
         for s in active:
             req = self.slot_req[s]
             tokens[s] = self.slot_next[s]
@@ -483,26 +673,45 @@ class ContinuousScheduler:
                 stops[s] = req.stop_token
             max_new[s] = req.max_new_tokens
             alive[s] = True
+            if poison is not None:
+                # earliest planned poison index this window can reach
+                # (later ones stay planned for a later window)
+                poison[s] = self._faults.poison_from(
+                    req.rid, len(req.tokens), len(req.tokens) + w)
             # pre-allocate every block this slot can write inside the
             # window (its table entries are frozen while the loop runs)
             future = min(w, req.max_new_tokens - len(req.tokens))
             pool.ensure_until(s, int(pool.lengths[s]) + future - 1)
-        tok_buf, emit_buf = self.engine.run_window(
+        tok_buf, emit_buf, bad_buf = self.engine.run_window(
             tokens, pool.lengths, pool.tables, counts, rids, stops, max_new,
-            alive)
-        tok_buf, emit_buf = np.asarray(tok_buf), np.asarray(emit_buf)
+            alive, poison)
+        tok_buf, emit_buf, bad_buf = (np.asarray(tok_buf),
+                                      np.asarray(emit_buf),
+                                      np.asarray(bad_buf))
         self.host_syncs += 1
+        reqs0 = list(self.slot_req)  # guards the replay against mid-loop
+        #                              failures freeing/refilling a slot
         for i in range(emit_buf.shape[0]):
-            if not emit_buf[i].any():
+            fired = emit_buf[i] | bad_buf[i]
+            if not fired.any():
                 break  # the device loop exited early (all slots done)
             self.decode_steps += 1
             self.reg.histogram("serve_decode_utilisation").observe(
-                int(emit_buf[i].sum()) / n)
+                int(fired.sum()) / n)
             for s in active:
-                if emit_buf[i, s]:
-                    pool.advance(s)
-                    self.busy_slot_steps += 1
-                    self._emit(s, self.slot_req[s], tok_buf[i, s])
+                req = self.slot_req[s]
+                if req is None or req is not reqs0[s]:
+                    continue  # failed earlier in this replay: slot freed
+                if not fired[s]:
+                    continue
+                pool.advance(s)
+                self.busy_slot_steps += 1
+                if bad_buf[i, s]:
+                    self._fail(s, req, "nan_logits",
+                               f"non-finite logits at token "
+                               f"{len(req.tokens)}")
+                else:
+                    self._emit(s, req, tok_buf[i, s])
         if win_span is not None:
             self.tracer.end(win_span)
 
@@ -517,9 +726,19 @@ class ContinuousScheduler:
         token when all k match), rewinds the pool to the pre-window fill
         and re-advances over the verified chunk.  Every emitted token is
         a *target* argmax, so greedy output is token-identical to the
-        non-spec path — draft quality only moves the acceptance rate."""
+        non-spec path — draft quality only moves the acceptance rate.
+
+        Degradation ladder (graceful, token-identical at every rung):
+        a window that raises falls back to one plain tick for this step
+        and, after ``spec_fail_threshold`` consecutive failures, disables
+        spec decode globally; with ``spec_min_acceptance`` set, a request
+        whose acceptance collapses below the floor over
+        ``spec_accept_window`` windows is bypassed per-slot (only the
+        verified correction token is taken), and a collapsed trailing
+        mean disables globally."""
         pool = self.pool
-        k = int(self.engine.scfg.draft_k)
+        scfg = self.engine.scfg
+        k = int(scfg.draft_k)
         spec_span = (self.tracer.begin("spec_window", pid=ENGINE_PID, tid=0,
                                        k=k, active=len(active))
                      if self.tracer is not None else None)
@@ -530,24 +749,68 @@ class ContinuousScheduler:
             # the verify chunk); all inside the spec_margin reservation
             pool.ensure_until(s, int(pool.lengths[s]) + k)
         n0 = pool.lengths.copy()
-        drafted, target = self.engine.run_spec_window(
-            tokens, pool.lengths, pool.tables)
-        drafted, target = np.asarray(drafted), np.asarray(target)
+        try:
+            drafted, target, bad = self.engine.run_spec_window(
+                tokens, pool.lengths, pool.tables)
+        except Exception as e:
+            # draft window failed before touching pool storage: decode
+            # this step plainly (the extra ensure_until blocks stay
+            # inside the reservation) and count the failure
+            self.reg.counter("serve_draft_failures_total").inc()
+            self._spec_fail_streak += 1
+            if spec_span is not None:
+                self.tracer.end(spec_span, error=repr(e))
+            thresh = max(1, int(getattr(scfg, "spec_fail_threshold", 2)))
+            if not self.spec_degraded and self._spec_fail_streak >= thresh:
+                self.spec_degraded = True
+                self._degrade(
+                    "specdecode",
+                    f"disabled after {self._spec_fail_streak} consecutive "
+                    f"draft-window failures (last: {e!r})")
+            self._step_plain(active)
+            return
+        self._spec_fail_streak = 0
+        drafted, target, bad = (np.asarray(drafted), np.asarray(target),
+                                np.asarray(bad))
         self.host_syncs += 1
         self.decode_steps += 1  # one target verify step per window
         self.spec_windows += 1
         self.busy_slot_steps += len(active)
         self.reg.histogram("serve_decode_utilisation").observe(
             len(active) / pool.n_slots)
+        floor = getattr(scfg, "spec_min_acceptance", None)
+        win = max(1, int(getattr(scfg, "spec_accept_window", 8)))
+        win_drafted = win_accepted = 0
         for s in active:
             req = self.slot_req[s]
+            if bad[s]:
+                # quarantine before any emission: rewind the draft
+                # overshoot so release sees the pre-window fill
+                pool.rewind(s, int(n0[s]))
+                self._fail(s, req, "nan_logits",
+                           f"non-finite verify logits at token "
+                           f"{len(req.tokens)}")
+                continue
             g, t = drafted[s], target[s]
+            bypassed = req.rid in self._spec_bypass
             acc = 0
-            while acc < k and g[acc] == t[acc]:
-                acc += 1
-            self.spec_draft_tokens += k
-            self.spec_accepted_tokens += acc
-            self.reg.histogram("serve_spec_accepted_per_window").observe(acc)
+            if not bypassed:
+                while acc < k and g[acc] == t[acc]:
+                    acc += 1
+                self.spec_draft_tokens += k
+                self.spec_accepted_tokens += acc
+                self.reg.histogram(
+                    "serve_spec_accepted_per_window").observe(acc)
+                win_drafted += k
+                win_accepted += acc
+            # fault plan: a poison index among the tokens this window
+            # will emit fails the request at exactly that position (the
+            # on-device bad mask covers organically non-finite verify
+            # logits; injection is host-side here)
+            pidx = -1
+            if self._faults is not None:
+                pidx = self._faults.poison_from(
+                    req.rid, len(req.tokens), len(req.tokens) + acc + 1)
             # rollback: truncate draft-appended K/V to the pre-window fill
             # (free on paged storage — the verify pass already overwrote
             # positions [n0, n0+k] with target KV, and re-advancing below
@@ -555,10 +818,78 @@ class ContinuousScheduler:
             pool.rewind(s, int(n0[s]))
             for tok in t[:acc + 1]:  # accepted run + correction/bonus
                 pool.advance(s)
+                if pidx >= 0 and len(req.tokens) == pidx:
+                    self._fail(s, req, "nan_logits",
+                               f"non-finite logits at token {pidx}")
+                    break
                 if self._emit(s, req, np.int32(tok)):
                     break  # stop token / max_new mid-window: drop the rest
+            if floor is not None and not bypassed:
+                st = self._req_spec.setdefault(req.rid, [0, 0, 0])
+                st[0] += 1
+                st[1] += k
+                st[2] += acc
+                if (st[0] >= win and st[1]
+                        and st[2] / st[1] < floor
+                        and req.rid not in self._spec_bypass
+                        and self.slot_req[s] is req):
+                    self._spec_bypass.add(req.rid)
+                    self._degrade(
+                        "specdecode",
+                        f"r{req.rid} bypassed: acceptance "
+                        f"{st[2] / st[1]:.2f} < {floor} over "
+                        f"{st[0]} windows")
+        if floor is not None and win_drafted:
+            self._acc_recent.append(win_accepted / win_drafted)
+            mean = sum(self._acc_recent) / len(self._acc_recent)
+            if (len(self._acc_recent) == self._acc_recent.maxlen
+                    and not self.spec_degraded and mean < floor):
+                self.spec_degraded = True
+                self._degrade(
+                    "specdecode",
+                    f"disabled: mean acceptance {mean:.2f} < {floor} over "
+                    f"the last {len(self._acc_recent)} windows")
         if spec_span is not None:
             self.tracer.end(spec_span)
+
+    # -- health / degradation ------------------------------------------
+    def _degrade(self, subsystem: str, detail: str) -> None:
+        """Count + trace one graceful-degradation event."""
+        self.reg.counter("serve_degraded_events_total").inc(
+            subsystem=subsystem)
+        if self.tracer is not None:
+            self.tracer.event("degraded", pid=ENGINE_PID, tid=0,
+                              subsystem=subsystem, detail=detail)
+
+    def _maybe_health(self) -> None:
+        if self._health_every is None:
+            return
+        if self.host_syncs - self._last_health >= int(self._health_every):
+            self._health_cycle()
+
+    def _health_cycle(self) -> None:
+        """Periodic self-healing sweep (``health_every_syncs``): bypass a
+        corrupted prefix-cache index, then audit the pool and reclaim
+        anything leaked — counted recoverable events instead of a
+        teardown-time ``RuntimeError``."""
+        self._last_health = self.host_syncs
+        pool = self.pool
+        pc = getattr(self.engine, "prefix_cache", None)
+        # bypass before the pool audit so blocks orphaned by the dropped
+        # index are reclaimed in the same sweep
+        if pc is not None and not pc.bypassed:
+            issues = pc.check_invariants()
+            if issues:
+                pc.bypass()
+                self._degrade("prefixcache",
+                              f"index corruption -> serving unshared "
+                              f"({issues[0]})")
+        issues = pool.audit()
+        if issues:
+            fixed = pool.recover()
+            self._degrade("kvpool",
+                          f"audit found {len(issues)} issue(s), recovered "
+                          f"{fixed} ({issues[0]})")
 
     def drain(self, max_steps: Optional[int] = None) -> List[Request]:
         """Run to completion.  With ``ServeConfig(drain_timeout_s=...)`` a
@@ -567,16 +898,16 @@ class ContinuousScheduler:
         last trace span — instead of spinning on a wedged slot forever."""
         steps = 0
         timeout = getattr(self.engine.scfg, "drain_timeout_s", None)
-        last_state = (self.tokens_generated, len(self.done), self.n_active,
-                      len(self.queue))
+        last_state = (self.tokens_generated, len(self.done),
+                      len(self.failed), self.n_active, len(self.queue))
         last_progress_t = self.clock()
         while self.queue or self.n_active:
             progressed = self.step()
             if not progressed and (self.queue or self.n_active):
                 raise self._stall_error("scheduler stalled with pending work")
             if timeout is not None:
-                state = (self.tokens_generated, len(self.done), self.n_active,
-                         len(self.queue))
+                state = (self.tokens_generated, len(self.done),
+                         len(self.failed), self.n_active, len(self.queue))
                 now = self.clock()
                 if state != last_state:
                     last_state, last_progress_t = state, now
@@ -588,6 +919,9 @@ class ContinuousScheduler:
             steps += 1
             if max_steps is not None and steps >= max_steps:
                 break
+        if self._health_every is not None:
+            self._health_cycle()  # reclaim anything leaked mid-run before
+            #                       teardown-time check_leaks can trip
         return self.done
 
     def _stall_error(self, reason: str) -> RuntimeError:
@@ -767,6 +1101,18 @@ def run_continuous_trace(engine, *, n_requests: int = 8, prompt_len: int = 12,
               f"{fmt(a['mean_ttft_s'], 1e3, ' ms')}, mean queue wait "
               f"{fmt(a['mean_queue_wait_s'], 1e3, ' ms')}")
         print(f"[continuous] tokens sha1 {a['tokens_sha1']}")
+        # per-request digests: the chaos CI cell diffs the surviving
+        # (status=done) lines of a fault-injected run against the clean
+        # run's — bit-identical survivors is the isolation invariant
+        for r in sorted(trace, key=lambda r: r.rid):
+            digest = hashlib.sha1(np.ascontiguousarray(
+                r.token_array()).tobytes()).hexdigest()[:16]
+            print(f"[req] r{r.rid} status={r.status} "
+                  f"tokens={len(r.tokens)} sha1={digest}")
+        unfinished = [r for r in trace if r.status != "done"]
+        if unfinished:
+            print(f"[continuous] {len(unfinished)} request(s) failed: "
+                  + ", ".join(f"r{r.rid}={r.status}" for r in unfinished))
         if a["prefix_cache"] is not None:
             hr = a["prefix_hit_rate"]
             print(f"[continuous] prefix cache: hit rate "

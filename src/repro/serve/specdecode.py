@@ -271,7 +271,10 @@ def build_spec_window(engine):
     """Jit the in-graph draft-k/verify-1 window for ``engine``.
 
     Returns ``window(params, draft_params, tokens, lengths, tables,
-    paged, state) -> (drafted (S, k), target (S, k+1), paged, state)``.
+    paged, state) -> (drafted (S, k), target (S, k+1), bad (S,), paged,
+    state)``, where ``bad`` flags slots whose verify logits contain any
+    non-finite value (the scheduler quarantines those requests; the
+    emitted chain for a healthy slot is unaffected).
 
     The k draft ticks run the engine's ordinary decode tick (fused paged
     kernel or vmapped baseline) with the *draft* weights, feeding each
@@ -308,6 +311,8 @@ def build_spec_window(engine):
         vlogits, paged, state, _ = verify(
             params, chunk, lengths, tables, paged, state)
         target = jnp.argmax(vlogits, axis=-1).astype(jnp.int32)  # (S, k+1)
-        return drafted, target, paged, state
+        bad = ~jnp.isfinite(
+            vlogits.reshape((vlogits.shape[0], -1))).all(axis=-1)  # (S,)
+        return drafted, target, bad, paged, state
 
     return jax.jit(window, donate_argnums=(5, 6))

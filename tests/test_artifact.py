@@ -201,6 +201,124 @@ def test_load_missing_dir_raises(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# Corrupted artifacts fail with the path and a hint, never a raw
+# KeyError/BadZipFile
+# ---------------------------------------------------------------------------
+
+
+def test_load_truncated_shard_names_path(quantized, tmp_path):
+    import os
+
+    _, _, qm, _ = quantized["dense"]
+    d = str(tmp_path / "trunc")
+    stepdir = qm.save(d)
+    shard = os.path.join(stepdir, "shard_0.npz")
+    with open(shard, "r+b") as f:  # chop the zip central directory off
+        f.truncate(os.path.getsize(shard) // 2)
+    with pytest.raises(ValueError, match=r"shard_0\.npz.*truncated"):
+        api.load_quantized(d)
+
+
+def test_load_missing_manifest_explains_interrupted_save(quantized, tmp_path):
+    import os
+
+    _, _, qm, _ = quantized["dense"]
+    d = str(tmp_path / "noman")
+    stepdir = qm.save(d)
+    os.unlink(os.path.join(stepdir, "manifest.json"))
+    with pytest.raises(ValueError, match="no manifest.json"):
+        api.load_quantized(d)
+
+
+def test_load_unknown_format_version_raises(quantized, tmp_path):
+    import json
+    import os
+
+    _, _, qm, _ = quantized["dense"]
+    d = str(tmp_path / "future")
+    stepdir = qm.save(d)
+    man_path = os.path.join(stepdir, "manifest.json")
+    with open(man_path) as f:
+        man = json.load(f)
+    man["format"] = 99
+    with open(man_path, "w") as f:
+        json.dump(man, f)
+    with pytest.raises(ValueError, match="format 99 is newer"):
+        api.load_quantized(d)
+
+
+def test_load_manifest_missing_key_raises(quantized, tmp_path):
+    import json
+    import os
+
+    _, _, qm, _ = quantized["dense"]
+    d = str(tmp_path / "nokey")
+    stepdir = qm.save(d)
+    man_path = os.path.join(stepdir, "manifest.json")
+    with open(man_path) as f:
+        man = json.load(f)
+    del man["packed"]
+    with open(man_path, "w") as f:
+        json.dump(man, f)
+    with pytest.raises(ValueError, match="missing the 'packed' entry"):
+        api.load_quantized(d)
+
+
+def test_load_wrong_kind_raises(quantized, tmp_path):
+    import json
+    import os
+
+    _, _, qm, _ = quantized["dense"]
+    d = str(tmp_path / "kind")
+    stepdir = qm.save(d)
+    man_path = os.path.join(stepdir, "manifest.json")
+    with open(man_path) as f:
+        man = json.load(f)
+    man["kind"] = "trainer-checkpoint"
+    with open(man_path, "w") as f:
+        json.dump(man, f)
+    with pytest.raises(ValueError, match="expected 'quantized-model'"):
+        api.load_quantized(d)
+
+
+def test_load_missing_shard_raises(quantized, tmp_path):
+    import os
+
+    _, _, qm, _ = quantized["dense"]
+    d = str(tmp_path / "noshard")
+    qm.save(d, shards=2)
+    stepdir = os.path.join(d, "step_00000000")
+    os.unlink(os.path.join(stepdir, "shard_1.npz"))
+    with pytest.raises(ValueError, match=r"missing shard 1 of 2"):
+        api.load_quantized(d)
+
+
+def test_restore_checkpoint_truncated_shard_names_path(tmp_path):
+    import os
+
+    from repro.checkpoint import ckpt
+
+    tree = {"w": np.arange(6, dtype=np.float32)}
+    d = str(tmp_path / "ck")
+    stepdir = ckpt.save_checkpoint(d, 0, tree)
+    shard = os.path.join(stepdir, "shard_0.npz")
+    with open(shard, "r+b") as f:
+        f.truncate(os.path.getsize(shard) // 2)
+    with pytest.raises(ValueError, match=r"shard_0\.npz.*truncated"):
+        ckpt.restore_checkpoint(d, tree)
+
+
+def test_restore_checkpoint_template_mismatch_names_key(tmp_path):
+    from repro.checkpoint import ckpt
+
+    d = str(tmp_path / "ck2")
+    ckpt.save_checkpoint(d, 0, {"w": np.arange(6, dtype=np.float32)})
+    with pytest.raises(ValueError, match="no entry 'other'"):
+        ckpt.restore_checkpoint(
+            d, {"other": np.zeros((6,), np.float32)})
+
+
+# ---------------------------------------------------------------------------
 # Serving off the artifact
 # ---------------------------------------------------------------------------
 

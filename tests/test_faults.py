@@ -1,0 +1,542 @@
+"""Fault-injection chaos tests: the serving robustness contract.
+
+The invariant everything here locks down: **under any injected fault
+plan, every surviving request's token stream is bit-identical to the
+fault-free run, and the pool reconciles after drain** — a poisoned
+request, a throwing callback, a failing draft window, a corrupted prefix
+index, or an expiring deadline takes down exactly one request (or one
+subsystem's fast path), never the engine and never a survivor's tokens.
+
+Why survivors can be bit-identical at all: prefill and decode are
+per-sequence computations and sampling keys are per-request
+(fold_in(seed, rid)), so failures changing *scheduling* (a freed slot
+refills earlier) cannot change any surviving sequence's logits or draws.
+
+Also covered: ``faults=None`` is bit-identical to pre-robustness
+behaviour (tokens and ``scheduler.metrics()``), deadlines/backpressure,
+spec-decode degradation, the health cycle's leak recovery, and
+``engine.health()``.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import QuantizeSpec
+from repro.models.registry import get_arch
+from repro.serve import FaultPlan, QueueFull
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.faults import FaultInjector, InjectedFault, StallClock
+
+FAMILY_ARCHS = {
+    "dense": "smollm-135m",
+    "moe": "deepseek-moe-16b",
+    "mla": "minicpm3-4b",
+}
+FAMILIES = sorted(FAMILY_ARCHS)
+
+
+@pytest.fixture(scope="module")
+def models():
+    out = {}
+    for family, name in FAMILY_ARCHS.items():
+        arch = get_arch(name, reduced=True)
+        out[family] = (arch, arch.init(jax.random.PRNGKey(0), jnp.float32))
+    return out
+
+
+def _prompts(cfg, b, s, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab, size=(b, s)).astype(np.int32)
+
+
+def _run(arch, params, scfg, prompts, max_new=6, deadlines=None, spec=None,
+         draft_params=None):
+    eng = ServeEngine(arch, params, scfg, spec or QuantizeSpec(),
+                      draft_params=draft_params)
+    reqs = []
+    for i, p in enumerate(prompts):
+        dl = None if deadlines is None else deadlines.get(i)
+        reqs.append(eng.submit(p, max_new, deadline_s=dl))
+    eng.drain()
+    return eng, reqs
+
+
+def _tokens(reqs):
+    return {r.rid: r.token_array().tolist() for r in reqs}
+
+
+# ---------------------------------------------------------------------------
+# The chaos invariant: combined fault plan, survivors bit-identical
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+@pytest.mark.parametrize("kv_bits", [16, 4])
+def test_chaos_survivors_bit_identical(models, family, kv_bits):
+    """One run under a combined plan — NaN logits, a throwing callback,
+    a leaked pool block, a corrupted prefix index, and a zero-TTL
+    request — against the clean run: every surviving request's tokens
+    match bit-for-bit, every failed request carries status/error, and
+    the pool passes check_invariants after drain."""
+    arch, params = models[family]
+    spec = QuantizeSpec(kv_bits=kv_bits)
+    prompts = _prompts(arch.config, 6, 8)
+    base = dict(max_seq=48, batch_slots=2, block_tokens=4, prefix_cache=True)
+
+    _, clean = _run(arch, params, ServeConfig(**base), prompts, spec=spec)
+    want = _tokens(clean)
+
+    plan = FaultPlan(
+        nan_logits=[(1, 2)],        # r1 poisoned at its 3rd token
+        callback_raise=[(3, 1)],    # r3's callback throws on its 2nd token
+        leak_block=[0],             # first release leaks a block
+        corrupt_prefix=[1],         # second insert plants a bogus node
+    )
+    eng, reqs = _run(
+        arch, params,
+        ServeConfig(**base, faults=plan, health_every_syncs=3),
+        prompts, spec=spec, deadlines={5: 0.0})  # r5 expires in queue
+
+    failed = {r.rid: r for r in reqs if r.status != "done"}
+    assert set(failed) == {1, 3, 5}
+    assert failed[1].status == "failed" and "non-finite" in failed[1].error
+    assert failed[3].status == "failed" and "callback" in failed[3].error
+    assert failed[5].status == "timeout" and failed[5].error
+    # partial progress is preserved up to the failure point
+    assert _tokens([failed[1]])[1] == want[1][:2]
+    for r in reqs:
+        if r.status == "done":
+            assert r.token_array().tolist() == want[r.rid], f"r{r.rid}"
+            assert r.error is None
+    # resources reconciled: no leaked or double-owned blocks survive the
+    # plan (the health cycle reclaimed the injected leak as a counted
+    # recoverable event)
+    eng.pool.check_invariants()
+    assert eng.faults.leaked_blocks, "the leak must actually have fired"
+    assert len(eng.faults.fired) >= 4
+    # failures surfaced through the registry, not metrics() aggregates
+    reg = eng.scheduler.reg
+    by_reason = reg.counter("serve_requests_failed_total")
+    assert by_reason.value(reason="nan_logits") == 1
+    assert by_reason.value(reason="callback") == 1
+    assert by_reason.value(reason="timeout") == 1
+    assert reg.counter("kvpool_blocks_recovered_total").value() >= 1
+
+
+@pytest.mark.parametrize("steps_per_sync", [1, 4])
+def test_nan_quarantine_tick_and_window(models, steps_per_sync):
+    """NaN isolation on both decode paths: the poisoned request fails at
+    exactly the planned token index; survivors and the pool are clean."""
+    arch, params = models["dense"]
+    prompts = _prompts(arch.config, 3, 8)
+    base = dict(max_seq=32, batch_slots=2, block_tokens=8,
+                steps_per_sync=steps_per_sync)
+    _, clean = _run(arch, params, ServeConfig(**base), prompts)
+    want = _tokens(clean)
+    eng, reqs = _run(arch, params,
+                     ServeConfig(**base, faults=FaultPlan(nan_logits=[(0, 3)])),
+                     prompts)
+    assert reqs[0].status == "failed"
+    assert len(reqs[0].tokens) == 3  # tokens before the poisoned index
+    assert reqs[0].token_array().tolist() == want[0][:3]
+    assert reqs[1].token_array().tolist() == want[1]
+    assert reqs[2].token_array().tolist() == want[2]
+    eng.pool.check_invariants()
+    eng.pool.check_leaks()
+
+
+def test_nan_at_prefill_sample(models):
+    """Poison index 0 fires on the admission sample: the request fails
+    with zero tokens, the slot refills, survivors unaffected."""
+    arch, params = models["dense"]
+    prompts = _prompts(arch.config, 3, 8)
+    base = dict(max_seq=32, batch_slots=2, block_tokens=8)
+    _, clean = _run(arch, params, ServeConfig(**base), prompts)
+    eng, reqs = _run(arch, params,
+                     ServeConfig(**base, faults=FaultPlan(nan_logits=[(1, 0)])),
+                     prompts)
+    assert reqs[1].status == "failed" and len(reqs[1].tokens) == 0
+    assert reqs[1].token_array().shape == (0,)
+    assert reqs[0].token_array().tolist() == _tokens(clean)[0]
+    assert reqs[2].token_array().tolist() == _tokens(clean)[2]
+    eng.pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Satellite: guarded on_token callbacks (the scheduler.py:307 regression)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("steps_per_sync", [1, 4])
+def test_callback_exception_mid_replay_is_isolated(models, steps_per_sync):
+    """A user callback that throws mid-window-replay (the previously
+    unguarded call) fails only its own request; the replay loop keeps
+    emitting for every other slot and slot/emission state stays
+    consistent (pool reconciles, survivors bit-identical)."""
+    arch, params = models["dense"]
+    prompts = _prompts(arch.config, 3, 8)
+    base = dict(max_seq=32, batch_slots=2, block_tokens=8,
+                steps_per_sync=steps_per_sync)
+    _, clean = _run(arch, params, ServeConfig(**base), prompts)
+    want = _tokens(clean)
+
+    seen = []
+
+    def boom(req, tok, done):
+        seen.append((req.rid, int(tok)))
+        if req.rid == 0 and len(req.tokens) == 3:
+            raise RuntimeError("user callback bug")
+
+    eng = ServeEngine(arch, params, ServeConfig(**base))
+    reqs = [eng.submit(p, 6, on_token=boom) for p in prompts]
+    eng.drain()
+    assert reqs[0].status == "failed"
+    assert "user callback bug" in reqs[0].error
+    assert len(reqs[0].tokens) == 3  # kept the tokens emitted so far
+    assert reqs[1].token_array().tolist() == want[1]
+    assert reqs[2].token_array().tolist() == want[2]
+    # survivors' callbacks all fired, in token order
+    for rid in (1, 2):
+        assert [t for r, t in seen if r == rid] == want[rid]
+    eng.pool.check_invariants()
+    eng.pool.check_leaks()
+
+
+def test_injected_callback_fault_without_user_callback(models):
+    """The callback_raise injection point fires even when the request
+    installed no on_token (the guard wraps the whole emission hook)."""
+    arch, params = models["dense"]
+    prompts = _prompts(arch.config, 2, 8)
+    eng, reqs = _run(arch, params,
+                     ServeConfig(max_seq=32, batch_slots=2, block_tokens=8,
+                                 faults=FaultPlan(callback_raise=[(0, 1)])),
+                     prompts)
+    assert reqs[0].status == "failed" and "InjectedFault" in reqs[0].error
+    assert reqs[1].status == "done"
+    eng.pool.check_invariants()
+    eng.pool.check_leaks()
+
+
+# ---------------------------------------------------------------------------
+# Spec decode: draft failure fallback + degradation, NaN in verify
+# ---------------------------------------------------------------------------
+
+
+def _spec_cfg(**kw):
+    return ServeConfig(max_seq=48, batch_slots=2, block_tokens=8,
+                       spec_decode=True, draft_k=2, **kw)
+
+
+def test_draft_failure_falls_back_token_identically(models):
+    """Every spec window raising: output still bit-identical to the
+    plain run; after spec_fail_threshold consecutive failures spec decode
+    is disabled globally (counted degradation, engine degraded)."""
+    arch, params = models["dense"]
+    draft = arch.init(jax.random.PRNGKey(1), jnp.float32)
+    prompts = _prompts(arch.config, 3, 8)
+    _, clean = _run(arch, params,
+                    ServeConfig(max_seq=32, batch_slots=2, block_tokens=8),
+                    prompts)
+    eng, reqs = _run(
+        arch, params,
+        _spec_cfg(faults=FaultPlan(draft_fail=list(range(50))),
+                  spec_fail_threshold=2),
+        prompts, draft_params=draft)
+    assert _tokens(reqs) == _tokens(clean)
+    assert eng.scheduler.spec_degraded
+    assert eng.health()["status"] == "degraded"
+    assert eng.health()["spec_decode"]["degraded"]
+    reg = eng.scheduler.reg
+    assert reg.counter("serve_draft_failures_total").value() == 2
+    assert reg.counter("serve_degraded_events_total").value(
+        subsystem="specdecode") == 1
+    eng.pool.check_invariants()
+    eng.pool.check_leaks()
+
+
+def test_single_draft_failure_recovers_without_degrading(models):
+    """One failing window below the threshold: that step decodes plainly,
+    spec decode stays on, tokens still bit-identical."""
+    arch, params = models["dense"]
+    draft = arch.init(jax.random.PRNGKey(1), jnp.float32)
+    prompts = _prompts(arch.config, 3, 8)
+    _, clean = _run(arch, params,
+                    ServeConfig(max_seq=32, batch_slots=2, block_tokens=8),
+                    prompts)
+    eng, reqs = _run(arch, params,
+                     _spec_cfg(faults=FaultPlan(draft_fail=[1]),
+                               spec_fail_threshold=2),
+                     prompts, draft_params=draft)
+    assert _tokens(reqs) == _tokens(clean)
+    assert not eng.scheduler.spec_degraded
+    assert eng.scheduler.spec_windows > 0
+    eng.pool.check_invariants()
+
+
+def test_spec_nan_verify_quarantines_request(models):
+    """NaN injected at a spec-decoded position: the poisoned request
+    fails mid-stream with its pre-fault tokens intact; survivors match
+    the clean run bit-for-bit."""
+    arch, params = models["dense"]
+    draft = arch.init(jax.random.PRNGKey(1), jnp.float32)
+    prompts = _prompts(arch.config, 3, 8)
+    _, clean = _run(arch, params,
+                    ServeConfig(max_seq=32, batch_slots=2, block_tokens=8),
+                    prompts)
+    want = _tokens(clean)
+    eng, reqs = _run(arch, params,
+                     _spec_cfg(faults=FaultPlan(nan_logits=[(2, 1)])),
+                     prompts, draft_params=draft)
+    assert reqs[2].status == "failed" and len(reqs[2].tokens) == 1
+    assert reqs[2].token_array().tolist() == want[2][:1]
+    assert reqs[0].token_array().tolist() == want[0]
+    assert reqs[1].token_array().tolist() == want[1]
+    eng.pool.check_invariants()
+    eng.pool.check_leaks()
+
+
+def test_acceptance_floor_degrades_token_identically(models):
+    """A floor above the mismatched draft's real acceptance rate trips
+    per-slot bypass then global disable — tokens never change."""
+    arch, params = models["dense"]
+    draft = arch.init(jax.random.PRNGKey(1), jnp.float32)  # random draft
+    prompts = _prompts(arch.config, 4, 8)
+    _, clean = _run(arch, params,
+                    ServeConfig(max_seq=32, batch_slots=2, block_tokens=8),
+                    prompts, max_new=8)
+    eng, reqs = _run(arch, params,
+                     _spec_cfg(spec_min_acceptance=0.99,
+                               spec_accept_window=2),
+                     prompts, max_new=8, draft_params=draft)
+    assert _tokens(reqs) == _tokens(clean)
+    assert (eng.scheduler.spec_degraded
+            or eng.scheduler._spec_bypass), "floor must have tripped"
+    eng.pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Pool corruption + health cycle self-healing
+# ---------------------------------------------------------------------------
+
+
+def test_leaked_block_recovered_by_health_cycle(models):
+    """An injected free-list leak is found and reclaimed by the periodic
+    audit as a counted recoverable event — check_leaks passes at drain
+    instead of raising at teardown."""
+    arch, params = models["dense"]
+    prompts = _prompts(arch.config, 4, 8)
+    base = dict(max_seq=32, batch_slots=2, block_tokens=8)
+    _, clean = _run(arch, params, ServeConfig(**base), prompts)
+    eng, reqs = _run(arch, params,
+                     ServeConfig(**base, faults=FaultPlan(leak_block=[0, 1]),
+                                 health_every_syncs=2),
+                     prompts)
+    assert _tokens(reqs) == _tokens(clean)
+    assert len(eng.faults.leaked_blocks) == 2
+    eng.pool.check_invariants()
+    eng.pool.check_leaks()
+    assert eng.scheduler.reg.counter(
+        "kvpool_blocks_recovered_total").value() == 2
+    assert eng.health()["pool"]["invariants_ok"]
+
+
+def test_prefix_corruption_self_bypasses(models):
+    """A corrupted prefix index flips the cache to bypass (serving
+    unshared, counted) instead of crashing; tokens are unchanged and the
+    cache stays off until flushed."""
+    arch, params = models["dense"]
+    prompts = _prompts(arch.config, 4, 8)
+    base = dict(max_seq=32, batch_slots=2, block_tokens=4, prefix_cache=True)
+    _, clean = _run(arch, params, ServeConfig(**base), prompts)
+    eng, reqs = _run(arch, params,
+                     ServeConfig(**base,
+                                 faults=FaultPlan(corrupt_prefix=[0]),
+                                 health_every_syncs=2),
+                     prompts)
+    assert _tokens(reqs) == _tokens(clean)
+    pc = eng.prefix_cache
+    assert pc.bypassed
+    assert pc.stats()["bypassed"]
+    assert eng.health()["prefix_cache"]["bypassed"]
+    assert eng.scheduler.reg.counter("serve_degraded_events_total").value(
+        subsystem="prefixcache") == 1
+    # bypassed lookups serve unshared and are counted
+    before = pc.stats()["bypass_lookups"]
+    nxt = eng.submit(prompts[0], 3)
+    eng.drain()
+    assert nxt.status == "done"
+    assert pc.stats()["bypass_lookups"] > before
+    eng.pool.check_invariants()
+    # flush re-arms the cache
+    pc.flush()
+    assert not pc.bypassed
+    eng.pool.check_leaks()
+
+
+# ---------------------------------------------------------------------------
+# Deadlines, backpressure, clock stalls
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_expires_in_queue_and_mid_decode(models):
+    arch, params = models["dense"]
+    cfg = arch.config
+    prompts = _prompts(cfg, 3, 8)
+    base = dict(max_seq=32, batch_slots=1, block_tokens=8)
+    _, clean = _run(arch, params, ServeConfig(**base), prompts)
+    # r2 has TTL 0: admitted work never starts, it expires in queue
+    eng, reqs = _run(arch, params, ServeConfig(**base), prompts,
+                     deadlines={2: 0.0})
+    assert reqs[2].status == "timeout" and "in queue" in reqs[2].error
+    assert len(reqs[2].tokens) == 0
+    assert reqs[0].token_array().tolist() == _tokens(clean)[0]
+    assert reqs[1].token_array().tolist() == _tokens(clean)[1]
+    eng.pool.check_invariants()
+    eng.pool.check_leaks()
+
+    # a clock stall mid-decode expires an *active* request
+    eng = ServeEngine(arch, params, ServeConfig(
+        **base, faults=FaultPlan(clock_stall=[(10, 600.0)])))
+    r = eng.submit(prompts[0], 6, deadline_s=60.0)
+    eng.drain()
+    assert r.status == "timeout" and "tokens emitted" in r.error
+    eng.pool.check_invariants()
+    eng.pool.check_leaks()
+
+
+def test_max_queue_reject_and_raise(models):
+    arch, params = models["dense"]
+    prompts = _prompts(arch.config, 4, 8)
+    base = dict(max_seq=32, batch_slots=1, block_tokens=8, max_queue=2)
+    eng = ServeEngine(arch, params, ServeConfig(**base))
+    rs = [eng.submit(p, 4) for p in prompts]
+    # max_queue bounds *waiting* submissions: the 3rd and 4th arrive with
+    # two already queued and are shed
+    assert [r.status for r in rs] == ["queued", "queued",
+                                      "rejected", "rejected"]
+    assert rs[2].error and "queue full" in rs[2].error
+    assert rs[2].rid >= 0  # identifiable in logs/metrics
+    eng.drain()
+    assert all(r.status == "done" for r in rs[:2])
+    assert eng.scheduler.reg.counter("serve_requests_failed_total").value(
+        reason="queue_full") == 2
+    eng.pool.check_invariants()
+    eng.pool.check_leaks()
+
+    eng = ServeEngine(arch, params, ServeConfig(**base,
+                                                queue_policy="raise"))
+    for p in prompts[:2]:
+        eng.submit(p, 4)
+    with pytest.raises(QueueFull, match="admission queue full"):
+        eng.submit(prompts[2], 4)
+    eng.drain()
+
+
+# ---------------------------------------------------------------------------
+# Zero-overhead / bit-identity when faults are off
+# ---------------------------------------------------------------------------
+
+
+def test_faults_none_bit_identical_to_empty_plan(models):
+    """faults=None (injection compiled out) and FaultPlan() (machinery
+    armed, nothing fires) agree on every token and every deterministic
+    metrics() aggregate — the zero-overhead discipline."""
+    arch, params = models["dense"]
+    prompts = _prompts(arch.config, 4, 8)
+    base = dict(max_seq=48, batch_slots=2, block_tokens=4, prefix_cache=True)
+    eng_a, ra = _run(arch, params, ServeConfig(**base), prompts)
+    eng_b, rb = _run(arch, params, ServeConfig(**base, faults=FaultPlan()),
+                     prompts)
+    assert _tokens(ra) == _tokens(rb)
+    ma = eng_a.scheduler.metrics()["aggregate"]
+    mb = eng_b.scheduler.metrics()["aggregate"]
+    volatile = {"wall_s", "tokens_per_s", "mean_ttft_s",
+                "mean_queue_wait_s"}
+    for k in ma:
+        if k not in volatile:
+            assert ma[k] == mb[k], k
+    assert eng_b.faults.fired == []
+
+
+def test_metrics_keys_unchanged_by_robustness_layer(models):
+    """metrics() must not grow aggregate keys (the pre-PR contract);
+    failures live in engine.health() and the registry instead."""
+    arch, params = models["dense"]
+    prompts = _prompts(arch.config, 2, 8)
+    eng, _ = _run(arch, params,
+                  ServeConfig(max_seq=32, batch_slots=2, block_tokens=8),
+                  prompts)
+    agg = eng.scheduler.metrics()["aggregate"]
+    assert set(agg) == {
+        "n_requests", "decode_steps", "busy_slot_steps", "slot_utilisation",
+        "tokens_generated", "host_syncs", "tokens_per_s",
+        "mean_queue_wait_s", "mean_ttft_s", "prefill_tokens_computed",
+        "prefill_tokens_saved", "prefix_hit_rate", "blocks_shared",
+        "cow_copies", "spec_windows", "spec_draft_tokens",
+        "spec_accepted_tokens", "spec_acceptance_rate", "prefix_cache",
+    }
+
+
+def test_health_snapshot_shape(models):
+    arch, params = models["dense"]
+    prompts = _prompts(arch.config, 2, 8)
+    eng, _ = _run(arch, params,
+                  ServeConfig(max_seq=32, batch_slots=2, block_tokens=4,
+                              prefix_cache=True),
+                  prompts)
+    h = eng.health()
+    assert h["status"] == "ok"
+    assert h["requests_done"] == 2 and h["requests_failed"] == 0
+    assert h["pool"]["invariants_ok"]
+    assert h["pool"]["free_blocks"] <= h["pool"]["capacity_blocks"]
+    assert h["prefix_cache"] is not None
+    assert h["spec_decode"] == {"enabled": False, "degraded": False}
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan / injector unit behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_json_roundtrip(tmp_path):
+    plan = FaultPlan(nan_logits=[(1, 2)], callback_raise=[(3, 0)],
+                     draft_fail=[5], leak_block=[0], corrupt_prefix=[2],
+                     clock_stall=[(7, 1.5)])
+    again = FaultPlan.from_json(plan.to_json())
+    assert again == plan
+    path = tmp_path / "plan.json"
+    path.write_text(plan.to_json())
+    assert FaultPlan.from_json(f"@{path}") == plan
+    assert FaultPlan().empty and not plan.empty
+    with pytest.raises(ValueError, match="unknown fault plan keys"):
+        FaultPlan.from_json('{"bogus": []}')
+    with pytest.raises(ValueError, match="JSON object"):
+        FaultPlan.from_json("[1, 2]")
+
+
+def test_injector_fires_each_entry_once():
+    inj = FaultInjector(FaultPlan(nan_logits=[(0, 1), (0, 4)]))
+    assert not inj.poison_token(0, 0)
+    assert inj.poison_token(0, 1)
+    assert not inj.poison_token(0, 1)  # consumed
+    # windowed lookup respects the reach limit and keeps later entries
+    assert inj.poison_from(0, 2, 4) == -1  # idx 4 beyond [2, 4)
+    assert inj.poison_from(0, 2, 5) == 4
+    assert inj.poison_from(0, 2, 5) == -1
+    assert inj.fired == ["nan_logits r0 t1", "nan_logits r0 t4"]
+
+
+def test_stall_clock_jumps_at_ordinals():
+    base_t = [0.0]
+
+    def base():
+        base_t[0] += 1.0
+        return base_t[0]
+
+    clock = StallClock(base, ((2, 10.0),))
+    assert clock() == 1.0
+    assert clock() == 2.0
+    assert clock() == 13.0  # 3.0 + 10.0, offset is cumulative
+    assert clock() == 14.0

@@ -252,3 +252,69 @@ def test_submit_validation(models):
         eng.submit(_prompts(cfg, 1, 14)[0], 8)  # 14 + 7 > 16-token view
     with pytest.raises(ValueError, match="max_new_tokens"):
         eng.submit(_prompts(cfg, 1, 4)[0], 0)
+
+
+# ---------------------------------------------------------------------------
+# Mid-stream abort: dropping a scheduler with live work reconciles the pool
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("prefix_cache", [False, True])
+def test_abort_mid_stream_reconciles_pool(models, prefix_cache):
+    """abort() with active slots AND queued requests: every request comes
+    back status="aborted" with blocks and prefix-cache refs released — the
+    pool passes check_invariants/check_leaks immediately, no teardown
+    RuntimeError."""
+    arch, params = models["dense"]
+    cfg = arch.config
+    eng = ServeEngine(arch, params, ServeConfig(
+        max_seq=32, batch_slots=2, block_tokens=4,
+        prefix_cache=prefix_cache))
+    prompts = _prompts(cfg, 4, 8)
+    reqs = [eng.submit(p, 8) for p in prompts]
+    for _ in range(3):  # 2 active mid-decode, 2 still queued
+        eng.step()
+    assert eng.scheduler.n_active == 2 and len(eng.scheduler.queue) == 2
+    aborted = eng.scheduler.abort()
+    assert len(aborted) == 4
+    assert all(r.status == "aborted" and r.error for r in reqs)
+    assert eng.scheduler.n_active == 0 and not eng.scheduler.queue
+    eng.pool.check_invariants()
+    if not prefix_cache:
+        eng.pool.check_leaks()  # cached-idle blocks are intentional
+    else:
+        # cached blocks are refcount-0 by design; everything else is free
+        pc = eng.prefix_cache
+        cached = set(pc._blocks)
+        free = set(eng.pool.free)
+        assert not (cached & free)
+        assert cached | free == set(range(1, eng.pool.n_blocks))
+    # the scheduler still serves after the abort
+    r = eng.submit(prompts[0], 3)
+    eng.drain()
+    assert r.status == "done" and len(r.tokens) == 3
+
+
+def test_abort_releases_shared_prefix_refs(models):
+    """Abort while two slots share cached prefix blocks: shared refcounts
+    drop back to cache-only and the free list reconciles."""
+    arch, params = models["dense"]
+    cfg = arch.config
+    eng = ServeEngine(arch, params, ServeConfig(
+        max_seq=32, batch_slots=2, block_tokens=4, prefix_cache=True))
+    common = _prompts(cfg, 1, 8)[0]
+    rng = np.random.default_rng(3)
+    p1 = np.concatenate([common, rng.integers(0, cfg.vocab, 4).astype(np.int32)])
+    p2 = np.concatenate([common, rng.integers(0, cfg.vocab, 4).astype(np.int32)])
+    warm = eng.submit(common, 2)
+    eng.drain()
+    assert warm.status == "done"
+    eng.submit(p1, 8)
+    eng.submit(p2, 8)
+    eng.step()
+    assert eng.scheduler.blocks_shared > 0, "prefix must actually be shared"
+    eng.scheduler.abort()
+    eng.pool.check_invariants()
+    pc = eng.prefix_cache
+    for blk in pc._blocks:
+        assert eng.pool.refcount[blk] == 0  # cache-only residency again
